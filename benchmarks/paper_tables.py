@@ -1,0 +1,217 @@
+"""Reproductions of the paper's tables/figures via the schedule simulator.
+
+One function per paper artifact; each returns a list of CSV rows
+(name, us_per_call, derived) per the harness contract, plus prints a
+human-readable table. The cost model mirrors the paper's testbed (A800,
+NVLink intra-node + IB inter-node) at a 50% GEMM MFU assumption.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import analysis
+from repro.core.autogen import autogen
+from repro.core.generators import SchedParams, generate
+from repro.core.simulator import (
+    A800,
+    CostModel,
+    TPU_V5E,
+    cost_model_for,
+    simulate,
+)
+from repro.models import model as M
+
+
+def _gpt_cost(size: str, *, P: int, V: int, dp: int, seq: int = 1024,
+              mbs: int = 1, split: bool, remat: bool = False,
+              cross_node_dp: bool = False, hw=A800):
+    """Cost model matching the paper's setting: no activation
+    recomputation (their Table 2 memory model), A800 GEMM rates."""
+    cfg = M.get_arch("gpt_paper").config(size)
+    d, L = cfg.d_model, cfg.n_layers
+    layer_flops = 2 * (12 * d * d) * seq * mbs + 2 * seq * seq * d * mbs
+    act_bytes = seq * mbs * d * 2
+    layers_per_stage = L / (P * V)
+    stage_param_bytes = 12 * d * d * layers_per_stage * 2
+    cm = cost_model_for(
+        hw, layer_flops_f=layer_flops, layers_per_stage=layers_per_stage,
+        act_bytes=act_bytes, stage_param_bytes=stage_param_bytes, dp=dp,
+        remat=remat, cross_node_dp=cross_node_dp)
+    # full per-layer activation footprint (no remat): ~60×seq×d bytes
+    # covers hidden states, attention internals and fp32 softmax temps —
+    # calibrated so GPipe's 1.5B/B=32 lands near the paper's 53 GB.
+    m_act_layer = 60 * seq * mbs * d * 2
+    cm = CostModel(
+        t_f=cm.t_f,
+        t_b=cm.t_b if split else cm.t_b + cm.t_w,
+        t_w=cm.t_w if split else 0.0,
+        t_p2p=cm.t_p2p, t_gather=cm.t_gather, t_reduce=cm.t_reduce,
+        m_act=m_act_layer * layers_per_stage,
+        m_wstash=(2 * act_bytes * layers_per_stage) if split else 0.0,
+        m_weight=cm.m_weight,
+    )
+    return cfg, cm
+
+
+def _ddp_allreduce_s(size: str, hw=A800, cross=False) -> float:
+    """Full-gradient ring all-reduce each step (DDP baselines)."""
+    cfg = M.get_arch("gpt_paper").config(size)
+    d, L = cfg.d_model, cfg.n_layers
+    grad_bytes = 12 * d * d * L * 2
+    bw = hw.link_bw if cross else hw.intra_bw
+    return 2 * grad_bytes / bw
+
+
+METHODS = [
+    # (label, method, V, split_bw, fsdp)
+    ("GPipe", "gpipe", 1, False, False),
+    ("1F1B", "1f1b", 1, False, False),
+    ("Interleaved 1F1B", "interleaved", 2, False, False),
+    ("FS-BFSPP", "bfs", 2, False, True),
+    ("ZeroPP-Best", "zeropp", 2, True, True),
+    ("ZeroPP-S", "zeropp", 2, True, True),
+]
+
+
+def table3(sizes=("1.5B", "6.2B", "14.6B"), micro=(8, 16, 32), P=4, dp=4):
+    """Paper Table 3: samples/GPU/s + peak memory across methods."""
+    rows = []
+    print(f"\n=== Table 3 reproduction (P={P}, DP={dp}, A800 cost model) ===")
+    print(f"{'model':7s} {'B':>3s} " + "".join(f"{m[0]:>18s}" for m in METHODS))
+    for size in sizes:
+        for B in micro:
+            line = f"{size:7s} {B:3d} "
+            for label, method, V, split, fsdp in METHODS:
+                cfg, cm = _gpt_cost(size, P=P, V=V, dp=dp, split=split)
+                if label == "ZeroPP-Best":
+                    # best U that still fits in HBM (paper semantics)
+                    best = r2 = None
+                    for U in sorted({B, 16, 8, 4}, reverse=True):
+                        if U > B:
+                            continue
+                        tt = generate(method, SchedParams(
+                            P=P, V=V, n_mb=B, split_bw=split, unit=U))
+                        r2 = simulate(tt, cm)
+                        if r2.peak_mem / 1e9 <= 80.0 and (
+                                best is None
+                                or r2.makespan < best.makespan):
+                            best = r2
+                    res = best or r2
+                else:
+                    U = min(B, 8)
+                    sp = SchedParams(P=P, V=V, n_mb=B, split_bw=split,
+                                     unit=U if method == "zeropp" else B)
+                    tt = generate(method, sp)
+                    if not fsdp:
+                        tt.gather = None
+                        tt.reduce = None
+                    res = simulate(tt, cm)
+                makespan = res.makespan
+                # DDP baselines pay a full-gradient allreduce at step end
+                if not fsdp:
+                    makespan += _ddp_allreduce_s(size)
+                # samples/iter = dp·B over dp·P GPUs
+                thpt_gpu = B / (makespan * P)
+                mem_gb = res.peak_mem / 1e9
+                oom = mem_gb > 80.0
+                rows.append((f"table3/{size}/B{B}/{label}",
+                             makespan * 1e6 / B,
+                             f"thpt={thpt_gpu:.3f}sps mem={mem_gb:.1f}GB"
+                             + (" OOM" if oom else "")))
+                cell = "OOM" if oom else f"{thpt_gpu:6.3f}/{mem_gb:5.1f}G"
+                line += f"   {cell:>15s}"
+            print(line)
+    return rows
+
+
+def table5_fig5(size="6.2B", B=32, P=4, V=2, dp=4):
+    """Fig 5 / Table 5: scheduling-unit size U trade-off."""
+    rows = []
+    print(f"\n=== Fig 5 (U sweep, {size}, B={B}) ===")
+    for U in (2, 4, 7, 8, 16, 32):
+        cfg, cm = _gpt_cost(size, P=P, V=V, dp=dp, split=True)
+        tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
+        res = simulate(tt, cm)
+        print(f"  U={U:3d}  makespan={res.makespan:8.4f}s "
+              f"bubble={res.bubble_frac:.3f} mem={res.peak_mem / 1e9:6.2f}GB"
+              f" gathers={res.n_gather}")
+        rows.append((f"fig5/U{U}", res.makespan * 1e6,
+                     f"bubble={res.bubble_frac:.3f}"
+                     f" mem={res.peak_mem / 1e9:.2f}GB"))
+    return rows
+
+
+def fig6(size="14.6B", B=16, P=4, dp=4):
+    """Fig 6: interleaved stages per device V."""
+    rows = []
+    print(f"\n=== Fig 6 (V sweep, {size}) ===")
+    for V in (1, 2, 3, 4):
+        cfg, cm = _gpt_cost(size, P=P, V=V, dp=dp, split=True)
+        tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=B))
+        res = simulate(tt, cm)
+        print(f"  V={V}  makespan={res.makespan:8.4f}s "
+              f"bubble={res.bubble_frac:.3f} "
+              f"gathers/unit={res.n_gather}")
+        rows.append((f"fig6/V{V}", res.makespan * 1e6,
+                     f"bubble={res.bubble_frac:.3f}"))
+    return rows
+
+
+def fig7(size="6.2B", global_samples=64, P=4):
+    """Fig 7: FSDP size and cross-node sharding."""
+    rows = []
+    print(f"\n=== Fig 7 (FSDP size sweep, {size}, {global_samples} samples"
+          " global) ===")
+    for dp, cross in ((2, False), (4, False), (8, True), (16, True)):
+        B = max(global_samples // dp, 1)
+        cfg, cm = _gpt_cost(size, P=P, V=2, dp=dp, split=True,
+                            cross_node_dp=cross)
+        tt = generate("zeropp", SchedParams(P=P, V=2, n_mb=B,
+                                            unit=min(B, 2 * P - 1)))
+        res = simulate(tt, cm)
+        thpt = global_samples / res.makespan / (P * dp)
+        print(f"  DP={dp:3d} cross_node={str(cross):5s} "
+              f"makespan={res.makespan:8.4f}s "
+              f"samples/gpu/s={thpt:7.3f}")
+        rows.append((f"fig7/dp{dp}", res.makespan * 1e6,
+                     f"sps_gpu={thpt:.3f} cross={cross}"))
+    return rows
+
+
+def table2(P=4, V=2, B=16, D=4, L=32):
+    """Table 2: closed forms vs simulator-measured quantities."""
+    rows = []
+    print(f"\n=== Table 2 (closed forms, P={P} V={V} B={B} D={D} L={L}) ===")
+    print(f"{'method':14s} {'bubbles':>9s} {'weight':>8s} {'act':>8s} "
+          f"{'#comm':>8s}")
+    for m in ("gpipe", "1f1b", "fs-1f1b", "interleaved", "bfs", "fs-bfs",
+              "zeropp", "fs-zeropp"):
+        a = analysis.analyze(m, L=L, P=P, V=V if "1f1b" != m and
+                             m != "gpipe" else 1, B=B, U=2 * P - 1, D=D)
+        print(f"{m:14s} {a.bubble_units:9.2f} {a.weight_mem:8.2f} "
+              f"{a.act_mem:8.2f} {a.n_param_comm:8.2f}")
+        rows.append((f"table2/{m}", 0.0,
+                     f"bub={a.bubble_units:.2f} wmem={a.weight_mem:.2f} "
+                     f"amem={a.act_mem:.2f} comm={a.n_param_comm:.2f}"))
+    return rows
+
+
+def autogen_bench(P=4, V=2, B=8):
+    """§4 heuristic vs greedy W-fill."""
+    rows = []
+    cfg, cm = _gpt_cost("6.2B", P=P, V=V, dp=4, split=True)
+    res = autogen(SchedParams(P=P, V=V, n_mb=B), cm)
+    greedy = simulate(generate("zeropp", SchedParams(P=P, V=V, n_mb=B)), cm)
+    print(f"\n=== §4 auto-generation (P={P} V={V} B={B}) ===")
+    print(f"  postponed-W start: {res.makespan_before:.4f}s")
+    print(f"  after heuristic:   {res.makespan_after:.4f}s "
+          f"({res.n_insertions} insertions)")
+    print(f"  greedy W-fill:     {greedy.makespan:.4f}s")
+    rows.append(("autogen/before", res.makespan_before * 1e6, ""))
+    rows.append(("autogen/after", res.makespan_after * 1e6,
+                 f"insertions={res.n_insertions}"))
+    rows.append(("autogen/greedy", greedy.makespan * 1e6, ""))
+    return rows

@@ -1,0 +1,90 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) after the
+human-readable tables. Roofline terms for the dry-run cells live in
+results/dryrun_* (produced by repro.launch.dryrun) and are summarized by
+benchmarks/summarize.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_tables as T
+
+    rows = []
+    rows += T.table2()
+    rows += T.table3()
+    rows += T.table5_fig5()
+    rows += T.fig6()
+    rows += T.fig7()
+    rows += T.autogen_bench()
+    rows += kernel_bench()
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+def kernel_bench():
+    """Pallas kernels: CPU-interpret timing is meaningless for TPU perf —
+    report oracle (ref) wall time per call and kernel flop accounting."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    rows = []
+    print("\n=== kernels (ref-path CPU timing + flop accounting) ===")
+    b, s, h, g, e = 1, 1024, 8, 4, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, e), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, g, e), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, g, e), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+    f(q, k, v).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f(q, k, v).block_until_ready()
+    dt = (time.time() - t0) / 3
+    flops = 4 * s * s * h * e * b / 2
+    rows.append(("kernel/flash_attention_ref", dt * 1e6,
+                 f"flops={flops:.3e}"))
+    print(f"  attention b{b} s{s} h{h}: {dt * 1e3:.1f} ms/call "
+          f"({flops / dt / 1e9:.1f} GFLOP/s CPU)")
+
+    d, n = 512, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, d))
+    dt_in = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                              (b, s, d)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (d, n)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
+    D = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    f2 = jax.jit(lambda *a: ref.selective_scan(*a))
+    f2(x, dt_in, A, B, C, D).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f2(x, dt_in, A, B, C, D).block_until_ready()
+    dt = (time.time() - t0) / 3
+    rows.append(("kernel/selective_scan_ref", dt * 1e6, f"d={d} n={n}"))
+    print(f"  selective_scan s{s} d{d}: {dt * 1e3:.1f} ms/call")
+
+    nn, dd, vv = 2048, 512, 32000
+    hh = jax.random.normal(jax.random.PRNGKey(0), (nn, dd)) * 0.3
+    ww = jax.random.normal(jax.random.PRNGKey(1), (dd, vv)) * 0.05
+    lab = jax.random.randint(jax.random.PRNGKey(2), (nn,), 0, vv)
+    f3 = jax.jit(lambda *a: ref.softmax_xent(*a)[0])
+    f3(hh, ww, lab).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f3(hh, ww, lab).block_until_ready()
+    dt = (time.time() - t0) / 3
+    rows.append(("kernel/fused_xent_ref", dt * 1e6, f"vocab={vv}"))
+    print(f"  fused_xent n{nn} vocab{vv}: {dt * 1e3:.1f} ms/call")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

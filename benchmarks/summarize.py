@@ -1,0 +1,115 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ARCH_ORDER = [
+    "whisper-large-v3", "qwen2-moe-a2.7b", "deepseek-v3-671b",
+    "jamba-v0.1-52b", "phi-3-vision-4.2b", "minitron-4b", "yi-9b",
+    "phi4-mini-3.8b", "llama3.2-1b", "xlstm-1.3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath):
+    cells = {}
+    for fn in os.listdir(dirpath):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dirpath, fn)) as f:
+            rec = json.load(f)
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.1f}G"
+
+
+def dominant_frac(r):
+    tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    # "roofline fraction": ideal-bound time / modeled total time
+    return dom / max(tot, 1e-12)
+
+
+def roofline_frac(r):
+    """Fraction of the step spent at the binding roof if terms overlap
+    perfectly: max(terms)/sum(terms) -> 1.0 means fully bound by one roof
+    (no slack); we also report useful_ratio (model flops / executed)."""
+    return dominant_frac(r)
+
+
+def lever(arch, shape, r):
+    b = r["bottleneck"]
+    if b == "compute":
+        if r["useful_ratio"] < 0.72 and shape == "train_4k":
+            return ("selective remat (skip re-forward of cheap ops) lifts "
+                    "MODEL/HLO toward 0.75+")
+        return "larger micro-batch / fuse attention into the Pallas kernel"
+    if b == "memory":
+        if "decode" in shape or shape == "long_500k":
+            return ("KV-cache reads bound decode: quantize cache to int8 "
+                    "or widen batch to amortize")
+        return "smaller scheduling unit U / bf16 grad accumulators"
+    if b == "collective":
+        if "decode" in shape or "prefill" in shape:
+            return ("weight-resident serving removes per-step FSDP "
+                    "gathers (§Perf cell 2)")
+        return ("larger U (fewer gathers/unit), bf16 grad reduce-scatter, "
+                "gather prefetch overlap")
+    return "-"
+
+
+def table(cells, mesh_name):
+    lines = []
+    hdr = (f"| arch | shape | bytes/dev | compute s | memory s | coll s | "
+           f"bound | MODEL/HLO | frac | lever to move the dominant term |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 10)
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rec = cells.get((a, s))
+            if rec is None:
+                continue
+            if rec.get("status", "").startswith("skipped"):
+                lines.append(f"| {a} | {s} | — | — | — | — | skipped "
+                             f"(full attention) | — | — |")
+                continue
+            r = rec["roofline"]
+            mem = rec["memory_analysis"]["bytes_per_device"]
+            eff_frac = r["compute_s"] / max(
+                r["compute_s"] + r["memory_s"] + r["collective_s"], 1e-12)
+            lines.append(
+                f"| {a} | {s} | {fmt_bytes(mem)} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+                f"{eff_frac:.2f} | {lever(a, s, r)} |")
+    return "\n".join(lines)
+
+
+def main():
+    sp = load("results/dryrun_sp")
+    print(f"single-pod cells: {len(sp)}")
+    print(table(sp, "16x16"))
+    if os.path.isdir("results/dryrun_mp"):
+        mp = load("results/dryrun_mp")
+        ok = sum(1 for r in mp.values() if r.get("status") == "ok")
+        sk = sum(1 for r in mp.values()
+                 if str(r.get("status", "")).startswith("skipped"))
+        print(f"\nmulti-pod (2×16×16): {ok} compiled OK + {sk} documented "
+              f"skips = {ok + sk}/{len(mp)}")
+    # compile-time stats
+    ts = [r["compile_s"] for r in sp.values() if "compile_s" in r]
+    if ts:
+        print(f"\ncompile times: min {min(ts):.1f}s max {max(ts):.1f}s "
+              f"mean {sum(ts) / len(ts):.1f}s")
+
+
+if __name__ == "__main__":
+    main()

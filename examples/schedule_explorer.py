@@ -1,0 +1,35 @@
+"""Visualize ZeroPP vs baseline schedules and the §4 auto-generator.
+
+    PYTHONPATH=src python examples/schedule_explorer.py [P] [V] [B] [U]
+"""
+
+import sys
+
+from repro.core.autogen import autogen
+from repro.core.generators import SchedParams, generate
+from repro.core.simulator import CostModel, simulate
+
+P, V, B, U = (int(x) for x in (sys.argv[1:] + [4, 3, 7, 7][len(sys.argv) - 1:]))
+
+print(f"=== ZeroPP (paper Fig. 2 setting: P={P} V={V} B={B} U={U}) ===")
+tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
+tt.validate()
+print(tt.render())
+print(f"tick-bubbles: {tt.bubble_ratio():.3f}   "
+      f"gathers/rank: {(tt.gather >= 0).sum() / tt.P:.0f} (2V-1 per unit)")
+
+cm = CostModel(t_f=1, t_b=2, t_w=1, t_p2p=0.02, t_gather=0.3, t_reduce=0.3)
+for m, split in (("gpipe", False), ("1f1b", False), ("interleaved", False),
+                 ("bfs", False), ("zeropp", True)):
+    cmx = cm if split else CostModel(t_f=1, t_b=3, t_w=0, t_p2p=0.02,
+                                     t_gather=0.3, t_reduce=0.3)
+    r = simulate(generate(m, SchedParams(P=P, V=V, n_mb=B,
+                                         split_bw=split)), cmx)
+    print(f"{m:12s} makespan={r.makespan:7.2f} bubble={r.bubble_frac:.3f} "
+          f"peak_mem={r.peak_mem:.1f}")
+
+print("\n=== §4 heuristic auto-generation ===")
+res = autogen(SchedParams(P=P, V=min(V, 2), n_mb=B), cm)
+print("\n".join(res.log[:6] + ["..."] + res.log[-2:]))
+print(f"makespan {res.makespan_before:.2f} -> {res.makespan_after:.2f} "
+      f"with {res.n_insertions} W insertions")

@@ -1,0 +1,20 @@
+"""Batched pipelined serving demo: prefill a prompt batch, then greedy
+decode with per-stage KV caches flowing through the pipeline.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("SPMD_DEVICES", "8")
+
+import sys  # noqa: E402
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--arch", "llama3.2-1b", "--batch", "8",
+                "--prompt", "12", "--gen", "6", "--data", "2"]
+    serve.main()

@@ -1,0 +1,29 @@
+"""Train a width-reduced GPT (the paper's model family) for a few hundred
+steps with checkpoint/restart fault tolerance — the paper's end-to-end
+scenario at laptop scale.
+
+    PYTHONPATH=src python examples/train_gpt.py [--steps 200]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("SPMD_DEVICES", "8")
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+
+from repro.launch import train  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.argv = [
+        "train", "--arch", "gpt_paper", "--steps", str(args.steps),
+        "--data", "2", "--seq", "64", "--microbatches", "4",
+        "--unit", "2", "--lr", "3e-3",
+        "--ckpt-dir", "/tmp/repro_gpt_ckpt", "--ckpt-every", "50",
+    ]
+    train.main()

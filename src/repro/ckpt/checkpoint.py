@@ -1,0 +1,151 @@
+"""Sharded checkpointing with async save, keep-k GC and elastic resharding.
+
+Layout (one directory per step):
+    step_000123/
+      manifest.json      — tree structure, global shapes, mesh, data cursor
+      <leaf>.npy         — full (unsharded) array per pytree leaf
+
+On a real multi-host cluster each host writes only its local shards and the
+manifest records the shard layout; in this single-process container we
+device_get the addressable array (process-local = global). The *interface*
+(save/restore/reshard/keep-k/async) is the production surface; restore can
+re-layout to a different mesh ("elastic" D changes) because arrays are
+stored in their global logical layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        cur = tree
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return tree
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = True):
+        """Snapshot to host memory synchronously, write to disk (async
+        optional), atomic rename, GC old steps."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def write():
+            tmp = os.path.join(self.directory, f".tmp_step_{step:09d}")
+            final = os.path.join(self.directory, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            for k, v in host.items():
+                fn = k.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fn), v)
+            manifest = {
+                "step": step,
+                "keys": sorted(host),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+                "extra": extra or {},
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def list_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, shardings=None):
+        """Load a checkpoint; optionally device_put with new shardings
+        (elastic re-mesh: the target mesh may differ from the saved one)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for k in manifest["keys"]:
+            fn = k.replace("/", "__") + ".npy"
+            flat[k] = np.load(os.path.join(path, fn))
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, manifest
+
+    def verify(self, step: int) -> bool:
+        """Integrity check: manifest lists every file with right shape."""
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            for k in manifest["keys"]:
+                fn = k.replace("/", "__") + ".npy"
+                a = np.load(os.path.join(path, fn), mmap_mode="r")
+                if list(a.shape) != manifest["shapes"][k]:
+                    return False
+            return True
+        except Exception:
+            return False

@@ -1,0 +1,36 @@
+"""Shared helpers for architecture config modules.
+
+Each config module exports:
+  config()            -> ModelConfig (exact published hyper-parameters)
+  production_run(shape) -> RunConfig for the 256-chip production mesh
+  reduced()           -> (ModelConfig, RunConfig) tiny same-family smoke config
+"""
+
+from __future__ import annotations
+
+from repro.models.common import ModelConfig, RunConfig, SHAPES
+
+
+def make_run(
+    cfg: ModelConfig,
+    shape: str,
+    *,
+    pp: int = 16,
+    vpp: int = 2,
+    groups: int = 1,
+    microbatches: int | None = None,
+    unit: int = 0,
+    schedule: str = "zeropp",
+    moe_mode: str = "gathered",
+    **kw,
+) -> RunConfig:
+    sh = SHAPES[shape]
+    if microbatches is None:
+        # per-pipeline-group micro-batches for the production mesh:
+        # data axis = 16, model axis = groups*pp; micro-batch size 1.
+        per_dp = max(sh.global_batch // 16, 1)
+        microbatches = max(per_dp // groups, 1)
+    return RunConfig(
+        pp=pp, vpp=vpp, groups=groups, microbatches=microbatches,
+        unit=unit, schedule=schedule, moe_mode=moe_mode, **kw,
+    )

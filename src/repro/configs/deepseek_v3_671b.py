@@ -1,0 +1,46 @@
+"""deepseek-v3-671b — 61L d_model=7168 128H d_ff=2048 vocab=129280.
+
+[arXiv:2412.19437; hf] MLA (q_lora 1536, kv_lora 512, rope 64, v/nope head
+128), MoE 256 routed top-8 + 1 shared expert, MTP aux head.
+
+Deviations (DESIGN.md §4): the official first-3 dense layers (d_ff 18432)
+are modeled as MoE like the rest to keep stages statically uniform — the
+union-parameter alternative would add ~400M params to *every* stage.
+61 layers pad to 64 stages (3 masked pads, +4.7% stage params).
+Experts are expert-parallel over the data axis (an FSDP gather of an
+11 GB/layer expert bank is not deployable).
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import MLACfg, MoECfg, ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", n_layers=61, d_model=7168, n_heads=128,
+        n_kv_heads=128, d_ff=2048, vocab=129_280, d_head=128,
+        mla=MLACfg(q_lora=1536, kv_lora=512, rope_dims=64, v_head=128,
+                   qk_nope=128),
+        moe=MoECfg(n_experts=256, top_k=8, d_ff_expert=2048,
+                   n_shared=1, d_ff_shared=2048),
+        mtp=True,
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=16, vpp=4, moe_mode="ep")
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="deepseek-v3-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=256, d_head=16,
+        mla=MLACfg(q_lora=32, kv_lora=16, rope_dims=8, v_head=16,
+                   qk_nope=16),
+        moe=MoECfg(capacity_factor=8.0, n_experts=8, top_k=2, d_ff_expert=64, n_shared=1,
+                   d_ff_shared=64),
+        mtp=True,
+    )
+    rc = RunConfig(pp=2, vpp=2, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

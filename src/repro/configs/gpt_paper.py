@@ -1,0 +1,44 @@
+"""The paper's GPT models (Table 4): 1.5B / 6.2B / 14.6B, seq 1024.
+
+Used by the Table-3/5 and Fig-5/6/7 benchmark reproductions (simulator cost
+model) and by the end-to-end training example at reduced width.
+"""
+
+from repro.models.common import ModelConfig, RunConfig
+
+SIZES = {
+    "1.5B": dict(n_layers=22, n_heads=24, d_model=2304),
+    "6.2B": dict(n_layers=30, n_heads=32, d_model=4096),
+    "14.6B": dict(n_layers=46, n_heads=40, d_model=5120),
+}
+
+
+def config(size: str = "1.5B") -> ModelConfig:
+    s = SIZES[size]
+    return ModelConfig(
+        name=f"gpt-{size}", n_layers=s["n_layers"], d_model=s["d_model"],
+        n_heads=s["n_heads"], n_kv_heads=s["n_heads"],
+        d_ff=4 * s["d_model"], vocab=50304,
+        norm="layernorm", act="gelu_mlp", max_seq=1024,
+    )
+
+
+def paper_run(n_micro: int = 8, unit: int = 0, schedule="zeropp") -> RunConfig:
+    """The paper's setup: PP=4, DP(FSDP)=4 per node group."""
+    return RunConfig(pp=4, vpp=2, microbatches=n_micro, unit=unit,
+                     schedule=schedule)
+
+
+def production_run(shape: str) -> RunConfig:
+    from repro.configs._base import make_run
+    return make_run(config("6.2B"), shape, pp=16, vpp=2)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="gpt-smoke", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=256, d_head=16, norm="layernorm", act="gelu_mlp",
+    )
+    rc = RunConfig(pp=2, vpp=2, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

@@ -1,0 +1,41 @@
+"""jamba-v0.1-52b — 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.
+
+[arXiv:2403.19887; hf] Mamba+attention 1:7 interleave (attention at layer
+index 4 of each period-8 block), MoE 16e top-2 on odd layers.
+
+Geometry: period-8 layer pattern requires 8 | layers-per-stage, so we run
+4 pipeline groups of P=4 with one full period per stage (k=8, V=1) — all
+layer kinds static, zero parameter union (DESIGN.md §4). Experts are
+expert-parallel over the data axis.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import MambaCfg, MoECfg, ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, d_ff=14336, vocab=65536, d_head=128,
+        mamba=MambaCfg(d_state=16, d_conv=4, expand=2),
+        attn_every=8, attn_offset=4,
+        moe=MoECfg(n_experts=16, top_k=2, d_ff_expert=14336, every=2,
+                   offset=1),
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=4, vpp=1, groups=4, moe_mode="ep")
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="jamba-smoke", n_layers=8, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256, d_head=16,
+        mamba=MambaCfg(d_state=4, d_conv=4, expand=2),
+        attn_every=8, attn_offset=4,
+        moe=MoECfg(capacity_factor=8.0, n_experts=4, top_k=2, d_ff_expert=128, every=2, offset=1),
+    )
+    rc = RunConfig(pp=1, vpp=1, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

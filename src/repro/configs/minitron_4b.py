@@ -1,0 +1,28 @@
+"""minitron-4b — 32L d_model=3072 24H (GQA kv=8) d_ff=9216 vocab=256000.
+
+[arXiv:2407.14679; hf] Width/depth-pruned Nemotron; GQA, SwiGLU, huge vocab.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-4b", n_layers=32, d_model=3072, n_heads=24,
+        n_kv_heads=8, d_ff=9216, vocab=256_000, d_head=128,
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=16, vpp=2)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="minitron-4b-smoke", n_layers=4, d_model=48, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab=512, d_head=12,
+    )
+    rc = RunConfig(pp=2, vpp=2, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b — 32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064.
+
+[hf:microsoft/Phi-3-vision-128k-instruct; hf] phi3-mini backbone + CLIP
+frontend.  Per the brief, the vision tower is a STUB: ``input_specs``
+provides precomputed patch embeddings concatenated into the token stream.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b", n_layers=32, d_model=3072, n_heads=32,
+        n_kv_heads=32, d_ff=8192, vocab=32064, d_head=96,
+        frontend="vision",
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=16, vpp=2)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="phi3v-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=256, d_head=16, frontend="vision",
+    )
+    rc = RunConfig(pp=2, vpp=2, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

@@ -1,0 +1,37 @@
+"""qwen2-moe-a2.7b — 24L d_model=2048 16H d_ff=1408 vocab=151936, 60e top-4.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf] 4 shared experts (shared intermediate 5632)
++ 60 routed experts top-4, every layer MoE.
+
+Geometry: 24 layers do not divide the 16-rank model axis; we run 2 pipeline
+groups of P=8 (V=3, one layer per stage) — zero padding (DESIGN.md §4).
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import MoECfg, ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=16, d_ff=1408, vocab=151_936, d_head=128,
+        moe=MoECfg(n_experts=60, top_k=4, d_ff_expert=1408,
+                   n_shared=4, d_ff_shared=5632),
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=8, vpp=3, groups=2,
+                    moe_mode="gathered")
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="qwen2-moe-smoke", n_layers=3, d_model=48, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=256, d_head=12,
+        moe=MoECfg(capacity_factor=8.0, n_experts=8, top_k=2, d_ff_expert=64,
+                   n_shared=1, d_ff_shared=96),
+    )
+    rc = RunConfig(pp=3, vpp=1, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

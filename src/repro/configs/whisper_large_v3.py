@@ -1,0 +1,38 @@
+"""whisper-large-v3 — enc-dec 32+32L d_model=1280 20H d_ff=5120 vocab=51866.
+
+[arXiv:2212.04356; unverified] Encoder-decoder; LayerNorm + GELU MLP;
+bidirectional encoder over 1500 audio frames, causal decoder with
+cross-attention.  The conv frontend is a STUB per the brief:
+``input_specs`` provides precomputed frame embeddings [b, 1500, d].
+
+Geometry: two pipeline segments (enc then dec), each 32 stages = P16 × V2.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import EncDecCfg, ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", n_layers=32, d_model=1280, n_heads=20,
+        n_kv_heads=20, d_ff=5120, vocab=51866, d_head=64,
+        norm="layernorm", act="gelu_mlp",
+        encdec=EncDecCfg(enc_layers=32, enc_ctx=1500),
+        frontend="audio",
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=16, vpp=2)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="whisper-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=256, d_head=16,
+        norm="layernorm", act="gelu_mlp",
+        encdec=EncDecCfg(enc_layers=2, enc_ctx=16), frontend="audio",
+    )
+    rc = RunConfig(pp=2, vpp=1, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

@@ -1,0 +1,36 @@
+"""xlstm-1.3b — 48L d_model=2048 4H d_ff=0 vocab=50304, sLSTM + mLSTM.
+
+[arXiv:2405.04517; unverified] Post-up-projection mLSTM blocks (factor 2)
+with sLSTM blocks interleaved; d_ff=0 → no separate FFN.
+
+Deviation (DESIGN.md §4): the paper's xLSTM[7:1] ratio needs period 8,
+which does not divide any feasible layers-per-stage for 48 layers; we use
+slstm_every=6 (5 mLSTM : 1 sLSTM) with 2 pipeline groups of P=8 (k=6, V=1)
+so every layer kind is static per slot.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import ModelConfig, RunConfig, XLSTMCfg
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b", n_layers=48, d_model=2048, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab=50304, d_head=512,
+        xlstm=XLSTMCfg(slstm_every=6, proj_factor=2.0),
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=8, vpp=1, groups=2)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="xlstm-smoke", n_layers=6, d_model=64, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab=256, d_head=32,
+        xlstm=XLSTMCfg(slstm_every=6, proj_factor=2.0),
+    )
+    rc = RunConfig(pp=1, vpp=1, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

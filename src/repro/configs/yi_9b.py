@@ -1,0 +1,29 @@
+"""yi-9b — 48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+
+[arXiv:2403.04652; hf] llama-architecture GQA dense decoder.
+"""
+
+from repro.configs._base import make_run
+from repro.models.common import ModelConfig, RunConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b", n_layers=48, d_model=4096, n_heads=32,
+        n_kv_heads=4, d_ff=11008, vocab=64000, d_head=128,
+        rope_theta=5_000_000.0,
+    )
+
+
+def production_run(shape: str) -> RunConfig:
+    return make_run(config(), shape, pp=16, vpp=3)
+
+
+def reduced():
+    cfg = ModelConfig(
+        name="yi-9b-smoke", n_layers=6, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=160, vocab=256, d_head=16,
+    )
+    rc = RunConfig(pp=2, vpp=3, microbatches=2, param_dtype="float32",
+                   compute_dtype="float32")
+    return cfg, rc

@@ -1,0 +1,186 @@
+"""§4 heuristic schedule auto-generation.
+
+Faithful reproduction of the paper's algorithm:
+
+1. Schedule the F and B passes gradient-fast-propagation style and postpone
+   all W passes to the end (``w_fill="postpone"``).
+2. Simulate ("profile the actual timeline" — we profile with the cost
+   model instead of CUDA events; the container has no accelerator).
+3. Find the PP rank with the longest schedule, then the interleaved stage
+   within that rank with the largest total bubble; insert a postponed W of
+   that same stage (whose B is already complete and whose F precedes the
+   bubble) into the largest such bubble.
+4. Repeat — the longest rank may shift — until no insertion shortens the
+   makespan.
+
+The result is expressed as per-rank task orders and re-quantized into a
+TickTable so it can be executed by the SPMD runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.generators import SchedParams, attach_fsdp_events, generate
+from repro.core.schedules import B, F, NOP, W, Task, TickTable, slot_of
+from repro.core.simulator import CostModel, SimResult, simulate
+
+
+def orders_from_table(tt: TickTable) -> list[list[Task]]:
+    orders: list[list[Task]] = [[] for _ in range(tt.P)]
+    for t, r, task in tt.tasks():
+        orders[r].append(task)
+    return orders
+
+
+def retick(orders: list[list[Task]], P: int, V: int, n_mb: int,
+           unit: int, assume_f: bool = False) -> TickTable:
+    """Quantize per-rank orders into the densest valid tick table.
+
+    assume_f: treat all F tasks as already done (encoder-backward tables,
+    whose forwards ran in a previous segment scan).
+    """
+    S = P * V
+    pos = [0] * P
+    placed: dict[tuple, int] = {}
+    if assume_f:
+        for u in range(n_mb):
+            for s in range(S):
+                placed[(F, u, s)] = -1
+    grid: list[list[Task | None]] = []
+    total = sum(len(o) for o in orders)
+    done = 0
+    t = 0
+    while done < total and t < total * 3 + 64:
+        row: list[Task | None] = [None] * P
+        for r in range(P):
+            if pos[r] >= len(orders[r]):
+                continue
+            task = orders[r][pos[r]]
+            deps = []
+            if task.kind == F and task.stage > 0:
+                deps.append((F, task.mb, task.stage - 1))
+            if task.kind == B:
+                deps.append((F, task.mb, task.stage))
+                if task.stage < S - 1:
+                    deps.append((B, task.mb, task.stage + 1))
+            if task.kind == W:
+                deps.append((B, task.mb, task.stage))
+            if all(d in placed and placed[d] < t for d in deps):
+                row[r] = task
+        for r in range(P):
+            if row[r] is not None:
+                placed[(row[r].kind, row[r].mb, row[r].stage)] = t
+                pos[r] += 1
+                done += 1
+        grid.append(row)
+        t += 1
+    if done < total:
+        raise RuntimeError("retick failed: invalid order")
+    tt = TickTable(P=P, V=V, n_mb=n_mb, unit=unit, grid=grid)
+    attach_fsdp_events(tt)
+    return tt
+
+
+@dataclasses.dataclass
+class AutogenResult:
+    table: TickTable
+    makespan_before: float
+    makespan_after: float
+    n_insertions: int
+    log: list[str]
+
+
+def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
+            ) -> AutogenResult:
+    """Run the §4 loop starting from the postponed-W fast-propagation
+    schedule."""
+    base = generate("zeropp_postpone", sp) if False else _postponed(sp)
+    orders = orders_from_table(base)
+    P, V = sp.P, sp.V
+    tt = retick(orders, P, V, sp.n_mb, sp.U)
+    res = simulate(tt, cm)
+    t0 = res.makespan
+    log = [f"init makespan {t0:.3f}"]
+    n_ins = 0
+
+    for it in range(max_iters):
+        res = simulate(tt, cm)
+        # rank with the longest schedule
+        last_end = np.zeros(P)
+        for (k, u, s), e in res.task_end.items():
+            last_end[s % P] = max(last_end[s % P], e)
+        r_star = int(np.argmax(last_end))
+        order = orders[r_star]
+        # bubbles on r_star: gaps between consecutive tasks
+        gaps = []  # (size, after_index, gap_start)
+        for i in range(len(order) - 1):
+            a = (order[i].kind, order[i].mb, order[i].stage)
+            b2 = (order[i + 1].kind, order[i + 1].mb, order[i + 1].stage)
+            gap = res.task_start[b2] - res.task_end[a]
+            if gap > 1e-9:
+                gaps.append((gap, i, res.task_end[a]))
+        if not gaps:
+            log.append(f"iter {it}: no bubbles on longest rank r{r_star}")
+            break
+        # group bubbles by the interleaved stage of the *preceding* task
+        by_v: dict[int, float] = {}
+        for gap, i, _ in gaps:
+            v = slot_of(order[i].stage, P)
+            by_v[v] = by_v.get(v, 0.0) + gap
+        v_star = max(by_v, key=by_v.get)
+        cands = [(g, i, gs) for (g, i, gs) in gaps
+                 if slot_of(order[i].stage, P) == v_star]
+        cands.sort(reverse=True)
+        inserted = False
+        for gap, i, gap_start in cands:
+            # find a postponed W of stage slot v_star on r_star whose B is
+            # done before the gap and which currently sits *after* i.
+            for j in range(len(order) - 1, i, -1):
+                tsk = order[j]
+                if tsk.kind != W or slot_of(tsk.stage, P) != v_star:
+                    continue
+                bkey = (B, tsk.mb, tsk.stage)
+                if bkey not in res.task_end or res.task_end[bkey] > gap_start:
+                    continue
+                cand = order[: i + 1] + [tsk] + [
+                    o for idx2, o in enumerate(order) if idx2 > i and idx2 != j
+                ]
+                trial_orders = [list(o) for o in orders]
+                trial_orders[r_star] = cand
+                try:
+                    trial_tt = retick(trial_orders, P, V, sp.n_mb, sp.U)
+                except RuntimeError:
+                    continue
+                trial_res = simulate(trial_tt, cm)
+                if trial_res.makespan < res.makespan - 1e-12:
+                    orders = trial_orders
+                    tt = trial_tt
+                    n_ins += 1
+                    log.append(
+                        f"iter {it}: moved {tsk} into {gap:.3f} bubble on "
+                        f"r{r_star} v{v_star} -> {trial_res.makespan:.3f}"
+                    )
+                    inserted = True
+                break
+            if inserted:
+                break
+        if not inserted:
+            log.append(f"iter {it}: no W insertion improves r{r_star}")
+            break
+
+    final = simulate(tt, cm)
+    return AutogenResult(tt, t0, final.makespan, n_ins, log)
+
+
+def _postponed(sp: SchedParams) -> TickTable:
+    """F/B fast-propagation with all W postponed to the tail (§4 step 1)."""
+    tt = generate("zeropp", sp)
+    orders = orders_from_table(tt)
+    for r in range(len(orders)):
+        fb = [t for t in orders[r] if t.kind != W]
+        ws = [t for t in orders[r] if t.kind == W]
+        orders[r] = fb + ws
+    return retick(orders, sp.P, sp.V, sp.n_mb, sp.U)

@@ -1,0 +1,154 @@
+"""FSDP layout + collectives for the ZeroPP runtime.
+
+Parameter layout (DESIGN.md §4):
+  * stage params are stacked ``[M·V, ...]`` where M = model-axis ranks
+    (= groups × pp); stacked index ``mr·V + v`` holds the params of logical
+    stage ``v·pp + (mr % pp)`` of pipeline group ``mr // pp`` — groups
+    duplicate stage params (grads are butterfly-reduced across groups).
+  * dim0 shards over "model"; each tensor additionally FSDP-shards over
+    "data" on ``spec.fsdp_dim`` when divisible (else replicated).
+  * EP params (``spec.ep`` and moe_mode=="ep") shard their expert dim over
+    "data" permanently and are never gathered.
+  * the "pod" axis always replicates parameters (hybrid-sharded DP, Zhao
+    et al.; §5.2 of the paper) — pods only all-reduce gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+DATA, MODEL, POD = "data", "model", "pod"
+
+
+# --------------------------------------------------------------------------- #
+# PartitionSpecs
+# --------------------------------------------------------------------------- #
+
+
+def stage_pspec(spec: ParamSpec, dsize: int, ep: bool) -> P:
+    """PartitionSpec for a stacked stage param [M·V, *shape]."""
+    dims: list = [MODEL] + [None] * len(spec.shape)
+    if spec.ep and ep:
+        dims[1] = DATA  # expert dim
+    elif spec.shape and spec.shape[spec.fsdp_dim] % dsize == 0 and (
+        spec.shape[spec.fsdp_dim] // dsize > 0
+    ):
+        dims[1 + spec.fsdp_dim] = DATA
+    return P(*dims)
+
+
+def io_pspec(spec: ParamSpec, dsize: int) -> P:
+    dims: list = [None] * len(spec.shape)
+    if spec.shape and spec.shape[spec.fsdp_dim] % dsize == 0:
+        dims[spec.fsdp_dim] = DATA
+    return P(*dims)
+
+
+def local_dim(spec: ParamSpec, dsize: int, ep: bool) -> int | None:
+    """Which (unstacked) dim is data-sharded locally, or None."""
+    if spec.ep and ep:
+        return 0
+    if spec.shape and spec.shape[spec.fsdp_dim] % dsize == 0:
+        return spec.fsdp_dim
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# Collectives (inside shard_map)
+# --------------------------------------------------------------------------- #
+
+
+def gather_param(x, spec: ParamSpec, dsize: int, ep: bool):
+    """All-gather one (already v-indexed) stage param over "data"."""
+    d = local_dim(spec, dsize, ep)
+    if d is None or (spec.ep and ep):
+        return x
+    return jax.lax.all_gather(x, DATA, axis=d, tiled=True)
+
+
+def reduce_scatter_grad(g, spec: ParamSpec, dsize: int, ep: bool,
+                        pod: bool = False):
+    """Reduce a full-size gradient back to the sharded layout (+pod psum)."""
+    d = local_dim(spec, dsize, ep)
+    if spec.ep and ep:
+        out = g  # expert grads are already local
+    elif d is None:
+        out = jax.lax.psum(g, DATA)
+    else:
+        out = jax.lax.psum_scatter(g, DATA, scatter_dimension=d, tiled=True)
+    if pod:
+        out = jax.lax.psum(out, POD)
+    return out
+
+
+def group_allreduce(x, groups: int, pp: int):
+    """Butterfly all-reduce across pipeline groups on the model axis.
+
+    Rank id = g·pp + p; partners differ in one bit of g. groups must be a
+    power of two (1, 2, 4 used here).
+    """
+    if groups == 1:
+        return x
+    n = groups * pp
+    step = 1
+    while step < groups:
+        pairs = [(r, (((r // pp) ^ step) * pp) + (r % pp)) for r in range(n)]
+        x = x + jax.lax.ppermute(x, MODEL, pairs)
+        step *= 2
+    return x
+
+
+def pipe_perm(pp: int, groups: int, direction: int):
+    """ppermute pairs for the intra-group stage ring (+1 fwd / −1 bwd)."""
+    pairs = []
+    for g in range(groups):
+        base = g * pp
+        for p in range(pp):
+            src = base + p
+            dst = base + (p + direction) % pp
+            pairs.append((src, dst))
+    return pairs
+
+
+# --------------------------------------------------------------------------- #
+# Optional int8 gradient compression with error feedback
+# --------------------------------------------------------------------------- #
+
+
+def reduce_scatter_grad_int8(g, err, spec: ParamSpec, dsize: int, ep: bool,
+                             pod: bool = False):
+    """int8 reduce path: shared-scale quantize → sum in int32 → dequantize.
+
+    Quarters (vs fp32) the reduce traffic; quantization noise is carried in
+    the per-tensor error-feedback buffer and re-injected next step
+    (Karimireddy et al. semantics). The scale is pmax-shared over "data" so
+    the integer sum is exact.
+    """
+    gf = g.astype(jnp.float32) + err
+    local_scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    d = local_dim(spec, dsize, ep)
+    if spec.ep and ep:
+        scale = local_scale
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        out = q * scale
+    else:
+        scale = jax.lax.pmax(local_scale, DATA)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        acc = q.astype(jnp.int32)
+        if d is None:
+            out = jax.lax.psum(acc, DATA).astype(jnp.float32) * scale
+        else:
+            out = jax.lax.psum_scatter(
+                acc, DATA, scatter_dimension=d, tiled=True
+            ).astype(jnp.float32) * scale
+    new_err = gf - q * scale
+    if pod:
+        out = jax.lax.psum(out, POD)
+    return out, new_err

@@ -1,0 +1,175 @@
+"""Schedule IR: typed tasks, per-rank tick tables, and validity checking.
+
+A schedule is materialized as a dense tick table ``[T, P]`` of
+``(kind, mb, v)`` cells plus per-tick FSDP communication events. The same
+table drives (a) the discrete-event simulator (with a real cost model) and
+(b) the SPMD executor (core/pipeline.py), so what we analyze is exactly
+what runs.
+
+Task kinds (int codes used in device tables):
+  NOP=0, F=1, B=2 (input-grad, includes the remat re-forward), W=3
+  (weight-grad GEMMs), and for serving F-only tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+NOP, F, B, W = 0, 1, 2, 3
+KIND_NAMES = {NOP: "·", F: "F", B: "B", W: "W"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    kind: int
+    mb: int      # microbatch index within the step (0..n_mb-1)
+    stage: int   # global stage id (0..S-1)
+
+    def __repr__(self):
+        return f"{KIND_NAMES[self.kind]}(u{self.mb},s{self.stage})"
+
+
+@dataclasses.dataclass
+class TickTable:
+    """Dense schedule: cell [t, r] = Task or None. Plus comm events."""
+
+    P: int                      # ranks per pipeline group
+    V: int                      # stage slots per rank
+    n_mb: int                   # B micro-batches
+    unit: int                   # U scheduling-unit size
+    grid: list[list[Task | None]]            # [T][P]
+    # FSDP events: per tick per rank, gather/reduce of local slot v (or -1).
+    gather: np.ndarray | None = None         # [T, P] int, -1 = none
+    reduce: np.ndarray | None = None         # [T, P] int, -1 = none
+    segment: str = "main"
+
+    @property
+    def T(self) -> int:
+        return len(self.grid)
+
+    def tasks(self) -> Iterable[tuple[int, int, Task]]:
+        for t, row in enumerate(self.grid):
+            for r, task in enumerate(row):
+                if task is not None:
+                    yield t, r, task
+
+    # ------------------------------------------------------------------ #
+    def validate(self) -> None:
+        """Check dependency, placement and completeness invariants."""
+        P, V, n_mb = self.P, self.V, self.n_mb
+        S = P * V
+        start: dict[tuple[int, int, int], int] = {}
+        for t, r, task in self.tasks():
+            assert 0 <= task.stage < S, f"bad stage {task}"
+            assert task.stage % P == r, (
+                f"task {task} at rank {r}: circular placement requires "
+                f"rank {task.stage % P}"
+            )
+            key = (task.kind, task.mb, task.stage)
+            assert key not in start, f"duplicate {task}"
+            start[key] = t
+
+        # completeness
+        has_bwd = any(k == B for (k, _, _) in start)
+        has_w = any(k == W for (k, _, _) in start)
+        for u in range(n_mb):
+            for s in range(S):
+                assert (F, u, s) in start, f"missing F(u{u},s{s})"
+                if has_bwd:
+                    assert (B, u, s) in start, f"missing B(u{u},s{s})"
+                if has_w:
+                    assert (W, u, s) in start, f"missing W(u{u},s{s})"
+
+        # dependencies (producer tick < consumer tick; ppermute delivers
+        # at the tick boundary)
+        for (k, u, s), t in start.items():
+            if k == F and s > 0:
+                assert start[(F, u, s - 1)] < t, f"F dep violated u{u} s{s}"
+            if k == B:
+                assert start[(F, u, s)] < t, f"B needs F u{u} s{s}"
+                if s < S - 1:
+                    assert start[(B, u, s + 1)] < t, f"B dep violated u{u} s{s}"
+            if k == W:
+                assert start[(B, u, s)] <= t, f"W needs B u{u} s{s}"
+
+    # ------------------------------------------------------------------ #
+    def render(self, max_ticks: int | None = None) -> str:
+        """ASCII timeline (ranks × ticks)."""
+        out = []
+        Tt = min(self.T, max_ticks or self.T)
+        for r in range(self.P):
+            row = []
+            for t in range(Tt):
+                task = self.grid[t][r]
+                if task is None:
+                    row.append(" · ")
+                else:
+                    row.append(
+                        f"{KIND_NAMES[task.kind]}{task.mb:<2d}"
+                    )
+            out.append(f"r{r:<2d} " + "".join(row))
+        return "\n".join(out)
+
+    def counts(self) -> dict[str, int]:
+        c = {"F": 0, "B": 0, "W": 0, "nop": 0, "gather": 0, "reduce": 0}
+        for t, row in enumerate(self.grid):
+            for r, task in enumerate(row):
+                if task is None:
+                    c["nop"] += 1
+                else:
+                    c[KIND_NAMES[task.kind]] += 1
+        if self.gather is not None:
+            c["gather"] = int((self.gather >= 0).sum())
+        if self.reduce is not None:
+            c["reduce"] = int((self.reduce >= 0).sum())
+        return c
+
+    def bubble_ratio(self) -> float:
+        """Fraction of (tick, rank) slots idle between each rank's first
+        and last task — the tick-quantized pipeline-bubble measure."""
+        idle = 0
+        span = 0
+        for r in range(self.P):
+            ticks = [t for t in range(self.T) if self.grid[t][r] is not None]
+            if not ticks:
+                continue
+            lo, hi = ticks[0], ticks[-1]
+            span += hi - lo + 1
+            idle += (hi - lo + 1) - len(ticks)
+        return idle / max(span, 1)
+
+
+def stage_of(rank: int, v: int, P: int) -> int:
+    return v * P + rank
+
+
+def rank_of(stage: int, P: int) -> int:
+    return stage % P
+
+
+def slot_of(stage: int, P: int) -> int:
+    return stage // P
+
+
+def to_arrays(tt: TickTable):
+    """Pack the table into device-ready int32 arrays.
+
+    Returns dict of [T, P] arrays: kind, mb, v  (+ gather/reduce slots).
+    """
+    T, P = tt.T, tt.P
+    kind = np.zeros((T, P), np.int32)
+    mb = np.zeros((T, P), np.int32)
+    v = np.zeros((T, P), np.int32)
+    for t, r, task in tt.tasks():
+        kind[t, r] = task.kind
+        mb[t, r] = task.mb
+        v[t, r] = slot_of(task.stage, P)
+    gather = tt.gather if tt.gather is not None else -np.ones((T, P), np.int32)
+    reduce = tt.reduce if tt.reduce is not None else -np.ones((T, P), np.int32)
+    return {
+        "kind": kind, "mb": mb, "v": v,
+        "gather": gather.astype(np.int32), "reduce": reduce.astype(np.int32),
+    }

@@ -1,0 +1,237 @@
+"""Continuous-time discrete-event simulator for pipeline schedules.
+
+Takes a TickTable (which fixes each rank's task *order*) plus a CostModel
+(per-task durations, p2p latency, collective times) and computes the real
+timeline: makespan, per-rank busy/idle, bubble fraction, memory watermark,
+and communication counts. This is the engine behind the paper-table
+reproductions (Tables 2/3/5, Figs 5–7) and behind the §4 heuristic
+auto-generator (autogen.py), which needs "profiled" timelines.
+
+Hardware presets: A800 (the paper's testbed) and TPU v5e (our target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.schedules import B, F, NOP, W, TickTable, slot_of
+
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class CostModel:
+    t_f: float = 1.0          # forward, one stage × one micro-batch
+    t_b: float = 2.0          # input-grad (includes remat re-forward)
+    t_w: float = 1.0          # weight-grad GEMMs
+    t_p2p: float = 0.05       # stage-boundary activation transfer
+    t_gather: float = 0.5     # FSDP all-gather, one stage block
+    t_reduce: float = 0.5     # grad reduce-scatter, one stage block
+    overlap_comm: bool = True  # collectives overlap compute (async)
+    # memory accounting (arbitrary units, per stage block)
+    m_act: float = 1.0        # activation stash of one (mb, stage) F→B
+    m_wstash: float = 0.5     # (x, dy) stash of one (mb, stage) B→W
+    m_weight: float = 1.0     # one stage block of parameters (gathered)
+
+    def dur(self, kind: int) -> float:
+        return {F: self.t_f, B: self.t_b, W: self.t_w}[kind]
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    busy: np.ndarray          # [P] busy time
+    bubble_frac: float        # 1 - mean(busy)/makespan
+    peak_mem: float           # per-rank max of the memory trace
+    peak_mem_rank: np.ndarray  # [P]
+    n_gather: int
+    n_reduce: int
+    task_start: dict          # (kind, mb, stage) -> start time
+    task_end: dict
+    comm_busy: np.ndarray     # [P]
+
+    def throughput(self, samples_per_step: float) -> float:
+        return samples_per_step / self.makespan
+
+
+def simulate(tt: TickTable, cm: CostModel) -> SimResult:
+    """List-scheduled execution: each rank runs its tasks in table order,
+    starting each as soon as (a) the rank is free and (b) dependencies
+    (+ p2p) and any required parameter gather have completed."""
+    P, V, U = tt.P, tt.V, tt.unit
+    S = P * V
+    orders: list[list] = [[] for _ in range(P)]
+    gather_req: dict[tuple, int] = {}
+    for t, r, task in tt.tasks():
+        g = tt.gather[t, r] if tt.gather is not None else -1
+        orders[r].append((task, g))
+
+    end: dict[tuple, float] = {}
+    start: dict[tuple, float] = {}
+    rank_free = np.zeros(P)
+    comm_free = np.zeros(P)   # per-rank collective channel
+    comm_busy = np.zeros(P)
+    gather_done: dict[tuple, float] = {}  # (rank, idx) -> completion
+    n_gather = 0
+
+    # iterate in rounds until all scheduled (tasks unlock across ranks)
+    idx = [0] * P
+    total = sum(len(o) for o in orders)
+    done_ct = 0
+    guard = 0
+    while done_ct < total and guard < total * P + 64:
+        guard += 1
+        progressed = False
+        for r in range(P):
+            while idx[r] < len(orders[r]):
+                task, g = orders[r][idx[r]]
+                key = (task.kind, task.mb, task.stage)
+                # dependency readiness
+                deps = []
+                if task.kind == F and task.stage > 0:
+                    deps.append((F, task.mb, task.stage - 1))
+                if task.kind == B:
+                    deps.append((F, task.mb, task.stage))
+                    if task.stage < S - 1:
+                        deps.append((B, task.mb, task.stage + 1))
+                if task.kind == W:
+                    deps.append((B, task.mb, task.stage))
+                if any(d not in end for d in deps):
+                    break  # must wait; revisit next round
+                ready = rank_free[r]
+                for d in deps:
+                    lat = cm.t_p2p if d[2] != task.stage or d[0] != task.kind else 0.0
+                    cross = (d[2] % P) != r
+                    ready = max(ready, end[d] + (cm.t_p2p if cross else 0.0))
+                # parameter gather (FSDP)
+                if g >= 0:
+                    gk = (r, idx[r])
+                    if cm.overlap_comm:
+                        # issued as early as the comm channel allows
+                        g_start = comm_free[r]
+                        g_end = g_start + cm.t_gather
+                        comm_free[r] = g_end
+                    else:
+                        g_end = ready + cm.t_gather
+                    comm_busy[r] += cm.t_gather
+                    n_gather += 1
+                    ready = max(ready, g_end)
+                s0 = ready
+                e0 = s0 + cm.dur(task.kind)
+                start[key] = s0
+                end[key] = e0
+                rank_free[r] = e0
+                idx[r] += 1
+                done_ct += 1
+                progressed = True
+        if not progressed:
+            # stuck: deadlock in table (shouldn't happen on valid tables)
+            raise RuntimeError("simulator deadlock — invalid schedule order")
+
+    makespan = float(max(end.values()))
+    busy = np.zeros(P)
+    for (k, u, s), e in end.items():
+        busy[s % P] += cm.dur(k)
+
+    n_reduce = int((tt.reduce >= 0).sum()) if tt.reduce is not None else 0
+    for r in range(P):
+        comm_busy[r] += cm.t_reduce * (
+            int((tt.reduce[:, r] >= 0).sum()) if tt.reduce is not None else 0
+        )
+
+    peak, peak_rank = _memory_trace(tt, cm, start, end)
+    return SimResult(
+        makespan=makespan,
+        busy=busy,
+        bubble_frac=float(1.0 - busy.mean() / makespan),
+        peak_mem=float(peak),
+        peak_mem_rank=peak_rank,
+        n_gather=n_gather,
+        n_reduce=n_reduce,
+        task_start=start,
+        task_end=end,
+        comm_busy=comm_busy,
+    )
+
+
+def _memory_trace(tt, cm, start, end):
+    """Activation/stash/weight-buffer watermark per rank (paper §3.4 model).
+
+    * activation of (mb, stage): alive F-end → B-end
+    * W-stash of (mb, stage):    alive B-end → W-end (split schedules)
+    * gathered weights: double-buffer of 2 stage blocks when FSDP events
+      exist, else resident L/P share (non-FSDP baselines).
+    """
+    P = tt.P
+    events: list[list[tuple[float, float]]] = [[] for _ in range(P)]
+    has_w = any(task.kind == W for _, _, task in tt.tasks())
+    for (k, u, s), e in end.items():
+        r = s % P
+        if k == F:
+            events[r].append((e, +cm.m_act))
+        elif k == B:
+            events[r].append((e, -cm.m_act))
+            if has_w:
+                events[r].append((e, +cm.m_wstash))
+        elif k == W:
+            events[r].append((e, -cm.m_wstash))
+    peak_rank = np.zeros(P)
+    for r in range(P):
+        cur = 0.0
+        for _, delta in sorted(events[r], key=lambda x: (x[0], -x[1])):
+            cur += delta
+            peak_rank[r] = max(peak_rank[r], cur)
+    fsdp = tt.gather is not None and (tt.gather >= 0).any()
+    wbuf = 2 * cm.m_weight if fsdp else tt.V * cm.m_weight
+    peak_rank = peak_rank + wbuf
+    return peak_rank.max(), peak_rank
+
+
+# --------------------------------------------------------------------------- #
+# Hardware presets → CostModel for a given model/stage workload
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops: float          # peak per chip, per second
+    hbm_bw: float         # bytes/s
+    link_bw: float        # bytes/s inter-chip (p2p / collective)
+    intra_bw: float = 0.0  # bytes/s within a node (if hierarchical)
+
+
+A800 = Hardware("A800", flops=312e12, hbm_bw=2.0e12, link_bw=25e9,
+                intra_bw=200e9)
+TPU_V5E = Hardware("v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+def cost_model_for(
+    hw: Hardware,
+    *,
+    layer_flops_f: float,      # forward flops of one layer × one micro-batch
+    layers_per_stage: float,
+    act_bytes: float,          # stage-boundary activation bytes (one mb)
+    stage_param_bytes: float,
+    dp: int,
+    mfu: float = 0.5,
+    remat: bool = True,
+    cross_node_dp: bool = False,
+) -> CostModel:
+    """Napkin-math durations from hardware peaks at an assumed MFU."""
+    eff = hw.flops * mfu
+    t_f = layers_per_stage * layer_flops_f / eff
+    # B = input-grad (≈ fwd flops) + remat re-forward when enabled
+    t_b = (layers_per_stage * layer_flops_f * (2 if remat else 1)) / eff
+    t_w = layers_per_stage * layer_flops_f / eff
+    bw = hw.link_bw if cross_node_dp or hw.intra_bw == 0 else hw.intra_bw
+    t_gather = stage_param_bytes * (dp - 1) / dp / bw
+    return CostModel(
+        t_f=t_f, t_b=t_b, t_w=t_w,
+        t_p2p=act_bytes / hw.link_bw,
+        t_gather=t_gather, t_reduce=t_gather,
+        m_act=act_bytes, m_wstash=2 * act_bytes,
+        m_weight=stage_param_bytes,
+    )

@@ -1,0 +1,249 @@
+"""Stage-level mini-autodiff with the ZeroPP F / B(dx) / W(dW) split.
+
+The paper (§2, §3.2) relies on separating the backward pass of every
+parameterized GEMM into
+
+  * **B** — the input-gradient pass ``dx = dy · Wᵀ`` which sits on the
+    pipeline's critical path and must be scheduled as early as possible, and
+  * **W** — the weight-gradient pass ``dW = xᵀ · dy`` which has no
+    inter-device data dependency and can be inserted into pipeline bubbles.
+
+PyTorch implementations intercept autograd; JAX is functional, so stages are
+written against this small tape.  Every parameterized contraction is recorded
+as a ``dense`` node (its ``(x, dy)`` pair is *stashed* during B and the dW
+GEMM is replayed later by :func:`compute_dw`), while everything else
+(norms, rotary, attention cores, scan cores, element-wise glue) is a
+``generic`` node whose backward comes from ``jax.vjp`` — those parameters
+(norm scales, biases, SSM Δ/A params, routers) receive *immediate* gradients
+during B, which is what GPU implementations of the paper do as well (W tasks
+are GEMM weight-gradients only).
+
+Numerics are validated against ``jax.grad`` in ``tests/test_tape.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Tape",
+    "TVal",
+    "WStash",
+    "compute_dw",
+    "dw_zeros_like",
+]
+
+
+@dataclasses.dataclass
+class TVal:
+    """A tape-tracked value (single array)."""
+
+    idx: int
+    val: jnp.ndarray
+
+    @property
+    def shape(self):
+        return self.val.shape
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+
+def _derive_specs(spec: str) -> tuple[str, str]:
+    """From a forward einsum ``"x,w->y"`` derive the dx and dW einsum specs."""
+    lhs, out = spec.split("->")
+    x_s, w_s = lhs.split(",")
+    dx_spec = f"{out},{w_s}->{x_s}"
+    dw_spec = f"{x_s},{out}->{w_s}"
+    return dx_spec, dw_spec
+
+
+@dataclasses.dataclass
+class _DenseRec:
+    out_idx: int
+    in_idx: int
+    pname: str
+    spec: str
+    x_saved: jnp.ndarray
+    w_ref: jnp.ndarray
+
+
+@dataclasses.dataclass
+class _GenericRec:
+    out_idxs: tuple[int, ...]
+    in_idxs: tuple[int, ...]
+    pnames: tuple[str, ...]
+    vjp_fn: Callable  # closes over tracers; valid within one trace
+    out_avals: tuple[Any, ...]  # (shape, dtype) per output, for zero-filling
+
+
+# A W-stash entry: everything needed to replay dW = einsum(dw_spec, x, dy).
+# Kept as a flat pytree-compatible tuple so it can live in scan carries.
+@dataclasses.dataclass
+class WStash:
+    pname: str
+    dw_spec: str
+    x: jnp.ndarray
+    dy: jnp.ndarray
+
+
+class Tape:
+    """One stage execution context.
+
+    mode="fwd"  : primitives just compute (the F task).
+    mode="bwd"  : primitives compute *and* record; :meth:`backward` then
+                  walks the records in reverse producing input cotangents,
+                  immediate (non-GEMM) parameter grads, and the W-stash.
+    """
+
+    def __init__(self, params: dict[str, jnp.ndarray], mode: str = "fwd",
+                 no_defer: frozenset[str] | set[str] = frozenset()):
+        assert mode in ("fwd", "bwd")
+        self.params = params
+        self.mode = mode
+        self.no_defer = no_defer  # dense params whose dW is computed in B
+        self._n = 0
+        self._records: list[Any] = []
+
+    # ------------------------------------------------------------------ #
+    def value(self, arr: jnp.ndarray) -> TVal:
+        """Wrap an externally produced array as a tape input."""
+        self._n += 1
+        return TVal(self._n, arr)
+
+    def param(self, name: str) -> jnp.ndarray:
+        return self.params[name]
+
+    # ------------------------------------------------------------------ #
+    def dense(self, x: TVal, pname: str, spec: str) -> TVal:
+        """y = einsum(spec, x, params[pname]) — a deferred-dW contraction."""
+        w = self.params[pname]
+        y = jnp.einsum(spec, x.val, w)
+        out = self.value(y)
+        if self.mode == "bwd":
+            self._records.append(
+                _DenseRec(out.idx, x.idx, pname, spec, x.val, w)
+            )
+        return out
+
+    def prim(
+        self,
+        fn: Callable,
+        *xs: TVal,
+        pnames: Sequence[str] = (),
+        n_out: int = 1,
+    ):
+        """Apply ``fn(*param_values, *x_values)``; backward via jax.vjp.
+
+        Parameters named in ``pnames`` receive immediate gradients in B.
+        """
+        pvals = tuple(self.params[p] for p in pnames)
+        xvals = tuple(x.val for x in xs)
+        if self.mode == "bwd":
+            outs, vjp_fn = jax.vjp(fn, *pvals, *xvals)
+        else:
+            outs = fn(*pvals, *xvals)
+            vjp_fn = None
+        if n_out == 1:
+            outs_t = (outs,)
+        else:
+            outs_t = tuple(outs)
+        out_vals = tuple(self.value(o) for o in outs_t)
+        if self.mode == "bwd":
+            self._records.append(
+                _GenericRec(
+                    tuple(o.idx for o in out_vals),
+                    tuple(x.idx for x in xs),
+                    tuple(pnames),
+                    vjp_fn,
+                    tuple((o.val.shape, o.val.dtype) for o in out_vals),
+                )
+            )
+        return out_vals[0] if n_out == 1 else out_vals
+
+    # Convenience wrappers ------------------------------------------------ #
+    def add(self, a: TVal, b: TVal) -> TVal:
+        return self.prim(lambda x, y: x + y, a, b)
+
+    def mul(self, a: TVal, b: TVal) -> TVal:
+        return self.prim(lambda x, y: x * y, a, b)
+
+    def elementwise(self, fn: Callable, x: TVal) -> TVal:
+        return self.prim(fn, x)
+
+    # ------------------------------------------------------------------ #
+    def backward(
+        self, seeds: dict[int, jnp.ndarray]
+    ) -> tuple[dict[int, jnp.ndarray], dict[str, jnp.ndarray], list[WStash]]:
+        """Reverse-walk the tape.
+
+        seeds: {TVal.idx: cotangent} for the stage outputs.
+        Returns (input cotangents by idx, immediate param grads, W-stash).
+        """
+        assert self.mode == "bwd", "backward() requires a bwd-mode tape"
+        cot: dict[int, jnp.ndarray] = dict(seeds)
+        igrads: dict[str, jnp.ndarray] = {}
+        wstash: list[WStash] = []
+
+        def _acc(d: dict, k, v):
+            if v is None:
+                return
+            if k in d:
+                d[k] = d[k] + v
+            else:
+                d[k] = v
+
+        for rec in reversed(self._records):
+            if isinstance(rec, _DenseRec):
+                dy = cot.pop(rec.out_idx, None)
+                if dy is None:
+                    continue
+                dx_spec, dw_spec = _derive_specs(rec.spec)
+                dx = jnp.einsum(dx_spec, dy, rec.w_ref)
+                _acc(cot, rec.in_idx, dx)
+                if rec.pname in self.no_defer:
+                    # e.g. EP expert banks: dW now (stash would be huge)
+                    _acc(igrads, rec.pname,
+                         jnp.einsum(dw_spec, rec.x_saved, dy))
+                else:
+                    wstash.append(WStash(rec.pname, dw_spec, rec.x_saved, dy))
+            else:  # _GenericRec
+                dys = tuple(cot.pop(i, None) for i in rec.out_idxs)
+                if all(d is None for d in dys):
+                    continue
+                # vjp needs the full cotangent structure; fill gaps with 0.
+                dys_full = [
+                    d if d is not None else jnp.zeros(shape, dtype)
+                    for d, (shape, dtype) in zip(dys, rec.out_avals)
+                ]
+                grads_in = rec.vjp_fn(
+                    dys_full[0] if len(dys_full) == 1 else tuple(dys_full)
+                )
+                np_, nx = len(rec.pnames), len(rec.in_idxs)
+                for p, g in zip(rec.pnames, grads_in[:np_]):
+                    _acc(igrads, p, g)
+                for i, g in zip(rec.in_idxs, grads_in[np_: np_ + nx]):
+                    _acc(cot, i, g)
+        return cot, igrads, wstash
+
+
+# -------------------------------------------------------------------------- #
+def compute_dw(wstash: Sequence[WStash]) -> dict[str, jnp.ndarray]:
+    """The W task: replay only the dW GEMMs from the stash."""
+    grads: dict[str, jnp.ndarray] = {}
+    for s in wstash:
+        g = jnp.einsum(s.dw_spec, s.x, s.dy)
+        if s.pname in grads:
+            grads[s.pname] = grads[s.pname] + g
+        else:
+            grads[s.pname] = g
+    return grads
+
+
+def dw_zeros_like(params: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+    return {k: jnp.zeros_like(v) for k, v in params.items()}

@@ -1,0 +1,95 @@
+"""Dispatch layer: Pallas TPU kernels on TPU, jnp references elsewhere.
+
+All model code calls through these functions. The choice is made per-call
+from (a) the default backend, (b) the ``REPRO_FORCE_REF`` env var, and
+(c) an explicit ``impl=`` override — so tests can compare both paths.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+
+_FORCE_REF = os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _use_pallas(impl: str | None) -> bool:
+    if impl == "pallas":
+        return True
+    if impl == "ref":
+        return False
+    return _on_tpu() and not _FORCE_REF
+
+
+# --------------------------------------------------------------------------- #
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, block_k=512, impl=None):
+    if _use_pallas(impl):
+        from repro.kernels import flash_attention
+
+        return flash_attention.flash_attention(
+            q, k, v, causal=causal, q_offset=q_offset
+        )
+    return ref.attention(
+        q, k, v, causal=causal, q_offset=q_offset, block_k=block_k
+    )
+
+
+def decode_attention(q, k_cache, v_cache, cache_len=None, impl=None):
+    return ref.decode_attention(q, k_cache, v_cache, cache_len=cache_len)
+
+
+def combine_decode_shards(partials):
+    return ref.combine_decode_shards(partials)
+
+
+def selective_scan(x, dt, A, B, C, D, *, chunk=256, h0=None,
+                   return_state=False, impl=None):
+    if _use_pallas(impl):
+        from repro.kernels import selective_scan as ss
+
+        return ss.selective_scan(
+            x, dt, A, B, C, D, chunk=chunk, h0=h0, return_state=return_state
+        )
+    return ref.selective_scan(
+        x, dt, A, B, C, D, chunk=chunk, h0=h0, return_state=return_state
+    )
+
+
+def selective_scan_step(h, x, dt, A, B, C, D):
+    return ref.selective_scan_step(h, x, dt, A, B, C, D)
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk=128, state=None,
+                    return_state=False, impl=None):
+    return ref.mlstm_chunkwise(
+        q, k, v, i_gate, f_gate, chunk=chunk, state=state,
+        return_state=return_state,
+    )
+
+
+def mlstm_step(state, q, k, v, i_gate, f_gate):
+    return ref.mlstm_step(state, q, k, v, i_gate, f_gate)
+
+
+def slstm_scan(x_gates, *, state=None, return_state=False, impl=None):
+    return ref.slstm_scan(x_gates, state=state, return_state=return_state)
+
+
+def softmax_xent(h, w_head, labels, *, chunk=8192, mask=None, impl=None):
+    if _use_pallas(impl):
+        from repro.kernels import fused_xent
+
+        return fused_xent.softmax_xent(h, w_head, labels, mask=mask)
+    return ref.softmax_xent(h, w_head, labels, chunk=chunk, mask=mask)

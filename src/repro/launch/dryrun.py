@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh), print the compiled memory/cost analyses, scrape the collective
+schedule, and emit the roofline terms.
+
+Must be run as its own process (the 512 fake host devices are set before
+any jax import above — do NOT import this module from tests/benchmarks).
+
+Usage:
+  PYTHONPATH=src:. python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--out results/]
+  PYTHONPATH=src:. python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.common import SHAPES  # noqa: E402
+
+ARCHS = [
+    "whisper-large-v3", "qwen2-moe-a2.7b", "deepseek-v3-671b",
+    "jamba-v0.1-52b", "phi-3-vision-4.2b", "minitron-4b", "yi-9b",
+    "phi4-mini-3.8b", "llama3.2-1b", "xlstm-1.3b",
+]
+
+# long_500k needs sub-quadratic attention: only the SSM/hybrid archs run it
+# (brief: skip for pure full-attention archs; noted in DESIGN.md §5).
+LONG_OK = {"jamba-v0.1-52b", "xlstm-1.3b"}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]"
+)
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def scrape_collectives(hlo_text: str) -> dict:
+    """Count collective instructions + static operand bytes in the HLO.
+
+    Ops inside while-loop bodies appear once (the analytic model in
+    benchmarks/roofline.py accounts for trip counts); this scrape is the
+    structural fingerprint: which collectives exist, with what shapes.
+    """
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op, dt, dims = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for tok in dims.split(","):
+            if tok:
+                nbytes *= int(tok)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None):
+    from repro.core.pipeline import (Runtime, init_serve_caches,
+                                     make_serve_step, make_train_step)
+    import benchmarks.roofline as RL
+
+    shape_cfg = SHAPES[shape]
+    mod = M.get_arch(arch)
+    cfg = mod.config()
+    rc = mod.production_run(shape)
+    if multi_pod and shape_cfg.kind == "train":
+        # pods split the global batch: half the micro-batches per pipeline
+        per_dp = max(shape_cfg.global_batch // (2 * 16), 1)
+        rc = dataclasses.replace(
+            rc, microbatches=max(per_dp // rc.groups, 1),
+            unit=min(rc.unit or 10**9, max(per_dp // rc.groups, 1)))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rt = Runtime(cfg, rc, mesh, multi_pod=multi_pod)
+    params = rt.param_shapes()
+    batch = rt.input_specs(shape_cfg)
+
+    if shape_cfg.kind == "train":
+        step = make_train_step(rt, shape_cfg)
+        lowered = step.lower(params, batch)
+    else:
+        prompt = 1 if shape_cfg.kind == "decode" else (
+            min(shape_cfg.seq_len, 448) if cfg.encdec else
+            shape_cfg.seq_len)
+        caches = init_serve_caches(rt, shape_cfg,
+                                   max_seq=shape_cfg.seq_len)
+        step = make_serve_step(rt, shape_cfg, prompt_len=prompt,
+                               max_seq=shape_cfg.seq_len)
+        lowered = step.lower(params, caches, batch)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    print(f"--- memory_analysis [{arch} × {shape} "
+          f"{'multi-pod' if multi_pod else 'single-pod'}] ---")
+    print(mem)
+    print("--- cost_analysis (flops/bytes; while-bodies counted once) ---")
+    print({k: v for k, v in sorted(cost.items())
+           if isinstance(v, (int, float)) and v})
+
+    hlo = compiled.as_text()
+    colls = scrape_collectives(hlo)
+    print("--- collective schedule (instructions in compiled HLO) ---")
+    for op, rec in sorted(colls.items()):
+        print(f"  {op:20s} n={rec['count']:4d} bytes={rec['bytes']:.3e}")
+
+    roof = RL.analyze_cell(rt, shape_cfg)
+    print("--- roofline (analytic, per device per step) ---")
+    print(f"  compute    {roof.compute_s:10.4f} s")
+    print(f"  memory     {roof.memory_s:10.4f} s")
+    print(f"  collective {roof.collective_s:10.4f} s")
+    print(f"  bottleneck {roof.bottleneck}")
+    print(f"  MODEL_FLOPS/HLO_FLOPS {roof.useful_ratio:.3f}")
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "repr": str(mem)[:2000],
+        },
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives": colls,
+        "roofline": {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "flops": roof.flops, "hbm_bytes": roof.hbm_bytes,
+            "coll_bytes": roof.coll_bytes,
+            "model_flops": roof.model_flops,
+            "useful_ratio": roof.useful_ratio,
+            "bottleneck": roof.bottleneck,
+        },
+        "status": "ok",
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape}_{'mp' if multi_pod else 'sp'}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"CELL_OK {arch} {shape} lower={t_lower:.1f}s "
+          f"compile={t_compile:.1f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        if shape == "long_500k" and arch not in LONG_OK:
+            print(f"CELL_SKIP {arch} long_500k (pure full attention; "
+                  "DESIGN.md §5)")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = f"{arch}_{shape}_{'mp' if args.multi_pod else 'sp'}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "status": "skipped_full_attention"}, f)
+            continue
+        try:
+            run_cell(arch, shape, args.multi_pod, args.out)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"CELL_FAIL {arch} {shape}: {e}")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = f"{arch}_{shape}_{'mp' if args.multi_pod else 'sp'}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "status": f"fail: {e}"}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax import; tests use their own
+small meshes in subprocesses).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: "data" = FSDP (+EP +vocab) axis, "model" = pipeline-group ×
+    pipeline-stage axis (TP-free per the paper), "pod" = hybrid-sharded DP
+    (params replicated, grads all-reduced once per step).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link (~4 links usable)

@@ -1,0 +1,798 @@
+"""Transformer / MoE / SSM / xLSTM blocks written against the ZeroPP tape.
+
+Every parameterized GEMM goes through ``Tape.dense`` (deferred dW → the W
+task); everything else is a generic prim (immediate small grads in B).
+Each block also has a ``*_decode`` pure-jnp variant for cached serving.
+
+Naming: params are flat dicts; a layer's params are prefixed ``L{j}.``
+by the stage assembly in model.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tape import Tape, TVal
+from repro.kernels import ops
+from repro.models.common import (
+    MLACfg,
+    ModelConfig,
+    ParamSpec,
+    RunConfig,
+    apply_rope,
+)
+
+# --------------------------------------------------------------------------- #
+# Context threaded through layer application
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class LayerCtx:
+    cfg: ModelConfig
+    rc: RunConfig
+    rope: dict[int, tuple[jnp.ndarray, jnp.ndarray]]  # head_dim -> (cos, sin)
+    causal: bool = True
+    ep_axis: str | None = None       # all_to_all axis for EP MoE (under shard_map)
+    enc_memory: Any = None           # TVal [b, enc_ctx, d] for cross-attn
+    decode: bool = False
+    rope_full: dict | None = None    # head_dim -> full-cache rope tables (decode)
+    kv_seq_shard: bool = False       # 500k path: KV cache sharded on seq
+    kv_shards: int = 1               # over this many "data" ranks
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+
+def norm_specs(cfg: ModelConfig, pfx: str) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            f"{pfx}.scale": ParamSpec((d,), "ones", fsdp_dim=0),
+            f"{pfx}.bias": ParamSpec((d,), "zeros", fsdp_dim=0),
+        }
+    return {f"{pfx}.scale": ParamSpec((d,), "ones", fsdp_dim=0)}
+
+
+def apply_norm(t: Tape, cfg: ModelConfig, pfx: str, x: TVal) -> TVal:
+    if cfg.norm == "layernorm":
+        def ln(scale, bias, v):
+            vf = v.astype(jnp.float32)
+            mu = vf.mean(axis=-1, keepdims=True)
+            var = ((vf - mu) ** 2).mean(axis=-1, keepdims=True)
+            y = (vf - mu) * jax.lax.rsqrt(var + 1e-5)
+            return (y * scale + bias).astype(v.dtype)
+
+        return t.prim(ln, x, pnames=(f"{pfx}.scale", f"{pfx}.bias"))
+
+    def rms(scale, v):
+        vf = v.astype(jnp.float32)
+        y = vf * jax.lax.rsqrt(jnp.mean(vf * vf, axis=-1, keepdims=True) + 1e-6)
+        return (y * scale).astype(v.dtype)
+
+    return t.prim(rms, x, pnames=(f"{pfx}.scale",))
+
+
+def norm_fwd(cfg, params, pfx, x):
+    """Pure fwd (decode path)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(axis=-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        return (y * params[f"{pfx}.scale"] + params[f"{pfx}.bias"]).astype(x.dtype)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (y * params[f"{pfx}.scale"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention
+# --------------------------------------------------------------------------- #
+
+
+def attn_specs(cfg: ModelConfig, pfx: str, cross: bool = False):
+    d, h, g, e = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = {
+        f"{pfx}.wq": ParamSpec((d, h, e), fsdp_dim=0),
+        f"{pfx}.wk": ParamSpec((d, g, e), fsdp_dim=0),
+        f"{pfx}.wv": ParamSpec((d, g, e), fsdp_dim=0),
+        f"{pfx}.wo": ParamSpec((h, e, d), fsdp_dim=2),
+    }
+    return sp
+
+
+def apply_attn(
+    t: Tape, ctx: LayerCtx, pfx: str, x: TVal, *, cross: bool = False
+) -> TVal:
+    cfg, rc = ctx.cfg, ctx.rc
+    q = t.dense(x, f"{pfx}.wq", "bsd,dhe->bshe")
+    kv_src = ctx.enc_memory if cross else x
+    k = t.dense(kv_src, f"{pfx}.wk", "bsd,dge->bsge")
+    v = t.dense(kv_src, f"{pfx}.wv", "bsd,dge->bsge")
+    if not cross:
+        cos, sin = ctx.rope[cfg.head_dim]
+
+        def core(qv, kv, vv):
+            qr = apply_rope(qv, cos, sin)
+            kr = apply_rope(kv, cos, sin)
+            return ops.attention(
+                qr, kr, vv, causal=ctx.causal, block_k=rc.attn_block_k
+            )
+
+        o = t.prim(core, q, k, v)
+    else:
+
+        def core(qv, kv, vv):
+            return ops.attention(qv, kv, vv, causal=False,
+                                 block_k=rc.attn_block_k)
+
+        o = t.prim(core, q, k, v)
+    return t.dense(o, f"{pfx}.wo", "bshe,hed->bsd")
+
+
+def attn_decode(ctx: LayerCtx, params, pfx, x, cache, pos):
+    """x: [b, 1, d]; cache: dict(k: [b,S,g,e], v: [b,S,g,e]); pos scalar."""
+    cfg = ctx.cfg
+    q = jnp.einsum("bsd,dhe->bshe", x, params[f"{pfx}.wq"])
+    k = jnp.einsum("bsd,dge->bsge", x, params[f"{pfx}.wk"])
+    v = jnp.einsum("bsd,dge->bsge", x, params[f"{pfx}.wv"])
+    cos, sin = ctx.rope[cfg.head_dim]  # [1, e/2] at current pos
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
+    )
+    o, _ = ops.decode_attention(q, k_cache, v_cache, cache_len=pos + 1)
+    y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attn_decode(ctx, params, pfx, x, memory):
+    q = jnp.einsum("bsd,dhe->bshe", x, params[f"{pfx}.wq"])
+    k = jnp.einsum("bsd,dge->bsge", memory, params[f"{pfx}.wk"])
+    v = jnp.einsum("bsd,dge->bsge", memory, params[f"{pfx}.wv"])
+    o = ops.attention(q, k, v, causal=False)
+    return jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek multi-head latent attention)
+# --------------------------------------------------------------------------- #
+
+
+def mla_specs(cfg: ModelConfig, pfx: str):
+    m: MLACfg = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        f"{pfx}.wdq": ParamSpec((d, m.q_lora), fsdp_dim=0),
+        f"{pfx}.qnorm.scale": ParamSpec((m.q_lora,), "ones"),
+        f"{pfx}.wuq": ParamSpec((m.q_lora, h, m.qk_nope + m.rope_dims),
+                                fsdp_dim=0),
+        f"{pfx}.wdkv": ParamSpec((d, m.kv_lora + m.rope_dims), fsdp_dim=0),
+        f"{pfx}.kvnorm.scale": ParamSpec((m.kv_lora,), "ones"),
+        f"{pfx}.wuk": ParamSpec((m.kv_lora, h, m.qk_nope), fsdp_dim=0),
+        f"{pfx}.wuv": ParamSpec((m.kv_lora, h, m.v_head), fsdp_dim=0),
+        f"{pfx}.wo": ParamSpec((h, m.v_head, d), fsdp_dim=2),
+    }
+
+
+def apply_mla(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
+    cfg = ctx.cfg
+    m: MLACfg = cfg.mla
+    cq = t.dense(x, f"{pfx}.wdq", "bsd,dr->bsr")
+    cq = _rms_sub(t, f"{pfx}.qnorm.scale", cq)
+    q = t.dense(cq, f"{pfx}.wuq", "bsr,rhe->bshe")  # e = qk_nope + rope
+    ckv = t.dense(x, f"{pfx}.wdkv", "bsd,dc->bsc")  # c = kv_lora + rope
+
+    def split_norm(scale, c):
+        c_kv = c[..., : m.kv_lora]
+        k_rope = c[..., m.kv_lora:]
+        cf = c_kv.astype(jnp.float32)
+        c_kv = (
+            cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + 1e-6)
+            * scale
+        ).astype(c.dtype)
+        return c_kv, k_rope
+
+    c_kv, k_rope = t.prim(
+        split_norm, ckv, pnames=(f"{pfx}.kvnorm.scale",), n_out=2
+    )
+    k_nope = t.dense(c_kv, f"{pfx}.wuk", "bsc,che->bshe")
+    vv = t.dense(c_kv, f"{pfx}.wuv", "bsc,che->bshe")
+    cos, sin = ctx.rope[m.rope_dims]
+
+    def core(qv, knope, krope, val):
+        q_nope, q_rope = qv[..., : m.qk_nope], qv[..., m.qk_nope:]
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope_r = apply_rope(krope[:, :, None, :], cos, sin)
+        k_rope_b = jnp.broadcast_to(
+            k_rope_r, knope.shape[:3] + (m.rope_dims,)
+        )
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate([knope, k_rope_b], axis=-1)
+        scale = 1.0 / (m.qk_nope + m.rope_dims) ** 0.5
+        return ops.attention(
+            qf, kf, val, causal=ctx.causal, block_k=ctx.rc.attn_block_k,
+        )
+
+    o = t.prim(core, q, k_nope, k_rope, vv)
+    return t.dense(o, f"{pfx}.wo", "bshe,hed->bsd")
+
+
+def mla_decode(ctx, params, pfx, x, cache, pos):
+    """Cache holds the *compressed* ckv [b, S, kv_lora + rope_dims]."""
+    cfg = ctx.cfg
+    m: MLACfg = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, params[f"{pfx}.wdq"])
+    cqf = cq.astype(jnp.float32)
+    cq = (cqf * jax.lax.rsqrt(jnp.mean(cqf * cqf, -1, keepdims=True) + 1e-6)
+          * params[f"{pfx}.qnorm.scale"]).astype(x.dtype)
+    q = jnp.einsum("bsr,rhe->bshe", cq, params[f"{pfx}.wuq"])
+    ckv = jnp.einsum("bsd,dc->bsc", x, params[f"{pfx}.wdkv"])
+    cache_new = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    full = cache_new  # [b, S, c]
+    c_kv, k_rope = full[..., : m.kv_lora], full[..., m.kv_lora:]
+    cf = c_kv.astype(jnp.float32)
+    c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + 1e-6)
+            * params[f"{pfx}.kvnorm.scale"]).astype(x.dtype)
+    k_nope = jnp.einsum("bsc,che->bshe", c_kv, params[f"{pfx}.wuk"])
+    v = jnp.einsum("bsc,che->bshe", c_kv, params[f"{pfx}.wuv"])
+    cos_q, sin_q = ctx.rope[m.rope_dims]          # [1, rope/2] current pos
+    cos_k, sin_k = ctx.rope_full[m.rope_dims]     # [S, rope/2]
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, cos_q, sin_q)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos_k, sin_k)
+    k_rope = jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.rope_dims,))
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, k_rope], -1)
+    scale = 1.0 / (m.qk_nope + m.rope_dims) ** 0.5
+    o, _ = ops.decode_attention(qf, kf, v, cache_len=pos + 1)
+    y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
+    return y, {"ckv": cache_new}
+
+
+def _rms_sub(t: Tape, scale_name: str, x: TVal) -> TVal:
+    def rms(scale, v):
+        vf = v.astype(jnp.float32)
+        y = vf * jax.lax.rsqrt(jnp.mean(vf * vf, -1, keepdims=True) + 1e-6)
+        return (y * scale).astype(v.dtype)
+
+    return t.prim(rms, x, pnames=(scale_name,))
+
+
+# --------------------------------------------------------------------------- #
+# Dense FFN (SwiGLU or GELU-MLP)
+# --------------------------------------------------------------------------- #
+
+
+def ffn_specs(cfg: ModelConfig, pfx: str, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "gelu_mlp":
+        return {
+            f"{pfx}.wi": ParamSpec((d, f), fsdp_dim=1),
+            f"{pfx}.wd": ParamSpec((f, d), fsdp_dim=0),
+        }
+    return {
+        f"{pfx}.wg": ParamSpec((d, f), fsdp_dim=1),
+        f"{pfx}.wu": ParamSpec((d, f), fsdp_dim=1),
+        f"{pfx}.wd": ParamSpec((f, d), fsdp_dim=0),
+    }
+
+
+def apply_ffn(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
+    if ctx.cfg.act == "gelu_mlp":
+        h = t.dense(x, f"{pfx}.wi", "bsd,df->bsf")
+        h = t.elementwise(jax.nn.gelu, h)
+        return t.dense(h, f"{pfx}.wd", "bsf,fd->bsd")
+    g = t.dense(x, f"{pfx}.wg", "bsd,df->bsf")
+    u = t.dense(x, f"{pfx}.wu", "bsd,df->bsf")
+    h = t.prim(lambda a, b: jax.nn.silu(a) * b, g, u)
+    return t.dense(h, f"{pfx}.wd", "bsf,fd->bsd")
+
+
+def ffn_fwd(ctx, params, pfx, x):
+    if ctx.cfg.act == "gelu_mlp":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params[f"{pfx}.wi"]))
+        return jnp.einsum("bsf,fd->bsd", h, params[f"{pfx}.wd"])
+    g = jnp.einsum("bsd,df->bsf", x, params[f"{pfx}.wg"])
+    u = jnp.einsum("bsd,df->bsf", x, params[f"{pfx}.wu"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, params[f"{pfx}.wd"])
+
+
+# --------------------------------------------------------------------------- #
+# MoE (shared + routed top-k, capacity-based dispatch)
+# --------------------------------------------------------------------------- #
+
+
+def moe_specs(cfg: ModelConfig, pfx: str):
+    mo = cfg.moe
+    d, fe = cfg.d_model, mo.d_ff_expert
+    sp = {
+        f"{pfx}.router": ParamSpec((d, mo.n_experts), fsdp_dim=0, scale=0.1),
+        f"{pfx}.e_wg": ParamSpec((mo.n_experts, d, fe), fsdp_dim=2, ep=True),
+        f"{pfx}.e_wu": ParamSpec((mo.n_experts, d, fe), fsdp_dim=2, ep=True),
+        f"{pfx}.e_wd": ParamSpec((mo.n_experts, fe, d), fsdp_dim=1, ep=True),
+    }
+    if mo.n_shared:
+        fs = mo.d_ff_shared or fe * mo.n_shared
+        sp.update({
+            f"{pfx}.s_wg": ParamSpec((d, fs), fsdp_dim=1),
+            f"{pfx}.s_wu": ParamSpec((d, fs), fsdp_dim=1),
+            f"{pfx}.s_wd": ParamSpec((fs, d), fsdp_dim=0),
+        })
+    return sp
+
+
+def _capacity(n_tok: int, mo) -> int:
+    c = int(n_tok * mo.top_k / mo.n_experts * mo.capacity_factor) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def apply_moe(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> tuple[TVal, TVal]:
+    """Returns (y, aux_loss)."""
+    cfg, mo = ctx.cfg, ctx.cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    cap = _capacity(n, mo)
+    E, K = mo.n_experts, mo.top_k
+
+    logits = t.dense(x, f"{pfx}.router", "bsd,de->bse")
+
+    # Routing (indices exit the tape as closure captures; weights stay on it).
+    holder = {}
+
+    def route(lg):
+        lgf = lg.reshape(n, E).astype(jnp.float32)
+        probs = jax.nn.softmax(lgf, axis=-1)
+        topw, topi = jax.lax.top_k(probs, K)          # [n, K]
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+        # position of each (token, k) within its expert
+        onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)  # [n, K, E]
+        flat_oh = onehot.reshape(n * K, E)
+        pos = jnp.cumsum(flat_oh, axis=0) - flat_oh         # rank within expert
+        slot = (pos * flat_oh).sum(-1).reshape(n, K)        # [n, K]
+        keep = slot < cap
+        # aux load-balance loss (Switch-style)
+        frac_tok = jnp.mean(onehot[:, 0].astype(jnp.float32), axis=0)
+        frac_prob = probs.mean(axis=0)
+        aux = (frac_tok * frac_prob).sum() * E
+        holder["topi"] = topi
+        holder["slot"] = jnp.where(keep, slot, cap)  # cap = drop slot
+        return topw, aux
+
+    topw, aux = t.prim(route, logits, n_out=2)
+
+    def dispatch(xv):
+        xf = xv.reshape(n, d)
+        buf = jnp.zeros((E, cap + 1, d), xv.dtype)
+        ti = holder["topi"].reshape(-1)
+        sl = holder["slot"].reshape(-1)
+        xk = jnp.repeat(xf, K, axis=0)
+        return buf.at[ti, sl].add(xk)[:, :cap]
+
+    xe = t.prim(dispatch, x)  # [E, cap, d]
+
+    if ctx.ep_axis is not None:
+        # all_to_all: split experts over the data axis, concat capacity.
+        ax = ctx.ep_axis
+
+        def a2a_fwd(v):
+            return jax.lax.all_to_all(v, ax, split_axis=0, concat_axis=1,
+                                      tiled=True)
+
+        xe = t.prim(a2a_fwd, xe)  # [E/D, cap*D, d]
+
+    g = t.dense(xe, f"{pfx}.e_wg", "ecd,edf->ecf")
+    u = t.dense(xe, f"{pfx}.e_wu", "ecd,edf->ecf")
+    hh = t.prim(lambda a, b2: jax.nn.silu(a) * b2, g, u)
+    ye = t.dense(hh, f"{pfx}.e_wd", "ecf,efd->ecd")
+
+    if ctx.ep_axis is not None:
+        ax = ctx.ep_axis
+
+        def a2a_bwd(v):
+            return jax.lax.all_to_all(v, ax, split_axis=1, concat_axis=0,
+                                      tiled=True)
+
+        ye = t.prim(a2a_bwd, ye)
+
+    def combine(yv, wv):
+        ti = holder["topi"]            # [n, K]
+        sl = holder["slot"]            # [n, K] (cap = dropped)
+        ypad = jnp.pad(yv, ((0, 0), (0, 1), (0, 0)))  # drop slot reads zeros
+        gathered = ypad[ti, sl]        # [n, K, d]
+        out = (gathered * wv[..., None].astype(yv.dtype)).sum(axis=1)
+        return out.reshape(b, s, d)
+
+    y = t.prim(combine, ye, topw)
+
+    if mo.n_shared:
+        g2 = t.dense(x, f"{pfx}.s_wg", "bsd,df->bsf")
+        u2 = t.dense(x, f"{pfx}.s_wu", "bsd,df->bsf")
+        h2 = t.prim(lambda a, b2: jax.nn.silu(a) * b2, g2, u2)
+        y2 = t.dense(h2, f"{pfx}.s_wd", "bsf,fd->bsd")
+        y = t.add(y, y2)
+    return y, aux
+
+
+def moe_fwd(ctx, params, pfx, x):
+    """Decode/plain path (no tape, gathered experts)."""
+    t = Tape(params, mode="fwd")
+    y, _ = apply_moe(t, ctx, pfx, t.value(x))
+    return y.val
+
+
+# --------------------------------------------------------------------------- #
+# Mamba (selective SSM)
+# --------------------------------------------------------------------------- #
+
+
+def _mamba_dims(cfg):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or max(1, cfg.d_model // 16)
+    return mc, di, dt_rank
+
+
+def mamba_specs(cfg: ModelConfig, pfx: str):
+    mc, di, dt_rank = _mamba_dims(cfg)
+    d, n = cfg.d_model, mc.d_state
+    return {
+        f"{pfx}.w_in": ParamSpec((d, 2 * di), fsdp_dim=1),
+        f"{pfx}.conv_w": ParamSpec((mc.d_conv, di), "small", fsdp_dim=1,
+                                   scale=0.5),
+        f"{pfx}.conv_b": ParamSpec((di,), "zeros"),
+        f"{pfx}.w_x": ParamSpec((di, dt_rank + 2 * n), fsdp_dim=0),
+        f"{pfx}.w_dt": ParamSpec((dt_rank, di), fsdp_dim=1),
+        f"{pfx}.dt_bias": ParamSpec((di,), "zeros"),
+        f"{pfx}.A_log": ParamSpec((di, n), "ones"),
+        f"{pfx}.Dd": ParamSpec((di,), "ones"),
+        f"{pfx}.w_out": ParamSpec((di, d), fsdp_dim=0),
+    }
+
+
+def apply_mamba(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
+    cfg = ctx.cfg
+    mc, di, dt_rank = _mamba_dims(cfg)
+    n = mc.d_state
+    xz = t.dense(x, f"{pfx}.w_in", "bsd,de->bse")  # e = 2*di
+
+    def conv_split(cw, cb, v):
+        xs, z = v[..., :di], v[..., di:]
+        # causal depthwise conv over seq
+        pad = jnp.pad(xs, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i: i + xs.shape[1]] * cw[i][None, None]
+            for i in range(mc.d_conv)
+        ) + cb
+        return jax.nn.silu(out), z
+
+    xs, z = t.prim(
+        conv_split, xz, pnames=(f"{pfx}.conv_w", f"{pfx}.conv_b"), n_out=2
+    )
+    bcdt = t.dense(xs, f"{pfx}.w_x", "bse,er->bsr")  # r = dt_rank + 2n
+
+    def ssm(w_dt, dt_bias, a_log, dd, xs_v, bcdt_v, z_v):
+        dt_in = bcdt_v[..., :dt_rank]
+        Bm = bcdt_v[..., dt_rank: dt_rank + n].astype(jnp.float32)
+        Cm = bcdt_v[..., dt_rank + n:].astype(jnp.float32)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,re->bse", dt_in, w_dt) + dt_bias
+        ).astype(jnp.float32)
+        A = -jnp.exp(a_log.astype(jnp.float32))
+        y = ops.selective_scan(
+            xs_v.astype(jnp.float32), dt, A, Bm, Cm,
+            dd.astype(jnp.float32),
+        )
+        return (y * jax.nn.silu(z_v.astype(jnp.float32))).astype(xs_v.dtype)
+
+    y = t.prim(
+        ssm, xs, bcdt, z,
+        pnames=(f"{pfx}.w_dt", f"{pfx}.dt_bias", f"{pfx}.A_log", f"{pfx}.Dd"),
+    )
+    return t.dense(y, f"{pfx}.w_out", "bse,ed->bsd")
+
+
+def mamba_decode(ctx, params, pfx, x, cache, pos):
+    """cache: {"conv": [b, d_conv-1, di], "h": [b, di, n]}; x [b, 1, d]."""
+    cfg = ctx.cfg
+    mc, di, dt_rank = _mamba_dims(cfg)
+    n = mc.d_state
+    xz = jnp.einsum("bsd,de->bse", x, params[f"{pfx}.w_in"])[:, 0]
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_in = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)
+    cw = params[f"{pfx}.conv_w"]
+    out = sum(conv_in[:, i] * cw[i][None] for i in range(mc.d_conv))
+    xs_c = jax.nn.silu(out + params[f"{pfx}.conv_b"])
+    bcdt = jnp.einsum("be,er->br", xs_c, params[f"{pfx}.w_x"])
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", bcdt[..., :dt_rank], params[f"{pfx}.w_dt"])
+        + params[f"{pfx}.dt_bias"]
+    ).astype(jnp.float32)
+    Bm = bcdt[..., dt_rank: dt_rank + n].astype(jnp.float32)
+    Cm = bcdt[..., dt_rank + n:].astype(jnp.float32)
+    A = -jnp.exp(params[f"{pfx}.A_log"].astype(jnp.float32))
+    h_new, y = ops.selective_scan_step(
+        cache["h"], xs_c.astype(jnp.float32), dt, A, Bm, Cm,
+        params[f"{pfx}.Dd"].astype(jnp.float32),
+    )
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = jnp.einsum("be,ed->bd", y, params[f"{pfx}.w_out"])[:, None]
+    return y, {"conv": conv_in[:, 1:], "h": h_new}
+
+
+# --------------------------------------------------------------------------- #
+# xLSTM blocks
+# --------------------------------------------------------------------------- #
+
+
+def mlstm_specs(cfg: ModelConfig, pfx: str):
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    h = cfg.n_heads
+    e = di // h
+    return {
+        f"{pfx}.w_up": ParamSpec((d, 2 * di), fsdp_dim=1),
+        f"{pfx}.wq": ParamSpec((di, h, e), fsdp_dim=0),
+        f"{pfx}.wk": ParamSpec((di, h, e), fsdp_dim=0),
+        f"{pfx}.wv": ParamSpec((di, h, e), fsdp_dim=0),
+        f"{pfx}.w_if": ParamSpec((di, 2, h), fsdp_dim=0, scale=0.1),
+        f"{pfx}.if_bias": ParamSpec((2, h), "zeros"),
+        f"{pfx}.w_out": ParamSpec((di, d), fsdp_dim=0),
+    }
+
+
+def apply_mlstm(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
+    cfg = ctx.cfg
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    up = t.dense(x, f"{pfx}.w_up", "bsd,de->bse")
+    xb, z = t.prim(lambda v: (v[..., :di], v[..., di:]), up, n_out=2)
+    q = t.dense(xb, f"{pfx}.wq", "bse,ehf->bshf")
+    k = t.dense(xb, f"{pfx}.wk", "bse,ehf->bshf")
+    v = t.dense(xb, f"{pfx}.wv", "bse,ehf->bshf")
+
+    def core(w_if, if_bias, xbv, qv, kv, vv, zv):
+        gates = jnp.einsum("bse,egh->bsgh", xbv.astype(jnp.float32),
+                           w_if.astype(jnp.float32)) + if_bias
+        ig, fg = gates[:, :, 0], gates[:, :, 1] + 1.0
+        y = ops.mlstm_chunkwise(qv, kv, vv, ig, fg)
+        y = y.reshape(y.shape[0], y.shape[1], -1)
+        return y * jax.nn.silu(zv)
+
+    y = t.prim(core, xb, q, k, v, z,
+               pnames=(f"{pfx}.w_if", f"{pfx}.if_bias"))
+    return t.dense(y, f"{pfx}.w_out", "bse,ed->bsd")
+
+
+def mlstm_decode(ctx, params, pfx, x, cache, pos):
+    cfg = ctx.cfg
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    h = cfg.n_heads
+    e = di // h
+    up = jnp.einsum("bsd,de->bse", x, params[f"{pfx}.w_up"])[:, 0]
+    xb, z = up[..., :di], up[..., di:]
+    q = jnp.einsum("be,ehf->bhf", xb, params[f"{pfx}.wq"])
+    k = jnp.einsum("be,ehf->bhf", xb, params[f"{pfx}.wk"])
+    v = jnp.einsum("be,ehf->bhf", xb, params[f"{pfx}.wv"])
+    gates = jnp.einsum("be,egh->bgh", xb.astype(jnp.float32),
+                       params[f"{pfx}.w_if"].astype(jnp.float32))
+    gates = gates + params[f"{pfx}.if_bias"]
+    ig, fg = gates[:, 0], gates[:, 1] + 1.0
+    state = (cache["C"], cache["n"], cache["m"])
+    state, y = ops.mlstm_step(state, q, k, v, ig, fg)
+    y = (y.reshape(y.shape[0], -1) * jax.nn.silu(z)).astype(x.dtype)
+    y = jnp.einsum("be,ed->bd", y, params[f"{pfx}.w_out"])[:, None]
+    return y, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def slstm_specs(cfg: ModelConfig, pfx: str):
+    d = cfg.d_model
+    h = cfg.n_heads
+    e = d // h
+    return {
+        f"{pfx}.w_gates": ParamSpec((d, h, 4, e), fsdp_dim=0),
+        f"{pfx}.g_bias": ParamSpec((h, 4, e), "zeros"),
+        f"{pfx}.w_out": ParamSpec((d, d), fsdp_dim=0),
+    }
+
+
+def apply_slstm(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
+    g = t.dense(x, f"{pfx}.w_gates", "bsd,dhge->bshge")
+
+    def core(g_bias, gv):
+        gv = gv + g_bias
+        # reorder to [b, s, h, 4, e]
+        gv = jnp.einsum("bshge->bshge", gv)
+        return ops.slstm_scan(gv)
+
+    y = t.prim(core, g, pnames=(f"{pfx}.g_bias",))
+    y = t.prim(lambda v: v.reshape(v.shape[0], v.shape[1], -1), y)
+    return t.dense(y, f"{pfx}.w_out", "bsd,de->bse")
+
+
+def slstm_decode(ctx, params, pfx, x, cache, pos):
+    g = jnp.einsum("bsd,dhge->bshge", x, params[f"{pfx}.w_gates"])
+    g = (g + params[f"{pfx}.g_bias"])[:, 0]  # [b, h, 4, e]
+    state = (cache["c"], cache["n"], cache["m"])
+    y, state = ops.slstm_scan(g[:, None], state=state, return_state=True)
+    y = y[:, 0].reshape(x.shape[0], -1)
+    y = jnp.einsum("bd,de->be", y, params[f"{pfx}.w_out"])[:, None]
+    return y, {"c": state[0], "n": state[1], "m": state[2]}
+
+
+# --------------------------------------------------------------------------- #
+# Unified cached execution (prefill s>1 / decode s=1) for serving
+# --------------------------------------------------------------------------- #
+
+
+def _rope_slice(ctx, e, pos, s):
+    cos, sin = ctx.rope[e]  # full tables [max_seq, e/2]
+    return (jax.lax.dynamic_slice_in_dim(cos, pos, s, 0),
+            jax.lax.dynamic_slice_in_dim(sin, pos, s, 0))
+
+
+def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
+    """x: [b, s, d]; cache k/v: [b, S, g, e]; pos: first absolute position.
+
+    s == 1 with ctx.kv_seq_shard uses flash-decoding combine over "data"
+    (the 500k-context path: the KV cache is sequence-sharded).
+    """
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, params[f"{pfx}.wq"])
+    k = jnp.einsum("bsd,dge->bsge", x, params[f"{pfx}.wk"])
+    v = jnp.einsum("bsd,dge->bsge", x, params[f"{pfx}.wv"])
+    cos, sin = _rope_slice(ctx, cfg.head_dim, pos, s)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if getattr(ctx, "kv_seq_shard", False):
+        # cache local window [b, S/D, g, e]; only the owner of `pos` writes
+        dsz = ctx.kv_shards
+        S_loc = cache["k"].shape[1]
+        r = jax.lax.axis_index("data")
+        lo = r * S_loc
+        in_win = (pos >= lo) & (pos < lo + S_loc)
+        off = jnp.clip(pos - lo, 0, S_loc - 1)
+        k_old = jax.lax.dynamic_slice_in_dim(cache["k"], off, s, axis=1)
+        v_old = jax.lax.dynamic_slice_in_dim(cache["v"], off, s, axis=1)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], jnp.where(in_win, k, k_old).astype(
+                cache["k"].dtype), (0, off, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], jnp.where(in_win, v, v_old).astype(
+                cache["v"].dtype), (0, off, 0, 0))
+        # local partial attention with global positions
+        n_valid = jnp.clip(pos + s - lo, 0, S_loc)
+        _, (m, l, acc) = ops.decode_attention(q, kc, vc, cache_len=n_valid)
+        # combine across shards: psum-logsumexp (all data ranks aligned)
+        m_g = jax.lax.pmax(m, "data")
+        m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        w_ = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_g = jax.lax.psum(l * w_, "data")
+        acc_g = jax.lax.psum(acc * w_[..., None], "data")
+        o = (acc_g / jnp.maximum(l_g, 1e-30)[..., None])
+        o = jnp.einsum("bhqe->bqhe", o).astype(x.dtype)
+        cache = {"k": kc, "v": vc}
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
+                          block_k=ctx.rc.attn_block_k)
+        cache = {"k": kc, "v": vc}
+    y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
+    return y, cache
+
+
+def mla_cached(ctx, params, pfx, x, cache, pos):
+    cfg = ctx.cfg
+    m: MLACfg = cfg.mla
+    b, s, d = x.shape
+    cq = jnp.einsum("bsd,dr->bsr", x, params[f"{pfx}.wdq"])
+    cqf = cq.astype(jnp.float32)
+    cq = (cqf * jax.lax.rsqrt(jnp.mean(cqf * cqf, -1, keepdims=True) + 1e-6)
+          * params[f"{pfx}.qnorm.scale"]).astype(x.dtype)
+    q = jnp.einsum("bsr,rhe->bshe", cq, params[f"{pfx}.wuq"])
+    ckv = jnp.einsum("bsd,dc->bsc", x, params[f"{pfx}.wdkv"])
+    cache_new = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+    full = cache_new
+    c_kv, k_rope = full[..., : m.kv_lora], full[..., m.kv_lora:]
+    cf = c_kv.astype(jnp.float32)
+    c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + 1e-6)
+            * params[f"{pfx}.kvnorm.scale"]).astype(x.dtype)
+    k_nope = jnp.einsum("bsc,che->bshe", c_kv, params[f"{pfx}.wuk"])
+    vv = jnp.einsum("bsc,che->bshe", c_kv, params[f"{pfx}.wuv"])
+    cos_q, sin_q = _rope_slice(ctx, m.rope_dims, pos, s)
+    cos_k, sin_k = ctx.rope[m.rope_dims]
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, cos_q, sin_q)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos_k[: full.shape[1]],
+                        sin_k[: full.shape[1]])
+    k_rope = jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.rope_dims,))
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, k_rope], -1)
+    o = ops.attention(qf, kf, vv, causal=True, q_offset=pos,
+                      block_k=ctx.rc.attn_block_k)
+    y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
+    return y, {"ckv": cache_new}
+
+
+def mamba_cached(ctx, params, pfx, x, cache, pos):
+    """Prefill runs the chunked scan (state out); decode steps the SSM."""
+    cfg = ctx.cfg
+    mc, di, dt_rank = _mamba_dims(cfg)
+    n = mc.d_state
+    b, s, d = x.shape
+    if s == 1:
+        return mamba_decode(ctx, params, pfx, x, cache, pos)
+    xz = jnp.einsum("bsd,de->bse", x, params[f"{pfx}.w_in"])
+    xs, z = xz[..., :di], xz[..., di:]
+    pad = jnp.pad(xs, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    cw = params[f"{pfx}.conv_w"]
+    out = sum(pad[:, i: i + s] * cw[i][None, None]
+              for i in range(mc.d_conv)) + params[f"{pfx}.conv_b"]
+    xs_c = jax.nn.silu(out)
+    bcdt = jnp.einsum("bse,er->bsr", xs_c, params[f"{pfx}.w_x"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", bcdt[..., :dt_rank], params[f"{pfx}.w_dt"])
+        + params[f"{pfx}.dt_bias"]).astype(jnp.float32)
+    Bm = bcdt[..., dt_rank: dt_rank + n].astype(jnp.float32)
+    Cm = bcdt[..., dt_rank + n:].astype(jnp.float32)
+    A = -jnp.exp(params[f"{pfx}.A_log"].astype(jnp.float32))
+    y, h = ops.selective_scan(
+        xs_c.astype(jnp.float32), dt, A, Bm, Cm,
+        params[f"{pfx}.Dd"].astype(jnp.float32), return_state=True)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, params[f"{pfx}.w_out"])
+    conv_state = xs[:, -(mc.d_conv - 1):]
+    return y, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}
+
+
+def mlstm_cached(ctx, params, pfx, x, cache, pos):
+    cfg = ctx.cfg
+    if x.shape[1] == 1:
+        return mlstm_decode(ctx, params, pfx, x, cache, pos)
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    up = jnp.einsum("bsd,de->bse", x, params[f"{pfx}.w_up"])
+    xb, z = up[..., :di], up[..., di:]
+    q = jnp.einsum("bse,ehf->bshf", xb, params[f"{pfx}.wq"])
+    k = jnp.einsum("bse,ehf->bshf", xb, params[f"{pfx}.wk"])
+    v = jnp.einsum("bse,ehf->bshf", xb, params[f"{pfx}.wv"])
+    gates = jnp.einsum("bse,egh->bsgh", xb.astype(jnp.float32),
+                       params[f"{pfx}.w_if"].astype(jnp.float32))
+    gates = gates + params[f"{pfx}.if_bias"]
+    ig, fg = gates[:, :, 0], gates[:, :, 1] + 1.0
+    y, state = ops.mlstm_chunkwise(q, k, v, ig, fg, return_state=True)
+    y = y.reshape(y.shape[0], y.shape[1], -1)
+    y = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    y = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                   params[f"{pfx}.w_out"])
+    return y, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def slstm_cached(ctx, params, pfx, x, cache, pos):
+    if x.shape[1] == 1:
+        return slstm_decode(ctx, params, pfx, x, cache, pos)
+    g = jnp.einsum("bsd,dhge->bshge", x, params[f"{pfx}.w_gates"])
+    g = g + params[f"{pfx}.g_bias"]
+    state = (cache["c"], cache["n"], cache["m"])
+    y, state = ops.slstm_scan(g, state=state, return_state=True)
+    y = y.reshape(x.shape[0], x.shape[1], -1).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, params[f"{pfx}.w_out"])
+    return y, {"c": state[0], "n": state[1], "m": state[2]}

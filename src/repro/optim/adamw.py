@@ -1,0 +1,105 @@
+"""Zero-redundancy AdamW over the runtime's sharded parameter layout.
+
+Optimizer states live in exactly the same sharding as the parameters
+(stage-stacked [M·V, ...], FSDP-sharded over "data"), so the update is a
+pure element-wise map with no communication — the grads arriving from the
+pipeline are already reduce-scattered to matching shards (§3.3).
+
+Master weights fp32; moments fp32 or bf16 (``rc.opt_moment_dtype``) — the
+bf16 option halves optimizer HBM at scale (DESIGN.md hardware notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # parameters whose name contains any of these skip weight decay
+    no_decay: tuple = ("norm", "bias", "scale", "A_log", "Dd", "dt_bias")
+
+
+def init_state(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+    }
+
+
+def _decay_mask(params, cfg: AdamWConfig):
+    def mask(path, _):
+        name = jax.tree_util.keystr(path)
+        return not any(t in name for t in cfg.no_decay)
+
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def global_norm(grads):
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    mdt = jnp.dtype(cfg.moment_dtype)
+    decay = _decay_mask(params, cfg)
+
+    def upd(p, g, master, m, v, dec):
+        gf = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if dec:
+            delta = delta + cfg.weight_decay * master
+        new_master = master - lr * delta
+        return new_master.astype(p.dtype), new_master, m2.astype(mdt), \
+            v2.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["master"], state["m"],
+                       state["v"], decay)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {
+        "step": step,
+        "master": jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+        "m": jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple)),
+        "v": jax.tree.map(lambda o: o[3], out,
+                          is_leaf=lambda x: isinstance(x, tuple)),
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def lr_schedule(step, *, base_lr, warmup=100, total=10_000,
+                min_ratio=0.1):
+    """Linear warmup + cosine decay (returns a multiplier for base_lr)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,59 @@
+"""Tiny property-based testing shim.
+
+``hypothesis`` is not installable in this offline container, so we provide a
+minimal seeded random-sweep decorator with the same spirit: each test runs
+over N randomized cases drawn from explicit strategies, with the failing
+seed printed for reproduction.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "12"))
+
+
+class Draw:
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def ints(self, lo: int, hi: int) -> int:
+        """Inclusive range."""
+        return int(self.rng.integers(lo, hi + 1))
+
+    def choice(self, xs):
+        return xs[int(self.rng.integers(0, len(xs)))]
+
+    def floats(self, lo: float, hi: float) -> float:
+        return float(self.rng.uniform(lo, hi))
+
+    def bool(self) -> bool:
+        return bool(self.rng.integers(0, 2))
+
+
+def propcase(n_cases: int | None = None, seed: int = 0):
+    """Decorator: run ``fn(draw)`` for n randomized cases."""
+
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — pytest must not see the
+        # inner function's `draw` parameter (it would treat it as a fixture).
+        def wrapper():
+            n = n_cases or N_CASES
+            for case in range(n):
+                rng = np.random.default_rng(seed * 7919 + case)
+                try:
+                    fn(Draw(rng))
+                except Exception as e:  # pragma: no cover
+                    raise AssertionError(
+                        f"property case {case} (seed={seed * 7919 + case}) "
+                        f"failed: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis
+from repro.core.generators import SchedParams, generate
+from repro.core.schedules import B, F, W
+from repro.core.simulator import CostModel, simulate
+from repro.core.tape import Tape, compute_dw
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    P=st.sampled_from([2, 3, 4, 6, 8]),
+    V=st.integers(1, 3),
+    mult=st.integers(1, 3),
+    unit_div=st.sampled_from([1, 2, 4]),
+    method=st.sampled_from(["gpipe", "1f1b", "bfs", "zeropp",
+                            "interleaved"]),
+)
+def test_any_generated_schedule_is_valid(P, V, mult, unit_div, method):
+    """Every generated table satisfies placement, completeness and
+    dependency invariants, for arbitrary geometry."""
+    n_mb = mult * P
+    unit = max(1, n_mb // unit_div)
+    split = method == "zeropp"
+    tt = generate(method, SchedParams(P=P, V=V, n_mb=n_mb, unit=unit,
+                                      split_bw=split))
+    tt.validate()
+    c = tt.counts()
+    assert c["F"] == n_mb * P * V
+    if split:
+        assert c["W"] == c["B"] == c["F"]
+
+
+@settings(**SETTINGS)
+@given(
+    P=st.sampled_from([2, 4]),
+    V=st.integers(1, 2),
+    mult=st.integers(1, 3),
+    t_w=st.floats(0.25, 2.0),
+    gather=st.floats(0.0, 1.0),
+)
+def test_simulator_conservation_and_bounds(P, V, mult, t_w, gather):
+    """Busy time is conserved; makespan ≥ critical path lower bound."""
+    n_mb = mult * P
+    cm = CostModel(t_f=1.0, t_b=2.0, t_w=t_w, t_p2p=0.01,
+                   t_gather=gather, t_reduce=gather)
+    tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=n_mb))
+    r = simulate(tt, cm)
+    work = n_mb * V * (cm.t_f + cm.t_b + cm.t_w)
+    assert np.allclose(r.busy, work)
+    assert r.makespan >= work - 1e-9
+    assert r.makespan <= work * (1 + 2.0 * P / max(n_mb, 1)) + \
+        r.comm_busy.max() + P * V * (cm.t_f + cm.t_b) + 10 * gather
+
+
+@settings(**SETTINGS)
+@given(
+    B_=st.sampled_from([8, 16, 32]),
+    P=st.sampled_from([2, 4, 8]),
+    V=st.integers(1, 4),
+    L_mult=st.integers(1, 4),
+)
+def test_zeropp_commutes_less_than_fs1f1b(B_, P, V, L_mult):
+    """§3.4: FS-ZeroPP's gather count is strictly below FS-1F1B's for any
+    geometry with U ≥ 2 (the paper's headline communication claim)."""
+    L = P * V * L_mult
+    for U in (2, max(2, B_ // 2), B_):
+        z = analysis.n_allgather(B=B_, L=L, V=V, U=U, P=P)
+        f = 2 * B_ * L / P
+        assert z < f
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([4, 8, 16]),
+    batch=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+    depth=st.integers(1, 3),
+)
+def test_tape_split_backward_matches_jax_grad(d, batch, seed, depth):
+    """dx from B plus dW from W equals jax.grad, for random chains."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, depth + 1)
+    params = {f"w{i}": jax.random.normal(ks[i], (d, d)) * 0.3
+              for i in range(depth)}
+    x = jax.random.normal(ks[-1], (batch, d))
+
+    def apply(params, x, mode):
+        t = Tape(params, mode=mode)
+        v = t.value(x)
+        for i in range(depth):
+            v = t.dense(v, f"w{i}", "bd,de->be")
+            v = t.elementwise(jnp.tanh, v)
+        return t, v
+
+    def loss(params, x):
+        _, v = apply(params, x, "fwd")
+        return jnp.sum(v.val ** 2)
+
+    gp, gx = jax.grad(loss, argnums=(0, 1))(params, x)
+    t, out = apply(params, x, "bwd")
+    cots, igrads, stash = t.backward({out.idx: 2 * out.val})
+    dws = compute_dw(stash)
+    np.testing.assert_allclose(cots[1], gx, rtol=1e-4, atol=1e-5)
+    for i in range(depth):
+        np.testing.assert_allclose(dws[f"w{i}"], gp[f"w{i}"], rtol=1e-4,
+                                   atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 50, 64]),
+    d=st.sampled_from([8, 16]),
+    vocab=st.sampled_from([40, 128, 200]),
+    chunk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 1000),
+)
+def test_chunked_xent_invariant_to_chunking(n, d, vocab, chunk, seed):
+    """ref.softmax_xent must be exactly chunk-size-invariant."""
+    from repro.kernels import ref
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = jax.random.normal(ks[0], (n, d)) * 0.5
+    w = jax.random.normal(ks[1], (d, vocab)) * 0.2
+    labels = jax.random.randint(ks[2], (n,), 0, vocab)
+    l1, (dh1, dw1) = ref.softmax_xent(h, w, labels, chunk=chunk)
+    l2, (dh2, dw2) = ref.softmax_xent(h, w, labels, chunk=vocab)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    np.testing.assert_allclose(dh1, dh2, atol=1e-6)
+    np.testing.assert_allclose(dw1, dw2, atol=1e-6)

@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_xent import softmax_xent
+from repro.kernels.selective_scan import selective_scan
+from tests.proptest import propcase
+
+
+@propcase(n_cases=10)
+def test_flash_attention_sweep(draw):
+    b = draw.ints(1, 2)
+    h = draw.choice([2, 4, 8])
+    g = draw.choice([x for x in (1, 2, 4) if h % x == 0])
+    e = draw.choice([32, 64])
+    ev = draw.choice([e, e // 2])
+    sq = draw.choice([64, 128, 200, 256])
+    sk = draw.choice([sq, 2 * sq])
+    causal = draw.bool() if sq == sk else False
+    dtype = draw.choice([jnp.float32, jnp.bfloat16])
+    q = jax.random.normal(jax.random.PRNGKey(draw.ints(0, 99)),
+                          (b, sq, h, e)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sk, g, e)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sk, g, ev)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=causal, block_k=128)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_attention_matches_naive_oracle():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 2, 32))
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@propcase(n_cases=8)
+def test_selective_scan_sweep(draw):
+    b = draw.ints(1, 2)
+    s = draw.choice([64, 130, 256])
+    d = draw.choice([64, 128, 192])
+    n = draw.choice([4, 8, 16])
+    ks = jax.random.split(jax.random.PRNGKey(draw.ints(0, 99)), 6)
+    x = jax.random.normal(ks[0], (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)) * 0.5)
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (d,))
+    got = selective_scan(x, dt, A, B, C, D, chunk=64, block_d=64,
+                         interpret=True)
+    want = ref.selective_scan(x, dt, A, B, C, D, chunk=128)
+    np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+def test_selective_scan_matches_sequential():
+    b, s, d, n = 1, 100, 32, 4
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    x = jax.random.normal(ks[0], (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (d,))
+    h = jnp.zeros((b, d, n))
+    ys = []
+    for t in range(s):
+        h, y = ref.selective_scan_step(h, x[:, t], dt[:, t], A, B[:, t],
+                                       C[:, t], D)
+        ys.append(y)
+    seq = jnp.stack(ys, 1)
+    got = selective_scan(x, dt, A, B, C, D, chunk=32, block_d=32,
+                         interpret=True)
+    np.testing.assert_allclose(got, seq, atol=5e-4)
+
+
+@propcase(n_cases=6)
+def test_fused_xent_sweep(draw):
+    n = draw.choice([64, 200, 256])
+    d = draw.choice([32, 64])
+    v = draw.choice([500, 1000, 1024])
+    ks = jax.random.split(jax.random.PRNGKey(draw.ints(0, 99)), 3)
+    h = jax.random.normal(ks[0], (n, d)) * 0.5
+    w = jax.random.normal(ks[1], (d, v)) * 0.1
+    labels = jax.random.randint(ks[2], (n,), 0, v)
+    loss_k, (dh_k, dw_k) = softmax_xent(h, w, labels, block_n=128,
+                                        block_v=256, interpret=True)
+    loss_r, (dh_r, dw_r) = ref.softmax_xent(h, w, labels, chunk=256)
+    assert abs(float(loss_k) - float(loss_r)) < 1e-4
+    np.testing.assert_allclose(dh_k, dh_r, atol=1e-5)
+    np.testing.assert_allclose(dw_k, dw_r, atol=1e-5)
+
+
+def test_xent_ref_matches_autodiff():
+    n, d, v = 64, 16, 300
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (n, d)) * 0.5
+    w = jax.random.normal(ks[1], (d, v)) * 0.2
+    labels = jax.random.randint(ks[2], (n,), 0, v)
+    loss_r, (dh_r, dw_r) = ref.softmax_xent(h, w, labels, chunk=128)
+    l_n, (gh, gw) = jax.value_and_grad(
+        lambda h, w: ref.softmax_xent_naive(h, w, labels),
+        argnums=(0, 1))(h, w)
+    assert abs(float(loss_r) - float(l_n)) < 1e-5
+    np.testing.assert_allclose(dh_r, gh, atol=1e-5)
+    np.testing.assert_allclose(dw_r, gw, atol=1e-5)
+
+
+def test_mlstm_chunkwise_matches_step():
+    b, s, h, e = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (b, s, h, e))
+    k = jax.random.normal(ks[1], (b, s, h, e))
+    v = jax.random.normal(ks[2], (b, s, h, e))
+    ig = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    fg = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    got = ref.mlstm_chunkwise(q, k, v, ig, fg, chunk=16)
+    state = None
+    ys = []
+    C = jnp.zeros((b, h, e, e))
+    nrm = jnp.zeros((b, h, e))
+    m = jnp.zeros((b, h))
+    st = (C, nrm, m)
+    for t in range(s):
+        st, y = ref.mlstm_step(st, q[:, t], k[:, t], v[:, t], ig[:, t],
+                               fg[:, t])
+        ys.append(y)
+    seq = jnp.stack(ys, 1)
+    np.testing.assert_allclose(got, seq, atol=2e-4)
+
+
+def test_slstm_state_continuity():
+    b, s, h, e = 2, 32, 2, 8
+    g = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, 4, e))
+    full = ref.slstm_scan(g)
+    y1, st = ref.slstm_scan(g[:, :16], return_state=True)
+    y2 = ref.slstm_scan(g[:, 16:], state=st)
+    np.testing.assert_allclose(
+        jnp.concatenate([y1, y2], 1), full, atol=1e-5)

@@ -1,0 +1,142 @@
+"""Optimizer / data / checkpoint / fault-tolerance substrate tests."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticStream
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import (
+    FaultToleranceConfig,
+    StragglerWatchdog,
+    TrainController,
+)
+from tests.proptest import propcase
+
+
+# --------------------------------------------------------------------------- #
+def test_adamw_optimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.ones((8,)) * 3.0}
+    st = adamw.init_state(params, cfg)
+    target = jnp.arange(8.0) / 4.0
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, st, m = adamw.apply_updates(params, st, g, cfg) if False \
+            else adamw.apply_updates(params, g, st, cfg)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_adamw_grad_clip_and_decay_mask():
+    cfg = adamw.AdamWConfig(lr=0.0, weight_decay=1.0, grad_clip=1.0)
+    params = {"w": jnp.ones((4,)), "ln.scale": jnp.ones((4,))}
+    st = adamw.init_state(params, cfg)
+    g = {"w": jnp.ones((4,)) * 100.0, "ln.scale": jnp.ones((4,))}
+    p2, st, m = adamw.apply_updates(params, g, st, cfg)
+    assert float(m["grad_norm"]) > 100
+    # lr = 0 → params unchanged regardless of decay
+    np.testing.assert_allclose(p2["w"], params["w"])
+
+
+def test_lr_schedule_shape():
+    s = jnp.arange(0, 2000, 100)
+    mult = jax.vmap(lambda x: adamw.lr_schedule(
+        x, base_lr=1.0, warmup=200, total=2000))(s)
+    assert float(mult[0]) == 0.0
+    assert float(mult[2]) == pytest.approx(1.0, abs=1e-3)
+    assert float(mult[-1]) < 0.3
+
+
+# --------------------------------------------------------------------------- #
+def test_data_stream_deterministic_and_elastic():
+    cfg = DataConfig(seq_len=16, global_batch=8, vocab=97)
+    s1 = SyntheticStream(cfg)
+    b1 = s1.batch(3)
+    b2 = SyntheticStream(cfg).batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # global sample stream is independent of batch re-layout
+    cfg2 = DataConfig(seq_len=16, global_batch=4, vocab=97)
+    s2 = SyntheticStream(cfg2)
+    np.testing.assert_array_equal(
+        np.concatenate([s2.batch(6)["tokens"], s2.batch(7)["tokens"]]),
+        b1["tokens"],
+    )
+    # labels = next tokens (LM objective is learnable)
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+
+
+def test_prefetcher_cursor():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab=31)
+    pf = Prefetcher(SyntheticStream(cfg), start_step=5)
+    s, b = next(pf)
+    assert s == 5
+    s, b = next(pf)
+    assert s == 6
+    assert pf.state()["step"] == 7
+    pf.close()
+
+
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.list_steps() == [20, 30]  # keep-2 GC
+    got, manifest = mgr.restore(30)
+    np.testing.assert_allclose(got["a"], np.asarray(tree["a"]) + 30)
+    assert manifest["step"] == 30
+    assert mgr.verify(30)
+
+
+def test_checkpoint_async_and_corruption_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.ones((8, 8))}
+    mgr.save(1, tree, blocking=False)
+    mgr.save(2, tree, blocking=False)
+    mgr.wait()
+    assert set(mgr.list_steps()) == {1, 2}
+    # corrupt step 2
+    path = os.path.join(str(tmp_path), "step_000000002", "w.npy")
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+    ctl = TrainController(str(tmp_path), FaultToleranceConfig())
+    tree2, manifest = ctl.restore_latest()
+    assert manifest["step"] == 1  # fell back past the corrupt step
+
+
+def test_controller_restart_from_failure(tmp_path):
+    ft = FaultToleranceConfig(ckpt_every=2, max_failures=3,
+                              async_save=False)
+    ctl = TrainController(str(tmp_path), ft)
+    calls = {"builds": 0}
+
+    def build(restored, manifest):
+        calls["builds"] += 1
+        start = (manifest or {}).get("extra", {}).get("step", 0)
+        state = {"x": jnp.asarray(restored["x"]) if restored
+                 else jnp.zeros(())}
+
+        def run_one(state, step):
+            return {"x": state["x"] + 1.0}, {"x": float(state["x"])}
+
+        return state, run_one, lambda s: s
+
+    state, hist = ctl.run(build, total_steps=10, inject_failure_at=5)
+    assert calls["builds"] == 2          # one restart
+    assert float(state["x"]) >= 6.0      # resumed from step-4 checkpoint
+    assert ctl.failures == 1
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(FaultToleranceConfig(straggler_factor=2.0))
+    for _ in range(10):
+        wd.observe(0.1)
+    assert wd.flags == 0
+    assert wd.observe(1.0)  # 10× slower
+    assert wd.flags == 1
