@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.api import ensure_host_devices, session
+
+ensure_host_devices(512, force=True)
 
 """§Perf hillclimbing driver: hypothesis → change → re-lower → re-analyse.
 
@@ -12,45 +15,23 @@ append to results/hillclimb.jsonl; EXPERIMENTS.md §Perf narrates them.
 """
 
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 
-import jax  # noqa: E402
-
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models import model as M  # noqa: E402
 from repro.models.common import SHAPES  # noqa: E402
 
 
 def measure(arch, shape, rc_overrides, label):
-    from repro.core.pipeline import (Runtime, init_serve_caches,
-                                     make_serve_step, make_train_step)
     import benchmarks.roofline as RL
 
     shape_cfg = SHAPES[shape]
-    mod = M.get_arch(arch)
-    cfg = mod.config()
-    rc = dataclasses.replace(mod.production_run(shape), **rc_overrides)
-    mesh = make_production_mesh()
-    rt = Runtime(cfg, rc, mesh)
-    params = rt.param_shapes()
-    batch = rt.input_specs(shape_cfg)
+    sess = session(arch, mode="dry-run", shape=shape, reduced=False,
+                   overrides=rc_overrides)
     t0 = time.time()
-    if shape_cfg.kind == "train":
-        step = make_train_step(rt, shape_cfg)
-        compiled = step.lower(params, batch).compile()
-    else:
-        prompt = 1 if shape_cfg.kind == "decode" else min(
-            shape_cfg.seq_len, 448 if cfg.encdec else shape_cfg.seq_len)
-        caches = init_serve_caches(rt, shape_cfg,
-                                   max_seq=shape_cfg.seq_len)
-        step = make_serve_step(rt, shape_cfg, prompt_len=prompt,
-                               max_seq=shape_cfg.seq_len)
-        compiled = step.lower(params, caches, batch).compile()
+    compiled = sess.lower().compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
-    roof = RL.analyze_cell(rt, shape_cfg)
+    roof = RL.analyze_cell(sess.rt, shape_cfg)
     rec = {
         "cell": f"{arch}×{shape}", "label": label,
         "overrides": {k: str(v) for k, v in rc_overrides.items()},

@@ -12,9 +12,9 @@ import time
 
 import numpy as np
 
+from repro.api import SchedParams, generate_schedule, get_arch
 from repro.core import analysis
 from repro.core.autogen import autogen
-from repro.core.generators import SchedParams, generate
 from repro.core.simulator import (
     A800,
     CostModel,
@@ -22,7 +22,6 @@ from repro.core.simulator import (
     cost_model_for,
     simulate,
 )
-from repro.models import model as M
 
 
 def _gpt_cost(size: str, *, P: int, V: int, dp: int, seq: int = 1024,
@@ -30,7 +29,7 @@ def _gpt_cost(size: str, *, P: int, V: int, dp: int, seq: int = 1024,
               cross_node_dp: bool = False, hw=A800):
     """Cost model matching the paper's setting: no activation
     recomputation (their Table 2 memory model), A800 GEMM rates."""
-    cfg = M.get_arch("gpt_paper").config(size)
+    cfg = get_arch("gpt_paper").config(size)
     d, L = cfg.d_model, cfg.n_layers
     layer_flops = 2 * (12 * d * d) * seq * mbs + 2 * seq * seq * d * mbs
     act_bytes = seq * mbs * d * 2
@@ -58,7 +57,7 @@ def _gpt_cost(size: str, *, P: int, V: int, dp: int, seq: int = 1024,
 
 def _ddp_allreduce_s(size: str, hw=A800, cross=False) -> float:
     """Full-gradient ring all-reduce each step (DDP baselines)."""
-    cfg = M.get_arch("gpt_paper").config(size)
+    cfg = get_arch("gpt_paper").config(size)
     d, L = cfg.d_model, cfg.n_layers
     grad_bytes = 12 * d * d * L * 2
     bw = hw.link_bw if cross else hw.intra_bw
@@ -92,7 +91,7 @@ def table3(sizes=("1.5B", "6.2B", "14.6B"), micro=(8, 16, 32), P=4, dp=4):
                     for U in sorted({B, 16, 8, 4}, reverse=True):
                         if U > B:
                             continue
-                        tt = generate(method, SchedParams(
+                        tt = generate_schedule(method, SchedParams(
                             P=P, V=V, n_mb=B, split_bw=split, unit=U))
                         r2 = simulate(tt, cm)
                         if r2.peak_mem / 1e9 <= 80.0 and (
@@ -104,7 +103,7 @@ def table3(sizes=("1.5B", "6.2B", "14.6B"), micro=(8, 16, 32), P=4, dp=4):
                     U = min(B, 8)
                     sp = SchedParams(P=P, V=V, n_mb=B, split_bw=split,
                                      unit=U if method == "zeropp" else B)
-                    tt = generate(method, sp)
+                    tt = generate_schedule(method, sp)
                     if not fsdp:
                         tt.gather = None
                         tt.reduce = None
@@ -133,7 +132,7 @@ def table5_fig5(size="6.2B", B=32, P=4, V=2, dp=4):
     print(f"\n=== Fig 5 (U sweep, {size}, B={B}) ===")
     for U in (2, 4, 7, 8, 16, 32):
         cfg, cm = _gpt_cost(size, P=P, V=V, dp=dp, split=True)
-        tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
+        tt = generate_schedule("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
         res = simulate(tt, cm)
         print(f"  U={U:3d}  makespan={res.makespan:8.4f}s "
               f"bubble={res.bubble_frac:.3f} mem={res.peak_mem / 1e9:6.2f}GB"
@@ -150,7 +149,7 @@ def fig6(size="14.6B", B=16, P=4, dp=4):
     print(f"\n=== Fig 6 (V sweep, {size}) ===")
     for V in (1, 2, 3, 4):
         cfg, cm = _gpt_cost(size, P=P, V=V, dp=dp, split=True)
-        tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=B))
+        tt = generate_schedule("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=B))
         res = simulate(tt, cm)
         print(f"  V={V}  makespan={res.makespan:8.4f}s "
               f"bubble={res.bubble_frac:.3f} "
@@ -169,7 +168,7 @@ def fig7(size="6.2B", global_samples=64, P=4):
         B = max(global_samples // dp, 1)
         cfg, cm = _gpt_cost(size, P=P, V=2, dp=dp, split=True,
                             cross_node_dp=cross)
-        tt = generate("zeropp", SchedParams(P=P, V=2, n_mb=B,
+        tt = generate_schedule("zeropp", SchedParams(P=P, V=2, n_mb=B,
                                             unit=min(B, 2 * P - 1)))
         res = simulate(tt, cm)
         thpt = global_samples / res.makespan / (P * dp)
@@ -204,7 +203,7 @@ def autogen_bench(P=4, V=2, B=8):
     rows = []
     cfg, cm = _gpt_cost("6.2B", P=P, V=V, dp=4, split=True)
     res = autogen(SchedParams(P=P, V=V, n_mb=B), cm)
-    greedy = simulate(generate("zeropp", SchedParams(P=P, V=V, n_mb=B)), cm)
+    greedy = simulate(generate_schedule("zeropp", SchedParams(P=P, V=V, n_mb=B)), cm)
     print(f"\n=== §4 auto-generation (P={P} V={V} B={B}) ===")
     print(f"  postponed-W start: {res.makespan_before:.4f}s")
     print(f"  after heuristic:   {res.makespan_after:.4f}s "

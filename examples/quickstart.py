@@ -2,57 +2,44 @@
 CPU devices (P=2 pipeline × 4-way FSDP), watch the loss fall.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Everything goes through the ``repro.api`` Session facade — this file is
+the canonical "single-GPU-style user code" the paper promises.
 """
 
-import os
+from repro.api import ensure_host_devices, session
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
-
-import dataclasses  # noqa: E402
+ensure_host_devices(8)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.pipeline import Runtime, make_train_step  # noqa: E402
-from repro.data.pipeline import DataConfig, SyntheticStream  # noqa: E402
-from repro.models import model as M  # noqa: E402
-from repro.models.common import ShapeConfig  # noqa: E402
-from repro.optim import adamw  # noqa: E402
-
 
 def main():
-    cfg, rc = M.get_arch("llama3.2-1b").reduced()
-    rc = dataclasses.replace(rc, microbatches=4, unit=2)  # ZeroPP units!
-    geo = M.build_geometry(cfg, rc)
-    mesh = jax.make_mesh((8 // geo.model_ranks, geo.model_ranks),
-                         ("data", "model"))
-    rt = Runtime(cfg, rc, mesh)
+    sess = session(
+        "llama3.2-1b",
+        overrides=dict(microbatches=4, unit=2),  # ZeroPP units!
+        seq_len=32,
+        optim=dict(lr=3e-3),
+    )
+    d = sess.describe()
+    print(f"training {sess.cfg.name}: P={sess.rc.pp} V={sess.rc.vpp} "
+          f"FSDP={sess.data_size} schedule={sess.rc.schedule} "
+          f"U={sess.rc.unit_size} "
+          f"bubble={d['schedule']['bubble_ratio']:.3f}")
 
-    gb, seq = 4 * rc.microbatches, 32
-    shape = ShapeConfig("quickstart", seq, gb, "train")
-    step = make_train_step(rt, shape)
+    params = sess.init_params(jax.random.PRNGKey(0))
+    opt = sess.init_opt_state(params)
+    stream = sess.stream()
 
-    params = rt.init_params(jax.random.PRNGKey(0))
-    opt_cfg = adamw.AdamWConfig(lr=3e-3)
-    opt = adamw.init_state(params, opt_cfg)
-    stream = SyntheticStream(DataConfig(seq_len=seq, global_batch=gb,
-                                        vocab=cfg.vocab))
-
-    @jax.jit
-    def update(params, grads, opt):
-        return adamw.apply_updates(params, grads, opt, opt_cfg)
-
-    print(f"training {cfg.name}: P={rc.pp} V={rc.vpp} FSDP=4 "
-          f"schedule={rc.schedule} U={rc.unit_size}")
     for s in range(60):
-        grads, metrics = step(params, stream.batch(s))
-        params, opt, om = update(params, grads, opt)
+        grads, metrics = sess.train_step(params, stream.batch(s))
+        params, opt, om = sess.opt_step(params, grads, opt)
         if s % 10 == 0 or s == 59:
             print(f"  step {s:3d} loss {float(metrics['loss_sum']):.4f} "
                   f"gnorm {float(om['grad_norm']):.2f}")
     print("done — loss should be well below ln(vocab) =",
-          f"{jnp.log(cfg.vocab):.2f}")
+          f"{jnp.log(sess.cfg.vocab):.2f}")
 
 
 if __name__ == "__main__":

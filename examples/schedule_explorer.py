@@ -5,14 +5,15 @@
 
 import sys
 
+from repro.api import SchedParams, generate_schedule, list_schedules
 from repro.core.autogen import autogen
-from repro.core.generators import SchedParams, generate
 from repro.core.simulator import CostModel, simulate
 
 P, V, B, U = (int(x) for x in (sys.argv[1:] + [4, 3, 7, 7][len(sys.argv) - 1:]))
 
+print(f"registered schedules: {', '.join(list_schedules())}")
 print(f"=== ZeroPP (paper Fig. 2 setting: P={P} V={V} B={B} U={U}) ===")
-tt = generate("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
+tt = generate_schedule("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
 tt.validate()
 print(tt.render())
 print(f"tick-bubbles: {tt.bubble_ratio():.3f}   "
@@ -23,8 +24,8 @@ for m, split in (("gpipe", False), ("1f1b", False), ("interleaved", False),
                  ("bfs", False), ("zeropp", True)):
     cmx = cm if split else CostModel(t_f=1, t_b=3, t_w=0, t_p2p=0.02,
                                      t_gather=0.3, t_reduce=0.3)
-    r = simulate(generate(m, SchedParams(P=P, V=V, n_mb=B,
-                                         split_bw=split)), cmx)
+    r = simulate(generate_schedule(m, SchedParams(P=P, V=V, n_mb=B,
+                                                  split_bw=split)), cmx)
     print(f"{m:12s} makespan={r.makespan:7.2f} bubble={r.bubble_frac:.3f} "
           f"peak_mem={r.peak_mem:.1f}")
 

@@ -4,11 +4,9 @@ decode with per-stage KV caches flowing through the pipeline.
     PYTHONPATH=src python examples/serve_decode.py
 """
 
-import os
+from repro.api import ensure_host_devices
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
-os.environ.setdefault("SPMD_DEVICES", "8")
+ensure_host_devices(8)
 
 import sys  # noqa: E402
 

@@ -5,11 +5,9 @@ scenario at laptop scale.
     PYTHONPATH=src python examples/train_gpt.py [--steps 200]
 """
 
-import os
+from repro.api import ensure_host_devices
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
-os.environ.setdefault("SPMD_DEVICES", "8")
+ensure_host_devices(8)
 
 import argparse  # noqa: E402
 import sys  # noqa: E402

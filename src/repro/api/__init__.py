@@ -1,0 +1,55 @@
+"""repro.api — the single public facade over the ZeroPP runtime.
+
+Entry points (examples, launchers, benchmarks) go through this surface
+only; nothing outside ``src/repro`` should construct ``Runtime`` or the
+``make_*_step`` builders directly::
+
+    from repro.api import ensure_host_devices, session
+
+    ensure_host_devices(8)                 # before any other JAX use
+    sess = session("llama3.2-1b",
+                   overrides=dict(microbatches=4, unit=2))
+    grads, metrics = sess.train_step(params, batch)
+
+Submodules load lazily (PEP 562) so that ``ensure_host_devices`` — which
+must run before the JAX backend initializes — can be imported without
+pulling in JAX, and so ``repro.api.registry`` stays import-light for the
+core modules that register their built-ins here.
+"""
+
+_EXPORTS = {
+    "ensure_host_devices": ("repro.api.devices", "ensure_host_devices"),
+    "session": ("repro.api.session", "session"),
+    "Session": ("repro.api.session", "Session"),
+    "SessionSpec": ("repro.api.spec", "SessionSpec"),
+    "SessionError": ("repro.api.spec", "SessionError"),
+    "RegistryError": ("repro.api.registry", "RegistryError"),
+    "register_arch": ("repro.api.registry", "register_arch"),
+    "register_schedule": ("repro.api.registry", "register_schedule"),
+    "get_arch": ("repro.api.registry", "get_arch"),
+    "list_archs": ("repro.api.registry", "list_archs"),
+    "list_schedules": ("repro.api.registry", "list_schedules"),
+    "generate_schedule": ("repro.api.registry", "generate_schedule"),
+    "SchedParams": ("repro.core.generators", "SchedParams"),
+    "greedy_schedule": ("repro.core.generators", "greedy_schedule"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.api' has no attribute {name!r}; public "
+            f"surface: {', '.join(__all__)}") from None
+    import importlib
+
+    obj = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = obj
+    return obj
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,226 @@
+"""Plug-in registries for architectures and pipeline schedules.
+
+This module is deliberately import-light (stdlib only) so that it can be
+imported from anywhere — ``repro.core.generators`` registers the built-in
+schedules here at import time, and ``repro.models.model`` resolves
+architectures through it — without creating import cycles.
+
+Architectures
+-------------
+An architecture entry is anything exposing the config-module protocol
+(``config()``, ``production_run(shape)``, ``reduced()`` — see
+``repro/configs/_base.py``). Built-ins are registered lazily by module
+path; user archs plug in with the decorator::
+
+    @repro.api.register_arch("my-arch", aliases=("my_arch",))
+    class MyArch:
+        @staticmethod
+        def reduced(): ...
+
+Schedules
+---------
+A schedule entry is a callable ``(SchedParams) -> TickTable``. Built-ins
+(zeropp / gpipe / 1f1b / interleaved / bfs / fwd_only) live in
+``repro.core.generators``; new ones plug in without touching core files::
+
+    @repro.api.register_schedule("my-sched")
+    def my_sched(sp):
+        return repro.api.greedy_schedule(sp, my_priority, name="my-sched")
+"""
+
+from __future__ import annotations
+
+import difflib
+import importlib
+from typing import Any, Callable
+
+
+class RegistryError(ValueError):
+    """Unknown or conflicting registry entry (message is actionable)."""
+
+
+class Registry:
+    """Name -> entry mapping with aliases, lazy loading and clear errors."""
+
+    def __init__(self, kind: str, *, preload: str | None = None,
+                 normalize: Callable[[str], str] | None = None,
+                 validate: Callable[[str, Any], None] | None = None,
+                 register_hint: str | None = None):
+        self.kind = kind
+        self._preload = preload      # module that registers the built-ins
+        self._normalize = normalize
+        self._validate = validate
+        self._register_hint = register_hint or f"register_{kind}"
+        self._entries: dict[str, Any] = {}
+        self._aliases: dict[str, str] = {}
+
+    def _ensure_builtins(self) -> None:
+        if self._preload is not None:
+            mod, self._preload = self._preload, None
+            try:
+                importlib.import_module(mod)
+            except BaseException:
+                self._preload = mod  # keep retryable on import failure
+                raise
+
+    # ------------------------------------------------------------------ #
+    def register(self, name: str, obj: Any = None, *,
+                 aliases: tuple[str, ...] = (), overwrite: bool = False):
+        """Register ``obj`` under ``name``; usable as a decorator."""
+        if obj is None:
+            return lambda o: self.register(name, o, aliases=aliases,
+                                           overwrite=overwrite)
+        # load lazy built-ins first so a user registration colliding with
+        # one is rejected here, not blamed on the built-in's own import.
+        # (Re-entrant during the preload module's import: sys.modules
+        # already holds the partial module, so import_module is a no-op.)
+        self._ensure_builtins()
+        taken = [n for n in (name, *aliases)
+                 if n in self._entries or n in self._aliases]
+        if taken and not overwrite:
+            raise RegistryError(
+                f"{self.kind} {taken[0]!r} is already registered; pass "
+                f"overwrite=True to replace it")
+        if self._validate is not None and not isinstance(obj, str):
+            self._validate(name, obj)
+        if overwrite:
+            # drop stale alias mappings so the new entry is reachable
+            # under every name it was registered with
+            for a in (name, *aliases):
+                self._aliases.pop(a, None)
+        self._entries[name] = obj
+        for a in aliases:
+            self._aliases[a] = name
+        return obj
+
+    def canonical(self, name: str) -> str | None:
+        """Resolve a name/alias to its canonical key, or None.
+
+        A direct entry wins over an alias of the same name, so
+        ``register(alias_name, ..., overwrite=True)`` takes effect.
+        """
+        self._ensure_builtins()
+        for cand in ([name, self._normalize(name)] if self._normalize
+                     else [name]):
+            if cand in self._entries:
+                return cand
+            cand = self._aliases.get(cand, cand)
+            if cand in self._entries:
+                return cand
+        return None
+
+    def get(self, name: str) -> Any:
+        key = self.canonical(name)
+        if key is None:
+            known = ", ".join(self.names())
+            close = difflib.get_close_matches(
+                str(name), list(self._entries) + list(self._aliases), n=1)
+            hint = f" (did you mean {close[0]!r}?)" if close else ""
+            raise RegistryError(
+                f"unknown {self.kind} {name!r}{hint}; known: {known}. "
+                f"New {self.kind}s plug in via "
+                f"repro.api.{self._register_hint}.")
+        obj = self._entries[key]
+        if isinstance(obj, str):  # lazy built-in: module path
+            obj = importlib.import_module(obj)
+            self._entries[key] = obj
+        return obj
+
+    def names(self) -> list[str]:
+        self._ensure_builtins()
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return self.canonical(name) is not None
+
+
+# --------------------------------------------------------------------------- #
+# Architecture registry
+# --------------------------------------------------------------------------- #
+
+
+def _arch_normalize(name: str) -> str:
+    return name.replace("-", "_").replace(".", "p")
+
+
+def _arch_validate(name: str, obj: Any) -> None:
+    if not (hasattr(obj, "reduced") or hasattr(obj, "config")):
+        raise RegistryError(
+            f"architecture {name!r} must expose at least one of "
+            f"config()/reduced() (see repro/configs/_base.py for the "
+            f"full protocol)")
+
+
+ARCH_REGISTRY = Registry("architecture", normalize=_arch_normalize,
+                         validate=_arch_validate,
+                         register_hint="register_arch")
+
+_BUILTIN_ARCHS: dict[str, tuple[str, ...]] = {
+    "whisper_large_v3": ("whisper-large-v3",),
+    "qwen2_moe_a2p7b": ("qwen2-moe-a2.7b",),
+    "deepseek_v3_671b": ("deepseek-v3-671b",),
+    "jamba_v0p1_52b": ("jamba-v0.1-52b",),
+    "phi3_vision_4p2b": ("phi-3-vision-4.2b",),
+    "minitron_4b": ("minitron-4b",),
+    "yi_9b": ("yi-9b",),
+    "phi4_mini_3p8b": ("phi4-mini-3.8b",),
+    "llama3p2_1b": ("llama3.2-1b",),
+    "xlstm_1p3b": ("xlstm-1.3b",),
+    "gpt_paper": (),
+}
+for _name, _aliases in _BUILTIN_ARCHS.items():
+    ARCH_REGISTRY.register(_name, f"repro.configs.{_name}",
+                           aliases=_aliases)
+
+
+# --------------------------------------------------------------------------- #
+# Schedule registry
+# --------------------------------------------------------------------------- #
+
+SCHEDULE_REGISTRY = Registry("schedule",
+                             preload="repro.core.generators")
+
+
+# --------------------------------------------------------------------------- #
+# Public helpers (re-exported by repro.api)
+# --------------------------------------------------------------------------- #
+
+
+def register_arch(name: str, obj: Any = None, *,
+                  aliases: tuple[str, ...] = (), overwrite: bool = False):
+    """Register an architecture (decorator-friendly)."""
+    return ARCH_REGISTRY.register(name, obj, aliases=aliases,
+                                  overwrite=overwrite)
+
+
+def register_schedule(name: str, obj: Any = None, *,
+                      aliases: tuple[str, ...] = (),
+                      overwrite: bool = False):
+    """Register a schedule generator ``(SchedParams) -> TickTable``."""
+    return SCHEDULE_REGISTRY.register(name, obj, aliases=aliases,
+                                      overwrite=overwrite)
+
+
+def get_arch(name: str):
+    """Resolve an architecture id (canonical name or alias)."""
+    return ARCH_REGISTRY.get(name)
+
+
+def list_archs() -> list[str]:
+    return ARCH_REGISTRY.names()
+
+
+def list_schedules() -> list[str]:
+    return SCHEDULE_REGISTRY.names()
+
+
+def generate_schedule(method: str, sp=None, **kw):
+    """Build a TickTable for a registered schedule.
+
+    Either pass a ``SchedParams`` as ``sp``, or its fields as keyword
+    arguments (``P=4, V=2, n_mb=8, unit=4, ...``).
+    """
+    if sp is None:
+        from repro.core.generators import SchedParams
+        sp = SchedParams(**kw)
+    return SCHEDULE_REGISTRY.get(method)(sp)

@@ -1,0 +1,316 @@
+"""The Session facade: one object for train / serve / dry-run.
+
+Replaces the hand-assembled ritual (`get_arch -> replace(RunConfig) ->
+build_geometry -> make_mesh -> Runtime -> ShapeConfig -> make_*_step ->
+adamw`) that every entry point used to repeat::
+
+    sess = repro.api.session("llama3.2-1b",
+                             overrides=dict(microbatches=4, unit=2))
+    params = sess.init_params()
+    opt = sess.init_opt_state(params)
+    grads, metrics = sess.train_step(params, sess.stream().batch(0))
+    params, opt, om = sess.opt_step(params, grads, opt)
+
+Heavy state (mesh, Runtime, jitted steps) is built lazily and cached, so
+constructing a Session — and calling ``describe()`` — needs no devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.api.spec import SessionError, SessionSpec
+from repro.core.generators import SchedParams, generate
+from repro.core.pipeline import (
+    Runtime,
+    init_serve_caches,
+    make_serve_step,
+    make_train_step,
+)
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.models import model as M
+from repro.models.common import ShapeConfig
+from repro.optim import adamw
+
+_OPT_FIELDS = {f.name for f in dataclasses.fields(adamw.AdamWConfig)}
+
+
+def session(arch: str, *, mode: str = "train", shape=None, overrides=None,
+            **kw) -> "Session":
+    """Build a validated Session. See SessionSpec for every knob."""
+    spec = SessionSpec(arch=arch, mode=mode, shape=shape,
+                       overrides=dict(overrides or {}), **kw)
+    return Session(spec)
+
+
+class Session:
+    """A bound (arch × RunConfig × shape × mesh) with cached step fns."""
+
+    def __init__(self, spec: SessionSpec):
+        self.spec = spec.validate()
+        self.arch_mod, self.cfg, self.rc = spec.resolve_configs()
+        try:
+            self.geo = M.build_geometry(self.cfg, self.rc)
+        except ValueError as e:
+            raise SessionError(
+                f"invalid geometry for {spec.arch!r}: {e}. Adjust the "
+                "pp/vpp/groups overrides.") from e
+        self._mesh = spec.mesh
+        self._shape_cfg: ShapeConfig | None = (
+            spec.shape if isinstance(spec.shape, ShapeConfig)
+            else M.SHAPES[spec.shape] if isinstance(spec.shape, str)
+            else None)
+        self._data: int | None = spec.data
+        self._rt: Runtime | None = None
+        self._steps: dict[Any, Any] = {}
+
+    # ------------------------------------------------------------------ #
+    # Lazy distribution state
+    # ------------------------------------------------------------------ #
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.spec.multi_pod or self.spec.pods is not None
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            if self.spec.devices is not None:
+                from repro.api.devices import ensure_host_devices
+                ensure_host_devices(self.spec.devices)
+            if not self.spec.reduced:
+                from repro.launch.mesh import make_production_mesh
+                self._mesh = make_production_mesh(
+                    multi_pod=self.spec.multi_pod)
+            else:
+                n_dev = jax.device_count()
+                model = self.geo.model_ranks
+                pods = self.spec.pods or 1
+                data = self._data or max(1, n_dev // (pods * model))
+                self._data = data
+                need = pods * data * model
+                if need > n_dev:
+                    raise SessionError(
+                        f"mesh ({'pods×' if pods > 1 else ''}data×model = "
+                        f"{need}) exceeds the {n_dev} available devices; "
+                        f"call repro.api.ensure_host_devices({need}) "
+                        f"before any other JAX use, or shrink data=/pods=")
+                if pods > 1:
+                    self._mesh = jax.make_mesh(
+                        (pods, data, model), ("pod", "data", "model"))
+                else:
+                    self._mesh = jax.make_mesh((data, model),
+                                               ("data", "model"))
+        return self._mesh
+
+    @property
+    def data_size(self) -> int:
+        if self._data is None:
+            self._data = dict(self.mesh.shape)["data"]
+        return self._data
+
+    @property
+    def shape_cfg(self) -> ShapeConfig:
+        if self._shape_cfg is None:
+            sp = self.spec
+            if sp.mode == "serve":
+                gb = sp.global_batch or 8
+                self._shape_cfg = ShapeConfig("serve", sp.max_seq, gb,
+                                              "decode")
+            else:
+                gb = sp.global_batch or (
+                    (sp.pods or 1) * self.data_size * self.rc.groups
+                    * self.rc.microbatches * sp.microbatch_size)
+                self._shape_cfg = ShapeConfig(sp.mode, sp.seq_len or 32,
+                                              gb, "train")
+        return self._shape_cfg
+
+    @property
+    def rt(self) -> Runtime:
+        """The underlying pipeline Runtime (built on first use)."""
+        if self._rt is None:
+            self._rt = Runtime(self.cfg, self.rc, self.mesh,
+                               multi_pod=self.multi_pod)
+        return self._rt
+
+    # ------------------------------------------------------------------ #
+    # Parameters / optimizer
+    # ------------------------------------------------------------------ #
+
+    def init_params(self, key=None):
+        return self.rt.init_params(key)
+
+    def param_shapes(self):
+        return self.rt.param_shapes()
+
+    def input_specs(self, max_seq=None):
+        return self.rt.input_specs(self.shape_cfg, max_seq=max_seq)
+
+    def opt_config(self):
+        """(AdamWConfig, use_lr_schedule, warmup, total) from spec.optim."""
+        kw = dict(self.spec.optim)
+        use_sched = "warmup" in kw or "total" in kw
+        warmup = kw.pop("warmup", 100)
+        total = kw.pop("total", 10_000)
+        bad = sorted(set(kw) - _OPT_FIELDS)
+        if bad:
+            raise SessionError(
+                f"unknown optim option(s) {bad}; valid: warmup, total, "
+                f"{', '.join(sorted(_OPT_FIELDS))}")
+        kw.setdefault("moment_dtype", self.rc.opt_moment_dtype)
+        return adamw.AdamWConfig(**kw), use_sched, warmup, total
+
+    def init_opt_state(self, params):
+        return adamw.init_state(params, self.opt_config()[0])
+
+    def opt_step_fn(self):
+        if "opt" not in self._steps:
+            opt_cfg, use_sched, warmup, total = self.opt_config()
+
+            @jax.jit
+            def _opt(params, grads, opt_state):
+                scale = adamw.lr_schedule(
+                    opt_state["step"], base_lr=1.0, warmup=warmup,
+                    total=total) if use_sched else 1.0
+                return adamw.apply_updates(params, grads, opt_state,
+                                           opt_cfg, scale)
+
+            self._steps["opt"] = _opt
+        return self._steps["opt"]
+
+    def opt_step(self, params, grads, opt_state):
+        """One AdamW update; returns (params, opt_state, metrics)."""
+        return self.opt_step_fn()(params, grads, opt_state)
+
+    # ------------------------------------------------------------------ #
+    # Training
+    # ------------------------------------------------------------------ #
+
+    def train_step_fn(self):
+        if "train" not in self._steps:
+            if self.shape_cfg.kind != "train":
+                raise SessionError(
+                    f"train_step needs a 'train' shape; this session is "
+                    f"{self.shape_cfg.kind!r} ({self.shape_cfg.name})")
+            self._steps["train"] = make_train_step(self.rt, self.shape_cfg)
+        return self._steps["train"]
+
+    def train_step(self, params, batch):
+        """One pipeline step; returns (grads, metrics)."""
+        return self.train_step_fn()(params, batch)
+
+    # ------------------------------------------------------------------ #
+    # Serving
+    # ------------------------------------------------------------------ #
+
+    def _max_seq(self) -> int:
+        return self.spec.max_seq or self.shape_cfg.seq_len
+
+    def serve_step_fn(self, prompt_len: int):
+        key = ("serve", prompt_len)
+        if key not in self._steps:
+            self._steps[key] = make_serve_step(
+                self.rt, self.shape_cfg, prompt_len=prompt_len,
+                max_seq=self._max_seq())
+        return self._steps[key]
+
+    def init_caches(self, abstract: bool = False):
+        return init_serve_caches(self.rt, self.shape_cfg,
+                                 max_seq=self._max_seq(),
+                                 abstract=abstract)
+
+    def serve_prefill(self, params, caches, batch):
+        """Run the prompt through the pipeline; returns (tokens, caches)."""
+        prompt = batch["tokens"].shape[1]
+        return self.serve_step_fn(prompt)(params, caches, batch)
+
+    def serve_decode(self, params, caches, batch):
+        """One cached decode step; returns (tokens, caches)."""
+        return self.serve_step_fn(1)(params, caches, batch)
+
+    # ------------------------------------------------------------------ #
+    # Data / checkpointing / dry-run
+    # ------------------------------------------------------------------ #
+
+    def stream(self, seed: int = 0) -> SyntheticStream:
+        cfg, sc = self.cfg, self.shape_cfg
+        return SyntheticStream(DataConfig(
+            seq_len=sc.seq_len, global_batch=sc.global_batch,
+            vocab=cfg.vocab, seed=seed,
+            kind=("enc_dec" if cfg.encdec else
+                  "vision" if cfg.frontend == "vision" else "lm"),
+            d_model=cfg.d_model,
+            enc_ctx=cfg.encdec.enc_ctx if cfg.encdec else 0))
+
+    def checkpointing(self, ckpt_dir: str, *, every: int = 50, **kw):
+        """A fault-tolerance TrainController over this checkpoint dir."""
+        from repro.runtime.fault_tolerance import (
+            FaultToleranceConfig,
+            TrainController,
+        )
+        return TrainController(ckpt_dir,
+                               FaultToleranceConfig(ckpt_every=every, **kw))
+
+    def lower(self):
+        """Lower the step for this shape (dry-run: inspect, then compile)."""
+        rt, sc = self.rt, self.shape_cfg
+        params = rt.param_shapes()
+        batch = rt.input_specs(sc)
+        if sc.kind == "train":
+            return self.train_step_fn().lower(params, batch)
+        prompt = 1 if sc.kind == "decode" else (
+            min(sc.seq_len, 448) if self.cfg.encdec else sc.seq_len)
+        caches = self.init_caches(abstract=True)
+        return self.serve_step_fn(prompt).lower(params, caches, batch)
+
+    # ------------------------------------------------------------------ #
+    # Introspection
+    # ------------------------------------------------------------------ #
+
+    def describe(self) -> dict:
+        """Geometry, schedule and cost summary (device-free)."""
+        cfg, rc, geo = self.cfg, self.rc, self.geo
+        seg = geo.segments[-1]  # "main", or "dec" for enc-dec families
+        unit = (rc.unit_size if rc.schedule == "zeropp"
+                else rc.microbatches)
+        tt = generate(rc.schedule, SchedParams(
+            P=rc.pp, V=seg.vpp, n_mb=rc.microbatches, unit=unit))
+        n_params = sum(int(np.prod(s.shape))
+                       for s in M.io_specs(cfg).values())
+        for sg in geo.segments:
+            n_params += geo.seg_stages(sg) * sum(
+                int(np.prod(s.shape))
+                for s in M.stage_specs(cfg, sg).values())
+        return {
+            "arch": cfg.name,
+            "mode": self.spec.mode,
+            "geometry": {
+                "pp": rc.pp, "vpp": seg.vpp, "groups": rc.groups,
+                "model_ranks": geo.model_ranks,
+                "segments": [
+                    {"name": sg.name, "layers": sg.n_layers,
+                     "stages": geo.seg_stages(sg), "k": sg.k}
+                    for sg in geo.segments],
+            },
+            "schedule": {
+                "name": rc.schedule,
+                "microbatches": rc.microbatches,
+                "unit": unit,
+                "ticks": tt.T,
+                "bubble_ratio": tt.bubble_ratio(),
+                "gathers_per_rank": (
+                    int((tt.gather >= 0).sum()) / tt.P
+                    if tt.gather is not None else 0.0),
+            },
+            "n_params": n_params,
+        }
+
+    def __repr__(self):
+        return (f"Session({self.cfg.name!r}, mode={self.spec.mode!r}, "
+                f"schedule={self.rc.schedule!r}, P={self.rc.pp} "
+                f"V={self.rc.vpp} G={self.rc.groups} "
+                f"B={self.rc.microbatches} U={self.rc.unit_size})")

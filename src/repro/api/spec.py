@@ -1,0 +1,112 @@
+"""SessionSpec: the validated builder behind ``repro.api.session``.
+
+Owns everything the old entry points assembled by hand — architecture
+resolution, RunConfig overrides, shape selection, mesh sizing — and
+turns bad inputs into actionable errors *before* any device work starts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.api.registry import (
+    ARCH_REGISTRY,
+    RegistryError,
+    SCHEDULE_REGISTRY,
+)
+from repro.models.common import RunConfig, SHAPES, ShapeConfig
+
+
+class SessionError(ValueError):
+    """Invalid session specification (message says how to fix it)."""
+
+
+MODES = ("train", "serve", "dry-run")
+_MODE_ALIASES = {"dry_run": "dry-run", "dryrun": "dry-run"}
+
+_RC_FIELDS = {f.name for f in dataclasses.fields(RunConfig)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """Everything needed to build a Session. Validated, not yet built."""
+
+    arch: str
+    mode: str = "train"
+    # named ShapeConfig ("train_4k", ...), an explicit ShapeConfig, or
+    # None to derive one from seq_len / global_batch / the RunConfig.
+    shape: str | ShapeConfig | None = None
+    reduced: bool = True            # reduced() smoke config vs production
+    overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    optim: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    data: int | None = None         # data-axis size (None -> derived)
+    pods: int | None = None         # hybrid-sharded DP axis (reduced runs)
+    multi_pod: bool = False         # production 2-pod mesh (dry-run)
+    devices: int | None = None      # ensure this many host devices first
+    seq_len: int | None = None      # derived-shape sequence length
+    global_batch: int | None = None  # derived-shape global batch
+    microbatch_size: int = 1        # samples per micro-batch (derived gb)
+    max_seq: int | None = None      # serving cache length
+    mesh: Any = None                # pre-built jax Mesh (advanced)
+
+    def __post_init__(self):
+        object.__setattr__(self, "mode",
+                           _MODE_ALIASES.get(self.mode, self.mode))
+        object.__setattr__(self, "overrides", dict(self.overrides or {}))
+        object.__setattr__(self, "optim", dict(self.optim or {}))
+
+    # ------------------------------------------------------------------ #
+    def validate(self) -> "SessionSpec":
+        if self.mode not in MODES:
+            raise SessionError(
+                f"unknown mode {self.mode!r}; pick one of {MODES}")
+        try:
+            ARCH_REGISTRY.get(self.arch)
+        except RegistryError as e:
+            raise SessionError(str(e)) from e
+
+        bad = sorted(set(self.overrides) - _RC_FIELDS)
+        if bad:
+            raise SessionError(
+                f"unknown RunConfig override(s) {bad}; valid fields: "
+                f"{', '.join(sorted(_RC_FIELDS))}")
+        sched = self.overrides.get("schedule")
+        if sched is not None and sched not in SCHEDULE_REGISTRY:
+            try:
+                SCHEDULE_REGISTRY.get(sched)  # raises with the full hint
+            except RegistryError as e:
+                raise SessionError(str(e)) from e
+
+        if isinstance(self.shape, str) and self.shape not in SHAPES:
+            raise SessionError(
+                f"unknown shape {self.shape!r}; named shapes: "
+                f"{', '.join(sorted(SHAPES))} (or pass a ShapeConfig)")
+        if not self.reduced and not isinstance(self.shape, str):
+            raise SessionError(
+                "production sessions (reduced=False) need a named shape "
+                f"from {sorted(SHAPES)} so production_run(shape) can pick "
+                "the RunConfig")
+        if self.shape is None and self.mode == "serve" \
+                and self.max_seq is None:
+            raise SessionError(
+                "serve sessions need max_seq=<prompt+gen+slack> (the KV "
+                "cache length) or an explicit shape")
+        return self
+
+    # ------------------------------------------------------------------ #
+    def resolve_configs(self):
+        """Returns (arch_module, ModelConfig, RunConfig) post-overrides."""
+        mod = ARCH_REGISTRY.get(self.arch)
+        if self.reduced:
+            if not hasattr(mod, "reduced"):
+                raise SessionError(
+                    f"architecture {self.arch!r} has no reduced() config; "
+                    "pass reduced=False with a named shape")
+            cfg, rc = mod.reduced()
+        else:
+            cfg = mod.config()
+            rc = mod.production_run(self.shape)
+        if self.overrides:
+            rc = dataclasses.replace(rc, **self.overrides)
+        return mod, cfg, rc

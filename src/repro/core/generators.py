@@ -9,6 +9,11 @@ are strictly sequential so their memory can be reused).
 Baselines (gpipe / 1f1b / interleaved / bfs) do not split the backward:
 they carry F and fused-B tasks only (``split_bw=False``), exactly like the
 methods they model.
+
+Every built-in is registered in the schedule registry
+(``repro.api.registry``); new schedules plug in without touching this
+file — register a ``(SchedParams) -> TickTable`` builder (usually a thin
+wrapper over ``greedy_schedule`` with a custom priority).
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ import heapq
 
 import numpy as np
 
+from repro.api.registry import register_schedule
 from repro.core.schedules import (
     B,
     F,
@@ -51,12 +57,10 @@ def _unit_of(u: int, sp: SchedParams) -> int:
 
 
 def generate(method: str, sp: SchedParams) -> TickTable:
-    """method: zeropp | gpipe | 1f1b | interleaved | bfs | fwd_only"""
-    if method == "fwd_only":
-        return _greedy(sp, method, fwd_only=True)
-    if method == "interleaved" and sp.n_mb % sp.P == 0 and sp.V > 1:
-        return _interleaved(sp)
-    return _greedy(sp, method)
+    """Build the TickTable for any registered schedule by name."""
+    from repro.api.registry import SCHEDULE_REGISTRY
+
+    return SCHEDULE_REGISTRY.get(method)(sp)
 
 
 def _interleaved(sp: SchedParams) -> TickTable:
@@ -101,43 +105,60 @@ def _interleaved(sp: SchedParams) -> TickTable:
 # --------------------------------------------------------------------------- #
 
 
-def _priority(method: str, sp: SchedParams, kind: int, u: int, s: int):
-    """Smaller = more urgent. Ties broken deterministically."""
-    P, V, U = sp.P, sp.V, sp.U
-    v = slot_of(s, P)
+def _prio_fwd_only(sp: SchedParams, kind: int, u: int, s: int):
+    return (slot_of(s, sp.P), u, s)
+
+
+def _prio_gpipe(sp: SchedParams, kind: int, u: int, s: int):
+    # strict F-then-B phases, microbatch-major
+    return (0 if kind == F else 1, slot_of(s, sp.P), u, s)
+
+
+def _prio_bfs(sp: SchedParams, kind: int, u: int, s: int):
+    # breadth-first by stage (v-major blocks), GPipe-like phases
+    v = slot_of(s, sp.P)
+    return (0 if kind == F else 1, v if kind == F else (sp.V - 1 - v), u)
+
+
+def _prio_1f1b(sp: SchedParams, kind: int, u: int, s: int):
+    # backward as early as possible (classic 1F1B emerges greedily)
+    return (0 if kind == B else 1, u, slot_of(s, sp.P))
+
+
+def _prio_interleaved(sp: SchedParams, kind: int, u: int, s: int):
+    # megatron-style chunked round-robin: groups of P micro-batches
+    v = slot_of(s, sp.P)
+    if kind == B:
+        return (0, u, sp.V - 1 - v)
+    return (1, u // sp.P, v, u % sp.P)
+
+
+def _prio_zeropp(sp: SchedParams, kind: int, u: int, s: int):
+    # per-unit blocks; B first (input grads as early as possible,
+    # breadth-first by stage block §3.2), blockwise F (v-major within
+    # unit), W lowest (fills bubbles greedily).
+    v = slot_of(s, sp.P)
     unit = _unit_of(u, sp)
-    if method == "fwd_only":
-        return (v, u, s)
-    if method == "gpipe":
-        # strict F-then-B phases, microbatch-major
-        return (0 if kind == F else 1, v, u, s)
-    if method == "bfs":
-        # breadth-first by stage (v-major blocks), GPipe-like phases
-        return (0 if kind == F else 1, v if kind == F else (V - 1 - v), u)
-    if method == "1f1b":
-        # backward as early as possible (classic 1F1B emerges greedily)
-        return (0 if kind == B else 1, u, v)
-    if method == "interleaved":
-        # megatron-style chunked round-robin: groups of P micro-batches
-        if kind == B:
-            return (0, u, V - 1 - v)
-        return (1, u // P, v, u % P)
-    if method == "zeropp":
-        # per-unit blocks; B first (input grads as early as possible,
-        # breadth-first by stage block §3.2), blockwise F (v-major within
-        # unit), W lowest (fills bubbles greedily).
-        if kind == B:
-            return (unit, 0, V - 1 - v, u)
-        if kind == F:
-            return (unit, 1, v, u)
-        return (unit, 2, v, u)  # W
-    raise ValueError(method)
+    if kind == B:
+        return (unit, 0, sp.V - 1 - v, u)
+    if kind == F:
+        return (unit, 1, v, u)
+    return (unit, 2, v, u)  # W
 
 
-def _greedy(sp: SchedParams, method: str, fwd_only: bool = False) -> TickTable:
+def greedy_schedule(sp: SchedParams, priority, *, name: str = "custom",
+                    split_bw: bool = False, fwd_only: bool = False,
+                    unit_gated: bool = False) -> TickTable:
+    """Greedy list scheduler driven by ``priority(sp, kind, u, s)``.
+
+    ``split_bw`` generates separate W (weight-grad) tasks when the
+    SchedParams ask for it; ``unit_gated`` enforces ZeroPP's per-unit
+    memory-reuse gating. This is the building block custom registered
+    schedules compose (see the registered built-ins below).
+    """
     P, V, n_mb = sp.P, sp.V, sp.n_mb
     S = P * V
-    split = sp.split_bw and method == "zeropp"
+    split = sp.split_bw and split_bw
 
     # --- build the task set and dependency map --------------------------- #
     tasks: list[tuple[int, int, int]] = []  # (kind, u, s)
@@ -163,7 +184,7 @@ def _greedy(sp: SchedParams, method: str, fwd_only: bool = False) -> TickTable:
                 deps[(W, u, s)].append((B, u, s))
     # unit gating: nothing of unit n+1 starts before unit n fully done
     # (ZeroPP memory-reuse semantics; other methods use a single unit).
-    if method == "zeropp" and sp.U < n_mb:
+    if unit_gated and sp.U < n_mb:
         n_units = -(-n_mb // sp.U)
         unit_tasks = {n: [] for n in range(n_units)}
         for t in tasks:
@@ -190,7 +211,7 @@ def _greedy(sp: SchedParams, method: str, fwd_only: bool = False) -> TickTable:
     for t_ in tasks:
         if indeg[t_] == 0:
             heapq.heappush(
-                avail[rank_of(t_[2], P)], (_priority(method, sp, *t_), t_)
+                avail[rank_of(t_[2], P)], (priority(sp, *t_), t_)
             )
 
     n_left = len(tasks)
@@ -216,18 +237,57 @@ def _greedy(sp: SchedParams, method: str, fwd_only: bool = False) -> TickTable:
                     staged.append(dep)
         for t_ in staged:
             heapq.heappush(
-                avail[rank_of(t_[2], P)], (_priority(method, sp, *t_), t_)
+                avail[rank_of(t_[2], P)], (priority(sp, *t_), t_)
             )
         staged = []
         t += 1
     if n_left:
         raise RuntimeError(
-            f"schedule {method} did not converge: {n_left} tasks left"
+            f"schedule {name} did not converge: {n_left} tasks left"
         )
 
     tt = TickTable(P=P, V=V, n_mb=n_mb, unit=sp.U, grid=grid)
     attach_fsdp_events(tt)
     return tt
+
+
+# --------------------------------------------------------------------------- #
+# Built-in schedules (registered; new ones plug in the same way)
+# --------------------------------------------------------------------------- #
+
+
+@register_schedule("zeropp")
+def _gen_zeropp(sp: SchedParams) -> TickTable:
+    return greedy_schedule(sp, _prio_zeropp, name="zeropp",
+                           split_bw=True, unit_gated=True)
+
+
+@register_schedule("gpipe")
+def _gen_gpipe(sp: SchedParams) -> TickTable:
+    return greedy_schedule(sp, _prio_gpipe, name="gpipe")
+
+
+@register_schedule("1f1b")
+def _gen_1f1b(sp: SchedParams) -> TickTable:
+    return greedy_schedule(sp, _prio_1f1b, name="1f1b")
+
+
+@register_schedule("bfs")
+def _gen_bfs(sp: SchedParams) -> TickTable:
+    return greedy_schedule(sp, _prio_bfs, name="bfs")
+
+
+@register_schedule("interleaved")
+def _gen_interleaved(sp: SchedParams) -> TickTable:
+    if sp.n_mb % sp.P == 0 and sp.V > 1:
+        return _interleaved(sp)
+    return greedy_schedule(sp, _prio_interleaved, name="interleaved")
+
+
+@register_schedule("fwd_only")
+def _gen_fwd_only(sp: SchedParams) -> TickTable:
+    return greedy_schedule(sp, _prio_fwd_only, name="fwd_only",
+                           fwd_only=True)
 
 
 # --------------------------------------------------------------------------- #

@@ -529,7 +529,7 @@ def make_train_step(rt: Runtime, shape_cfg):
         grad_specs = {"io": rt.pspecs["io"],
                       "segments": rt.pspecs["segments"]}
         out_specs = (grad_specs, P())
-        fn = jax.shard_map(
+        fn = fsdp.shard_map(
             partial(_train_body, rt=rt, shape_cfg=shape_cfg, mbs=mbs,
                     vloc=vloc, denom=denom, aux_seed=aux_seed),
             mesh=mesh, in_specs=in_specs, out_specs=out_specs,
@@ -1226,7 +1226,7 @@ def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
         )
         out_specs = (P(bspec) if bspec else P(),
                      in_specs[1])
-        fn = jax.shard_map(
+        fn = fsdp.shard_map(
             partial(_serve_body, rt=rt, shape_cfg=shape_cfg, mbs=mbs,
                     Btot=Btot, vloc=vloc, prompt_len=prompt_len,
                     max_seq=max_seq, seq_shard=seq_shard),

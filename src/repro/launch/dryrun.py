@@ -1,12 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.api import ensure_host_devices, get_arch, session
+
+ensure_host_devices(512, force=True)
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape ×
 mesh), print the compiled memory/cost analyses, scrape the collective
 schedule, and emit the roofline terms.
 
-Must be run as its own process (the 512 fake host devices are set before
-any jax import above — do NOT import this module from tests/benchmarks).
+Must be run as its own process (the 512 fake host devices are forced
+before any other JAX use above — do NOT import this module from
+tests/benchmarks).
 
 Usage:
   PYTHONPATH=src:. python -m repro.launch.dryrun --arch llama3.2-1b \
@@ -15,16 +19,11 @@ Usage:
 """
 
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import json  # noqa: E402
 import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
-import jax  # noqa: E402
-
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models import model as M  # noqa: E402
 from repro.models.common import SHAPES  # noqa: E402
 
 ARCHS = [
@@ -66,39 +65,23 @@ def scrape_collectives(hlo_text: str) -> dict:
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None):
-    from repro.core.pipeline import (Runtime, init_serve_caches,
-                                     make_serve_step, make_train_step)
     import benchmarks.roofline as RL
 
     shape_cfg = SHAPES[shape]
-    mod = M.get_arch(arch)
-    cfg = mod.config()
-    rc = mod.production_run(shape)
+    overrides = {}
     if multi_pod and shape_cfg.kind == "train":
         # pods split the global batch: half the micro-batches per pipeline
+        rc0 = get_arch(arch).production_run(shape)
         per_dp = max(shape_cfg.global_batch // (2 * 16), 1)
-        rc = dataclasses.replace(
-            rc, microbatches=max(per_dp // rc.groups, 1),
-            unit=min(rc.unit or 10**9, max(per_dp // rc.groups, 1)))
-    mesh = make_production_mesh(multi_pod=multi_pod)
+        overrides = dict(
+            microbatches=max(per_dp // rc0.groups, 1),
+            unit=min(rc0.unit or 10**9, max(per_dp // rc0.groups, 1)))
     t0 = time.time()
-    rt = Runtime(cfg, rc, mesh, multi_pod=multi_pod)
-    params = rt.param_shapes()
-    batch = rt.input_specs(shape_cfg)
-
-    if shape_cfg.kind == "train":
-        step = make_train_step(rt, shape_cfg)
-        lowered = step.lower(params, batch)
-    else:
-        prompt = 1 if shape_cfg.kind == "decode" else (
-            min(shape_cfg.seq_len, 448) if cfg.encdec else
-            shape_cfg.seq_len)
-        caches = init_serve_caches(rt, shape_cfg,
-                                   max_seq=shape_cfg.seq_len)
-        step = make_serve_step(rt, shape_cfg, prompt_len=prompt,
-                               max_seq=shape_cfg.seq_len)
-        lowered = step.lower(params, caches, batch)
+    sess = session(arch, mode="dry-run", shape=shape, reduced=False,
+                   multi_pod=multi_pod, overrides=overrides)
+    lowered = sess.lower()
     t_lower = time.time() - t0
+    rt = sess.rt  # roofline analysis reads the runtime's static tables
 
     t0 = time.time()
     compiled = lowered.compile()
@@ -106,6 +89,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+        cost = cost[0] if cost else {}
     print(f"--- memory_analysis [{arch} × {shape} "
           f"{'multi-pod' if multi_pod else 'single-pod'}] ---")
     print(mem)

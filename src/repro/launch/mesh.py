@@ -1,8 +1,8 @@
 """Production meshes.
 
 Kept as FUNCTIONS so importing this module never touches jax device state
-(the dry-run sets XLA_FLAGS before any jax import; tests use their own
-small meshes in subprocesses).
+(entry points call repro.api.ensure_host_devices() before any other JAX
+use; tests use their own small meshes in subprocesses).
 """
 
 from __future__ import annotations

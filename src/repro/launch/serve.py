@@ -1,4 +1,5 @@
-"""Serving driver: batched prefill + decode through the pipeline.
+"""Serving driver: batched prefill + decode through the pipeline, via the
+``repro.api`` Session facade.
 
 Usage (CPU demo):
   SPMD_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
@@ -7,28 +8,10 @@ Usage (CPU demo):
 
 from __future__ import annotations
 
-import os
+import argparse
+import time
 
-if "XLA_FLAGS" not in os.environ and os.environ.get("SPMD_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count="
-        + os.environ["SPMD_DEVICES"])
-
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import time  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core.pipeline import (  # noqa: E402
-    Runtime,
-    init_serve_caches,
-    make_serve_step,
-)
-from repro.models import model as M  # noqa: E402
-from repro.models.common import ShapeConfig  # noqa: E402
+from repro.api import ensure_host_devices, session
 
 
 def main():
@@ -40,40 +23,38 @@ def main():
     ap.add_argument("--data", type=int, default=2)
     args = ap.parse_args()
 
-    mod = M.get_arch(args.arch)
-    cfg, rc = mod.reduced()
-    rc = dataclasses.replace(rc, microbatches=2)
-    geo = M.build_geometry(cfg, rc)
-    mesh = jax.make_mesh((args.data, geo.model_ranks), ("data", "model"))
-    rt = Runtime(cfg, rc, mesh)
+    ensure_host_devices()
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
     max_seq = args.prompt + args.gen + 8
-    shape_cfg = ShapeConfig("serve", max_seq, args.batch, "decode")
-
-    params = rt.init_params(jax.random.PRNGKey(0))
-    caches = jax.tree.map(
-        lambda s: jax.device_put(jnp.zeros(s.shape, s.dtype), s.sharding),
-        init_serve_caches(rt, shape_cfg, max_seq=max_seq),
-        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    sess = session(
+        args.arch, mode="serve", data=args.data,
+        global_batch=args.batch, max_seq=max_seq,
+        overrides=dict(microbatches=2),
+    )
+    params = sess.init_params(jax.random.PRNGKey(0))
+    caches = sess.init_caches()
     toks = jax.random.randint(jax.random.PRNGKey(1),
-                              (args.batch, args.prompt), 0, cfg.vocab)
+                              (args.batch, args.prompt), 0,
+                              sess.cfg.vocab)
 
-    prefill = make_serve_step(rt, shape_cfg, prompt_len=args.prompt,
-                              max_seq=max_seq)
     t0 = time.time()
-    tok, caches = prefill(params, caches,
-                          {"tokens": toks, "pos": jnp.int32(0)})
+    tok, caches = sess.serve_prefill(params, caches,
+                                     {"tokens": toks,
+                                      "pos": jnp.int32(0)})
     tok.block_until_ready()
     print(f"prefill: {args.batch}×{args.prompt} tokens in "
           f"{time.time() - t0:.3f}s -> first tokens {np.asarray(tok)[:4]}")
 
-    decode = make_serve_step(rt, shape_cfg, prompt_len=1, max_seq=max_seq)
     seq = [np.asarray(tok)]
     cur = tok[:, None]
     t0 = time.time()
     for i in range(args.gen - 1):
-        cur, caches = decode(params, caches,
-                             {"tokens": cur,
-                              "pos": jnp.int32(args.prompt + i)})
+        cur, caches = sess.serve_decode(params, caches,
+                                        {"tokens": cur,
+                                         "pos": jnp.int32(args.prompt + i)})
         seq.append(np.asarray(cur))
         cur = cur[:, None]
     dt = time.time() - t0

@@ -1,74 +1,29 @@
 """End-to-end training driver: data pipeline → ZeroPP pipeline step →
 sharded AdamW → checkpoint/restart under the fault-tolerance controller.
 
-Usage (CPU demo; device count via SPMD_DEVICES):
+All assembly goes through the ``repro.api`` Session facade.
+
+Usage (CPU demo; device count via SPMD_DEVICES, default 8):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
       --steps 100 --data 2 [--schedule zeropp] [--ckpt-dir /tmp/ckpt]
 """
 
 from __future__ import annotations
 
-import os
+import argparse
 
-if "XLA_FLAGS" not in os.environ and os.environ.get("SPMD_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count="
-        + os.environ["SPMD_DEVICES"])
-
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import time  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
-from repro.ckpt.checkpoint import CheckpointManager  # noqa: E402
-from repro.core.pipeline import Runtime, make_train_step  # noqa: E402
-from repro.data.pipeline import DataConfig, SyntheticStream  # noqa: E402
-from repro.models import model as M  # noqa: E402
-from repro.models.common import ShapeConfig  # noqa: E402
-from repro.optim import adamw  # noqa: E402
-from repro.runtime.fault_tolerance import (  # noqa: E402
-    FaultToleranceConfig,
-    TrainController,
-)
+from repro.api import ensure_host_devices, session
 
 
-def build_trainer(arch: str, *, data: int, seq: int, microbatches: int,
-                  schedule: str, lr: float, reduced: bool = True,
-                  unit: int = 0):
-    mod = M.get_arch(arch)
-    if reduced:
-        cfg, rc = mod.reduced()
-    else:
-        cfg, rc = mod.config(), mod.production_run("train_4k")
-    rc = dataclasses.replace(rc, schedule=schedule,
-                             microbatches=microbatches, unit=unit)
-    geo = M.build_geometry(cfg, rc)
-    mesh = jax.make_mesh((data, geo.model_ranks), ("data", "model"))
-    rt = Runtime(cfg, rc, mesh)
-    gb = data * rc.groups * rc.microbatches
-    shape_cfg = ShapeConfig("train", seq, gb, "train")
-    step_fn = make_train_step(rt, shape_cfg)
-    opt_cfg = adamw.AdamWConfig(lr=lr,
-                                moment_dtype=rc.opt_moment_dtype)
-    dcfg = DataConfig(
-        seq_len=seq, global_batch=gb, vocab=cfg.vocab,
-        kind=("enc_dec" if cfg.encdec else
-              "vision" if cfg.frontend == "vision" else "lm"),
-        d_model=cfg.d_model,
-        enc_ctx=cfg.encdec.enc_ctx if cfg.encdec else 0,
+def build_session(arch: str, *, data: int, seq: int, microbatches: int,
+                  schedule: str, lr: float, unit: int = 0):
+    """One facade call replaces the old 8-step assembly ritual."""
+    return session(
+        arch, mode="train", data=data, seq_len=seq,
+        overrides=dict(schedule=schedule, microbatches=microbatches,
+                       unit=unit),
+        optim=dict(lr=lr, warmup=20, total=10_000),
     )
-    stream = SyntheticStream(dcfg)
-
-    @jax.jit
-    def opt_step(params, grads, opt_state, step_no):
-        lr_scale = adamw.lr_schedule(step_no, base_lr=1.0, warmup=20,
-                                     total=10_000)
-        return adamw.apply_updates(params, grads, opt_state, opt_cfg,
-                                   lr_scale)
-
-    return rt, cfg, rc, shape_cfg, step_fn, opt_step, stream, gb
 
 
 def main():
@@ -86,18 +41,28 @@ def main():
     ap.add_argument("--inject-failure-at", type=int, default=None)
     args = ap.parse_args()
 
-    ft = FaultToleranceConfig(ckpt_every=args.ckpt_every)
-    ctl = TrainController(args.ckpt_dir, ft)
+    ensure_host_devices()
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime.fault_tolerance import (
+        FaultToleranceConfig,
+        TrainController,
+    )
+
+    ctl = TrainController(args.ckpt_dir,
+                          FaultToleranceConfig(ckpt_every=args.ckpt_every))
 
     def build(restored, manifest):
-        (rt, cfg, rc, shape_cfg, step_fn, opt_step, stream, gb
-         ) = build_trainer(
+        # fresh session per (re)start: elastic restarts may re-mesh
+        sess = build_session(
             args.arch, data=args.data, seq=args.seq,
             microbatches=args.microbatches, schedule=args.schedule,
             lr=args.lr, unit=args.unit)
+        stream = sess.stream()
         if restored is None:
-            params = rt.init_params(jax.random.PRNGKey(0))
-            opt_state = adamw.init_state(params, adamw.AdamWConfig())
+            params = sess.init_params(jax.random.PRNGKey(0))
+            opt_state = sess.init_opt_state(params)
         else:
             params = jax.tree.map(jnp.asarray, restored["params"])
             opt_state = jax.tree.map(jnp.asarray, restored["opt"])
@@ -106,10 +71,9 @@ def main():
 
         def run_one(state, step_no):
             batch = stream.batch(step_no)
-            grads, metrics = step_fn(state["params"], batch)
-            params, opt, om = opt_step(state["params"], grads,
-                                       state["opt"],
-                                       state["opt"]["step"])
+            grads, metrics = sess.train_step(state["params"], batch)
+            params, opt, om = sess.opt_step(state["params"], grads,
+                                            state["opt"])
             loss = float(metrics["loss_sum"])
             print(f"step {step_no:4d} loss {loss:.4f} "
                   f"gnorm {float(om['grad_norm']):.3f}")

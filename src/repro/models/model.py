@@ -19,13 +19,13 @@ exactly its V stages.
 from __future__ import annotations
 
 import dataclasses
-import importlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import ARCH_REGISTRY as _ARCH_REGISTRY
 from repro.core.tape import Tape, TVal
 from repro.kernels import ops
 from repro.models import blocks
@@ -541,41 +541,26 @@ def reference_loss(cfg, rc, params, tokens, labels, enc_tokens=None):
 
 
 # --------------------------------------------------------------------------- #
-# Registry
+# Registry (delegates to the plug-in registry in repro.api.registry)
 # --------------------------------------------------------------------------- #
 
-ARCHS = [
-    "whisper_large_v3",
-    "qwen2_moe_a2p7b",
-    "deepseek_v3_671b",
-    "jamba_v0p1_52b",
-    "phi3_vision_4p2b",
-    "minitron_4b",
-    "yi_9b",
-    "phi4_mini_3p8b",
-    "llama3p2_1b",
-    "xlstm_1p3b",
-    "gpt_paper",
-]
 
-_ALIASES = {
-    "whisper-large-v3": "whisper_large_v3",
-    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
-    "deepseek-v3-671b": "deepseek_v3_671b",
-    "jamba-v0.1-52b": "jamba_v0p1_52b",
-    "phi-3-vision-4.2b": "phi3_vision_4p2b",
-    "minitron-4b": "minitron_4b",
-    "yi-9b": "yi_9b",
-    "phi4-mini-3.8b": "phi4_mini_3p8b",
-    "llama3.2-1b": "llama3p2_1b",
-    "xlstm-1.3b": "xlstm_1p3b",
-}
+def __getattr__(name):
+    # ARCHS is a live view of the registry (PEP 562), so archs added via
+    # repro.api.register_arch appear here too.
+    if name == "ARCHS":
+        return _ARCH_REGISTRY.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def get_arch(name: str):
-    """Returns the config module for an architecture id."""
-    mod = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
-    return importlib.import_module(f"repro.configs.{mod}")
+    """Returns the config module/object for an architecture id.
+
+    Resolution (canonical names, aliases, custom registrations) lives in
+    ``repro.api.registry``; plug new architectures in with
+    ``repro.api.register_arch`` instead of editing this file.
+    """
+    return _ARCH_REGISTRY.get(name)
 
 
 # --------------------------------------------------------------------------- #

@@ -368,10 +368,11 @@ def case_int8_grads(arch: str = "llama3.2-1b"):
         q, err = F.reduce_scatter_grad_int8(gl[0], err0, spec, 4, False)
         return full, q, err
 
-    f = jax.shard_map(body, mesh=mesh,
-                      in_specs=(P(None, "data"),),
-                      out_specs=(P("data"), P("data"), P(None, "data")),
-                      check_vma=False)
+    from repro.core import fsdp as _fsdp
+    f = _fsdp.shard_map(body, mesh=mesh,
+                        in_specs=(P(None, "data"),),
+                        out_specs=(P("data"), P("data"), P(None, "data")),
+                        check_vma=False)
     # feed each data rank a *different* gradient contribution
     gs = g.transpose(1, 0, 2).reshape(1, 32, 4 * 16)[..., :16 * 4]
     full, q, err = jax.jit(f)(g.sum(0)[None].repeat(4, 0).reshape(
@@ -466,9 +467,63 @@ def case_elastic_reshard(arch: str = "llama3.2-1b"):
     print(f"CASE_OK elastic_reshard {arch}")
 
 
+def case_api_parity(arch: str = "llama3.2-1b"):
+    """repro.api.session must reproduce the hand-assembled path exactly:
+    same params from the same key, allclose grads and metrics."""
+    from repro.api import session
+
+    mod = M.get_arch(arch)
+    cfg, rc = mod.reduced()
+    rc = dataclasses.replace(rc, microbatches=4, unit=2)
+    geo = M.build_geometry(cfg, rc)
+    model = geo.model_ranks
+    data = max(1, int(N_DEV) // model)
+    mesh = _mesh(data, model)
+    rt = Runtime(cfg, rc, mesh)
+    gb = data * rc.groups * rc.microbatches
+    seq = 16
+    batch = _batch(cfg, gb, seq)
+
+    # hand-assembled path (the old 8-step ritual)
+    params_h = rt.init_params(jax.random.PRNGKey(0))
+    step = make_train_step(rt, ShapeConfig("toy", seq, gb, "train"))
+    g_h, m_h = step(params_h, batch)
+
+    # facade path
+    sess = session(arch, overrides=dict(microbatches=4, unit=2),
+                   data=data, seq_len=seq)
+    assert sess.shape_cfg.global_batch == gb, (
+        sess.shape_cfg.global_batch, gb)
+    params_f = sess.init_params(jax.random.PRNGKey(0))
+    g_f, m_f = sess.train_step(params_f, batch)
+
+    for kp, vh in jax.tree_util.tree_flatten_with_path(params_h)[0]:
+        vf = dict(jax.tree_util.tree_flatten_with_path(params_f)[0])[kp]
+        assert np.array_equal(np.asarray(vh), np.asarray(vf)), (
+            f"param mismatch at {jax.tree_util.keystr(kp)}")
+    worst = (0.0, None)
+    flat_f = dict(jax.tree_util.tree_flatten_with_path(g_f)[0])
+    n = 0
+    for kp, vh in jax.tree_util.tree_flatten_with_path(g_h)[0]:
+        vh = np.asarray(vh, np.float32)
+        vf = np.asarray(flat_f[kp], np.float32)
+        assert vh.shape == vf.shape, (kp, vh.shape, vf.shape)
+        err = np.abs(vh - vf).max() / max(np.abs(vh).max(), 1e-6)
+        if err > worst[0]:
+            worst = (err, jax.tree_util.keystr(kp))
+        n += 1
+    assert worst[0] < 1e-5, f"grad mismatch {worst}"
+    assert np.allclose(float(m_h["loss_sum"]), float(m_f["loss_sum"]),
+                       rtol=1e-6), (m_h, m_f)
+    print(f"  {n} grad tensors allclose (worst rel err {worst[0]:.2e}); "
+          f"loss {float(m_f['loss_sum']):.5f}")
+    print(f"CASE_OK api_parity {arch}")
+
+
 CASES["prefetch_equiv"] = case_prefetch_equiv
 CASES["int8_grads"] = case_int8_grads
 CASES["elastic_reshard"] = case_elastic_reshard
+CASES["api_parity"] = case_api_parity
 
 
 if __name__ == "__main__":

@@ -1,0 +1,173 @@
+"""Tests for the repro.api facade: registries, spec validation, parity.
+
+Registry/spec/describe tests run in-process (device-free by design —
+Session defers all mesh/device work). The numerical parity check runs in
+a subprocess with 8 fake devices, like the other SPMD cases.
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import (
+    SessionError,
+    RegistryError,
+    generate_schedule,
+    get_arch,
+    greedy_schedule,
+    list_archs,
+    list_schedules,
+    register_arch,
+    register_schedule,
+    session,
+)
+from repro.models.common import ModelConfig, RunConfig
+
+TIMEOUT = 1200
+
+
+# --------------------------------------------------------------------------- #
+# Registries
+# --------------------------------------------------------------------------- #
+
+
+def test_builtin_registries_populated():
+    archs = list_archs()
+    assert "llama3p2_1b" in archs and len(archs) >= 11
+    scheds = list_schedules()
+    for s in ("zeropp", "gpipe", "1f1b", "interleaved", "bfs",
+              "fwd_only"):
+        assert s in scheds
+    # aliases resolve to the same module as canonical names
+    assert get_arch("llama3.2-1b") is get_arch("llama3p2_1b")
+
+
+def test_arch_registry_round_trip():
+    @register_arch("toy-arch-rt", aliases=("toy_arch_rt_alias",))
+    class ToyArch:
+        @staticmethod
+        def reduced():
+            cfg = ModelConfig(name="toy", n_layers=2, d_model=32,
+                              n_heads=2, n_kv_heads=2, d_ff=64,
+                              vocab=64, tie_embeddings=True)
+            return cfg, RunConfig(pp=2, vpp=1, microbatches=2,
+                                  param_dtype="float32",
+                                  compute_dtype="float32")
+
+    assert get_arch("toy-arch-rt") is ToyArch
+    assert get_arch("toy_arch_rt_alias") is ToyArch
+    assert "toy-arch-rt" in list_archs()
+    # duplicate registration is refused unless overwrite=True
+    with pytest.raises(RegistryError, match="already registered"):
+        register_arch("toy-arch-rt", ToyArch)
+    register_arch("toy-arch-rt", ToyArch, overwrite=True)
+    # a Session builds from the registered arch without edits to core
+    sess = session("toy-arch-rt", overrides=dict(unit=2))
+    assert sess.cfg.name == "toy"
+    assert sess.describe()["geometry"]["model_ranks"] == 2
+
+
+def test_arch_registry_rejects_bad_entry():
+    with pytest.raises(RegistryError, match="config\\(\\)/reduced\\(\\)"):
+        register_arch("bad-arch", object())
+
+
+def test_schedule_registry_round_trip():
+    # custom schedule = greedy scheduler with a custom priority
+    @register_schedule("gpipe-clone-rt")
+    def gpipe_clone(sp):
+        def prio(sp_, kind, u, s):
+            return (kind, u, s)
+        return greedy_schedule(sp, prio, name="gpipe-clone-rt")
+
+    tt = generate_schedule("gpipe-clone-rt", P=2, V=2, n_mb=4)
+    tt.validate()
+    assert tt.counts()["F"] == 4 * 2 * 2
+    assert "gpipe-clone-rt" in list_schedules()
+    with pytest.raises(RegistryError, match="already registered"):
+        register_schedule("gpipe-clone-rt", gpipe_clone)
+
+
+def test_unknown_names_raise_actionable_errors():
+    with pytest.raises(RegistryError, match="known:"):
+        get_arch("no-such-arch")
+    with pytest.raises(RegistryError, match="did you mean"):
+        generate_schedule("zropp", P=2, V=1, n_mb=2)
+
+
+# --------------------------------------------------------------------------- #
+# Spec validation (device-free: errors fire before any mesh is built)
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_rejects_unknown_arch():
+    with pytest.raises(SessionError, match="unknown architecture"):
+        session("no-such-arch")
+
+
+def test_spec_rejects_bad_override_key():
+    with pytest.raises(SessionError, match="valid fields"):
+        session("llama3.2-1b", overrides={"microbatch": 4})
+
+
+def test_spec_rejects_unknown_schedule():
+    with pytest.raises(SessionError, match="unknown schedule"):
+        session("llama3.2-1b", overrides={"schedule": "zig-zag"})
+
+
+def test_spec_rejects_bad_mode_and_shape():
+    with pytest.raises(SessionError, match="unknown mode"):
+        session("llama3.2-1b", mode="training")
+    with pytest.raises(SessionError, match="named shapes"):
+        session("llama3.2-1b", shape="train_9000k")
+    with pytest.raises(SessionError, match="reduced=False"):
+        session("llama3.2-1b", reduced=False)  # needs a named shape
+    with pytest.raises(SessionError, match="max_seq"):
+        session("llama3.2-1b", mode="serve")
+
+
+def test_spec_rejects_bad_geometry():
+    # jamba's hybrid layer pattern is not static per slot at vpp=2 —
+    # the facade surfaces the geometry error with context
+    with pytest.raises(SessionError, match="invalid geometry"):
+        session("jamba-v0.1-52b", overrides={"vpp": 2})
+
+
+def test_describe_is_device_free():
+    sess = session("llama3.2-1b", overrides=dict(microbatches=4, unit=2))
+    d = sess.describe()
+    assert d["geometry"]["model_ranks"] == 2
+    assert d["schedule"]["name"] == "zeropp"
+    assert 0.0 <= d["schedule"]["bubble_ratio"] < 1.0
+    assert d["schedule"]["unit"] == 2
+    assert d["n_params"] > 0
+    assert "Session(" in repr(sess)
+
+
+def test_opt_config_rejects_unknown_keys():
+    sess = session("llama3.2-1b", optim=dict(lr=1e-3, momentum=0.9))
+    with pytest.raises(SessionError, match="unknown optim option"):
+        sess.opt_config()
+
+
+# --------------------------------------------------------------------------- #
+# Numerical parity facade vs hand-assembled path (subprocess, 8 devices)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_session_matches_hand_assembled_path():
+    import os
+
+    cmd = [sys.executable, "-m", "tests.spmd_case", "api_parity",
+           "llama3.2-1b"]
+    p = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=TIMEOUT,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert "CASE_OK api_parity" in p.stdout, (
+        f"api_parity failed\n--- stdout ---\n{p.stdout[-3000:]}"
+        f"\n--- stderr ---\n{p.stderr[-3000:]}"
+    )

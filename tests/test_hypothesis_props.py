@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dependency; tier-1 runs without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import analysis
 from repro.core.generators import SchedParams, generate
