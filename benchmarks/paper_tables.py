@@ -199,7 +199,9 @@ def table2(P=4, V=2, B=16, D=4, L=32):
 
 
 def autogen_bench(P=4, V=2, B=8):
-    """§4 heuristic vs greedy W-fill."""
+    """§4 heuristic vs greedy W-fill, plus the full plan selection."""
+    from repro.core.plan import PlanAnalysis, select_plan
+
     rows = []
     cfg, cm = _gpt_cost("6.2B", P=P, V=V, dp=4, split=True)
     res = autogen(SchedParams(P=P, V=V, n_mb=B), cm)
@@ -208,9 +210,23 @@ def autogen_bench(P=4, V=2, B=8):
     print(f"  postponed-W start: {res.makespan_before:.4f}s")
     print(f"  after heuristic:   {res.makespan_after:.4f}s "
           f"({res.n_insertions} insertions)")
+    print("  trajectory:        " + " -> ".join(
+        f"{m:.4f}" for m in res.makespans))
     print(f"  greedy W-fill:     {greedy.makespan:.4f}s")
     rows.append(("autogen/before", res.makespan_before * 1e6, ""))
     rows.append(("autogen/after", res.makespan_after * 1e6,
                  f"insertions={res.n_insertions}"))
     rows.append(("autogen/greedy", greedy.makespan * 1e6, ""))
+
+    # the schedule="auto" selection over every registered schedule,
+    # costed with the same 6.2B A800 model — what a session would pick
+    sel = select_plan(P, V, B, B, cm, preset="a800")
+    print(f"  auto selection:    {sel.selected.name} "
+          f"({sel.analysis.makespan:.4f}s)")
+    for n, a in sorted(sel.candidates.items(),
+                       key=lambda kv: (not isinstance(kv[1], PlanAnalysis),
+                                       getattr(kv[1], 'makespan', 0))):
+        if isinstance(a, PlanAnalysis):
+            rows.append((f"auto/{n}", a.makespan * 1e6,
+                         "selected" if n == sel.selected.name else ""))
     return rows

@@ -1,36 +1,48 @@
-"""Visualize ZeroPP vs baseline schedules and the §4 auto-generator.
+"""Explore schedule plans through the facade: ``schedule="auto"`` runs
+the §4 selection (every registered schedule + the autogen heuristic,
+simulated under a hardware cost preset) and ``Session.describe()`` reports
+the *selected* plan's simulated makespan / bubble ratio / gathers.
 
-    PYTHONPATH=src python examples/schedule_explorer.py [P] [V] [B] [U]
+Device-free — no mesh is built.
+
+    PYTHONPATH=src python examples/schedule_explorer.py [B] [U] [preset]
 """
 
 import sys
 
-from repro.api import SchedParams, generate_schedule, list_schedules
-from repro.core.autogen import autogen
-from repro.core.simulator import CostModel, simulate
+from repro.api import list_schedules, session
 
-P, V, B, U = (int(x) for x in (sys.argv[1:] + [4, 3, 7, 7][len(sys.argv) - 1:]))
+B, U = (int(x) for x in (sys.argv[1:3] + [8, 4][len(sys.argv[1:3]):]))
+preset = sys.argv[3] if len(sys.argv) > 3 else "a800"
 
 print(f"registered schedules: {', '.join(list_schedules())}")
-print(f"=== ZeroPP (paper Fig. 2 setting: P={P} V={V} B={B} U={U}) ===")
-tt = generate_schedule("zeropp", SchedParams(P=P, V=V, n_mb=B, unit=U))
-tt.validate()
-print(tt.render())
-print(f"tick-bubbles: {tt.bubble_ratio():.3f}   "
-      f"gathers/rank: {(tt.gather >= 0).sum() / tt.P:.0f} (2V-1 per unit)")
+print(f"=== schedule=\"auto\" (B={B} U={U}, preset={preset}) ===")
 
-cm = CostModel(t_f=1, t_b=2, t_w=1, t_p2p=0.02, t_gather=0.3, t_reduce=0.3)
-for m, split in (("gpipe", False), ("1f1b", False), ("interleaved", False),
-                 ("bfs", False), ("zeropp", True)):
-    cmx = cm if split else CostModel(t_f=1, t_b=3, t_w=0, t_p2p=0.02,
-                                     t_gather=0.3, t_reduce=0.3)
-    r = simulate(generate_schedule(m, SchedParams(P=P, V=V, n_mb=B,
-                                                  split_bw=split)), cmx)
-    print(f"{m:12s} makespan={r.makespan:7.2f} bubble={r.bubble_frac:.3f} "
-          f"peak_mem={r.peak_mem:.1f}")
+sess = session(
+    "llama3.2-1b",
+    schedule="auto",
+    cost_preset=preset,
+    overrides=dict(microbatches=B, unit=U),
+)
+d = sess.describe()
+sched = d["schedule"]
 
-print("\n=== §4 heuristic auto-generation ===")
-res = autogen(SchedParams(P=P, V=min(V, 2), n_mb=B), cm)
-print("\n".join(res.log[:6] + ["..."] + res.log[-2:]))
-print(f"makespan {res.makespan_before:.2f} -> {res.makespan_after:.2f} "
-      f"with {res.n_insertions} W insertions")
+print(f"candidates (simulated makespan, {preset} preset):")
+for name, span in sorted(sched["auto"]["candidates"].items(),
+                         key=lambda kv: (isinstance(kv[1], str), kv[1])):
+    mark = " <== selected" if name == sched["auto"]["selected"] else ""
+    span_s = f"{span:.3e}" if not isinstance(span, str) else span
+    print(f"  {name:12s} {span_s}{mark}")
+
+print(f"\nselected plan: {sched['name']}  "
+      f"(P={d['geometry']['pp']} V={d['geometry']['vpp']} "
+      f"B={sched['microbatches']} U={sched['unit']})")
+print(f"  ticks            {sched['ticks']}")
+print(f"  makespan         {sched['makespan']:.3e}  ({sched['preset']})")
+print(f"  bubble ratio     {sched['bubble_ratio']:.3f}  (simulated)")
+print(f"  gathers/rank     {sched['gathers_per_rank']:.1f}")
+print(f"  peak mem (sim)   {sched['peak_mem']:.3e}")
+
+plan = sess.plan_selection.selected
+print(f"\n=== selected tick table ({plan.name}) ===")
+print(plan.table.render(max_ticks=48))

@@ -32,6 +32,10 @@ _EXPORTS = {
     "generate_schedule": ("repro.api.registry", "generate_schedule"),
     "SchedParams": ("repro.core.generators", "SchedParams"),
     "greedy_schedule": ("repro.core.generators", "greedy_schedule"),
+    "SchedulePlan": ("repro.core.plan", "SchedulePlan"),
+    "PlanSelection": ("repro.core.plan", "PlanSelection"),
+    "select_plan": ("repro.core.plan", "select_plan"),
+    "clear_plan_cache": ("repro.core.plan", "clear_plan_cache"),
 }
 
 __all__ = sorted(_EXPORTS)

@@ -24,12 +24,20 @@ import jax
 import numpy as np
 
 from repro.api.spec import SessionError, SessionSpec
-from repro.core.generators import SchedParams, generate
+from repro.core.generators import SchedParams
 from repro.core.pipeline import (
     Runtime,
     init_serve_caches,
     make_serve_step,
     make_train_step,
+)
+from repro.core.plan import (
+    UNIT_GATED_SCHEDULES,
+    PlanAnalysis,
+    SchedulePlan,
+    fused_cost_model,
+    preset_cost_model,
+    select_plan,
 )
 from repro.data.pipeline import DataConfig, SyntheticStream
 from repro.models import model as M
@@ -41,7 +49,14 @@ _OPT_FIELDS = {f.name for f in dataclasses.fields(adamw.AdamWConfig)}
 
 def session(arch: str, *, mode: str = "train", shape=None, overrides=None,
             **kw) -> "Session":
-    """Build a validated Session. See SessionSpec for every knob."""
+    """Build a validated Session. See SessionSpec for every knob.
+
+    ``schedule="auto"`` (or ``overrides=dict(schedule="auto")``) runs the
+    §4 plan selection: every registered schedule plus the autogen
+    heuristic is simulated under ``cost_preset`` ("a800" | "tpu_v5e") and
+    the minimum-makespan plan is what the session executes; the winner
+    (and every candidate's simulated makespan) shows in ``describe()``.
+    """
     spec = SessionSpec(arch=arch, mode=mode, shape=shape,
                        overrides=dict(overrides or {}), **kw)
     return Session(spec)
@@ -67,6 +82,14 @@ class Session:
         self._data: int | None = spec.data
         self._rt: Runtime | None = None
         self._steps: dict[Any, Any] = {}
+        # schedule="auto": run the §4 plan selection now (device-free —
+        # pure table generation + discrete-event simulation), so the rest
+        # of the session sees a concrete schedule name + plan.
+        self.plan_selection = None
+        if self.rc.schedule == "auto":
+            self.plan_selection = self._auto_select()
+            self.rc = dataclasses.replace(
+                self.rc, schedule=self.plan_selection.selected.name)
 
     # ------------------------------------------------------------------ #
     # Lazy distribution state
@@ -131,11 +154,64 @@ class Session:
 
     @property
     def rt(self) -> Runtime:
-        """The underlying pipeline Runtime (built on first use)."""
+        """The underlying pipeline Runtime (built on first use). An
+        auto-selected plan is injected so the Runtime executes exactly
+        the table the selection simulated."""
         if self._rt is None:
-            self._rt = Runtime(self.cfg, self.rc, self.mesh,
-                               multi_pod=self.multi_pod)
+            self._rt = Runtime(
+                self.cfg, self.rc, self.mesh, multi_pod=self.multi_pod,
+                plan=(self.plan_selection.selected
+                      if self.plan_selection is not None else None))
         return self._rt
+
+    # ------------------------------------------------------------------ #
+    # Schedule-plan selection (schedule="auto")
+    # ------------------------------------------------------------------ #
+
+    def _cost_shape(self) -> tuple[int, int, int]:
+        """(seq, mbs, dp) for the cost model — device-free: prefers the
+        explicit shape/spec values, never forces a mesh build."""
+        if self._shape_cfg is not None:
+            seq = self._shape_cfg.seq_len
+        else:
+            seq = self.spec.seq_len or self.spec.max_seq or 32
+        if self._data is not None:
+            dp = self._data
+        elif self.spec.mesh is not None:
+            dp = dict(self.spec.mesh.shape).get("data", 1)
+        else:
+            # data axis not yet known and we must stay device-free: a
+            # dp=1 guess would cost every FSDP gather/reduce at zero
+            # ((dp-1)/dp = 0) and bias the selection toward
+            # collective-heavy schedules, so assume the demo/CI mesh
+            # width instead ((dp-1)/dp is within 15% of its asymptote
+            # from dp=8 on, so the exact guess barely matters).
+            dp = 8
+        return seq, self.spec.microbatch_size, dp
+
+    def _cost_model(self, vpp: int):
+        seq, mbs, dp = self._cost_shape()
+        return preset_cost_model(
+            self.spec.cost_preset, self.cfg, P=self.rc.pp, V=vpp,
+            seq=seq, mbs=mbs, dp=dp)
+
+    def _auto_select(self):
+        """Simulate every registered schedule (+ the §4 autogen heuristic)
+        for this (arch × shape × mesh) and pick the minimum-makespan plan.
+        Selections are cached process-wide on that key."""
+        rc = self.rc
+        seg = self.geo.segments[-1]
+        seq, mbs, dp = self._cost_shape()
+        preset = self.spec.cost_preset
+        cache_key = (
+            self.cfg.name, rc.pp, seg.vpp, rc.groups, rc.microbatches,
+            rc.unit_size, rc.gather_prefetch, seq, mbs, dp,
+            self.spec.pods or 1, preset,
+        )
+        return select_plan(
+            rc.pp, seg.vpp, rc.microbatches, rc.unit_size,
+            self._cost_model(seg.vpp), preset=preset,
+            prefetch=rc.gather_prefetch, cache_key=cache_key)
 
     # ------------------------------------------------------------------ #
     # Parameters / optimizer
@@ -272,19 +348,59 @@ class Session:
     # ------------------------------------------------------------------ #
 
     def describe(self) -> dict:
-        """Geometry, schedule and cost summary (device-free)."""
+        """Geometry, schedule-plan and simulated-cost summary.
+
+        Device-free: the schedule numbers come from the discrete-event
+        simulator (``core/simulator.py``) under the session's hardware
+        cost preset — bubble ratio and gathers/rank are the *timed*
+        quantities, not static tick counts. For ``schedule="auto"``
+        sessions the dict describes the *selected* plan and lists every
+        candidate's simulated makespan under ``schedule.auto``.
+        """
         cfg, rc, geo = self.cfg, self.rc, self.geo
         seg = geo.segments[-1]  # "main", or "dec" for enc-dec families
-        unit = (rc.unit_size if rc.schedule == "zeropp"
+        unit = (rc.unit_size if rc.schedule in UNIT_GATED_SCHEDULES
                 else rc.microbatches)
-        tt = generate(rc.schedule, SchedParams(
-            P=rc.pp, V=seg.vpp, n_mb=rc.microbatches, unit=unit))
+        if self.plan_selection is not None:
+            plan = self.plan_selection.selected
+            ana = self.plan_selection.analysis
+        else:
+            plan = SchedulePlan.build(
+                rc.schedule,
+                SchedParams(P=rc.pp, V=seg.vpp, n_mb=rc.microbatches,
+                            unit=unit),
+                prefetch=rc.gather_prefetch)
+            cm = self._cost_model(seg.vpp)
+            ana = plan.analyze(cm if plan.has_w else fused_cost_model(cm),
+                               preset=self.spec.cost_preset)
         n_params = sum(int(np.prod(s.shape))
                        for s in M.io_specs(cfg).values())
         for sg in geo.segments:
             n_params += geo.seg_stages(sg) * sum(
                 int(np.prod(s.shape))
                 for s in M.stage_specs(cfg, sg).values())
+        sched: dict[str, Any] = {
+            "name": rc.schedule,
+            "microbatches": rc.microbatches,
+            "unit": unit,
+            "ticks": plan.table.T,
+            "preset": ana.preset,
+            "makespan": ana.makespan,
+            "bubble_ratio": ana.bubble_frac,
+            "peak_mem": ana.peak_mem,
+            "gathers_per_rank": ana.gathers_per_rank,
+            "reduces": ana.n_reduce,
+            "comm_frac": ana.comm_frac,
+        }
+        if self.plan_selection is not None:
+            sel = self.plan_selection
+            sched["auto"] = {
+                "selected": sel.selected.name,
+                "candidates": {
+                    n: (a.makespan if isinstance(a, PlanAnalysis) else
+                        str(a))
+                    for n, a in sel.candidates.items()},
+            }
         return {
             "arch": cfg.name,
             "mode": self.spec.mode,
@@ -296,16 +412,7 @@ class Session:
                      "stages": geo.seg_stages(sg), "k": sg.k}
                     for sg in geo.segments],
             },
-            "schedule": {
-                "name": rc.schedule,
-                "microbatches": rc.microbatches,
-                "unit": unit,
-                "ticks": tt.T,
-                "bubble_ratio": tt.bubble_ratio(),
-                "gathers_per_rank": (
-                    int((tt.gather >= 0).sum()) / tt.P
-                    if tt.gather is not None else 0.0),
-            },
+            "schedule": sched,
             "n_params": n_params,
         }
 

@@ -38,6 +38,12 @@ class SessionSpec:
     # None to derive one from seq_len / global_batch / the RunConfig.
     shape: str | ShapeConfig | None = None
     reduced: bool = True            # reduced() smoke config vs production
+    # pipeline schedule: a registered name, or "auto" to run the §4
+    # selection (every registered schedule + the autogen heuristic,
+    # simulated under `cost_preset`; minimum makespan wins). Shorthand
+    # for overrides["schedule"].
+    schedule: str | None = None
+    cost_preset: str = "a800"       # simulator preset: a800 | tpu_v5e
     overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     optim: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     data: int | None = None         # data-axis size (None -> derived)
@@ -55,6 +61,14 @@ class SessionSpec:
                            _MODE_ALIASES.get(self.mode, self.mode))
         object.__setattr__(self, "overrides", dict(self.overrides or {}))
         object.__setattr__(self, "optim", dict(self.optim or {}))
+        if self.schedule is not None:
+            prev = self.overrides.get("schedule")
+            if prev is not None and prev != self.schedule:
+                raise SessionError(
+                    f"schedule given twice and inconsistently: "
+                    f"schedule={self.schedule!r} vs "
+                    f"overrides['schedule']={prev!r}")
+            self.overrides["schedule"] = self.schedule
 
     # ------------------------------------------------------------------ #
     def validate(self) -> "SessionSpec":
@@ -72,11 +86,19 @@ class SessionSpec:
                 f"unknown RunConfig override(s) {bad}; valid fields: "
                 f"{', '.join(sorted(_RC_FIELDS))}")
         sched = self.overrides.get("schedule")
-        if sched is not None and sched not in SCHEDULE_REGISTRY:
+        if sched is not None and sched != "auto" \
+                and sched not in SCHEDULE_REGISTRY:
             try:
                 SCHEDULE_REGISTRY.get(sched)  # raises with the full hint
             except RegistryError as e:
-                raise SessionError(str(e)) from e
+                raise SessionError(
+                    str(e) + " (or pass schedule='auto' to search the "
+                    "registered schedules)") from e
+        from repro.core.plan import PRESETS
+        if self.cost_preset not in PRESETS:
+            raise SessionError(
+                f"unknown cost_preset {self.cost_preset!r}; known "
+                f"presets: {', '.join(sorted(PRESETS))}")
 
         if isinstance(self.shape, str) and self.shape not in SHAPES:
             raise SessionError(

@@ -91,6 +91,10 @@ class AutogenResult:
     makespan_after: float
     n_insertions: int
     log: list[str]
+    # simulated makespan after init and after each accepted W insertion —
+    # §4's loop only accepts strictly-improving moves, so this is
+    # monotonically non-increasing (property-tested in tests/test_plan.py)
+    makespans: list[float] = dataclasses.field(default_factory=list)
 
 
 def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
@@ -105,6 +109,7 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
     t0 = res.makespan
     log = [f"init makespan {t0:.3f}"]
     n_ins = 0
+    history = [t0]
 
     for it in range(max_iters):
         res = simulate(tt, cm)
@@ -159,6 +164,7 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
                     orders = trial_orders
                     tt = trial_tt
                     n_ins += 1
+                    history.append(trial_res.makespan)
                     log.append(
                         f"iter {it}: moved {tsk} into {gap:.3f} bubble on "
                         f"r{r_star} v{v_star} -> {trial_res.makespan:.3f}"
@@ -172,7 +178,8 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
             break
 
     final = simulate(tt, cm)
-    return AutogenResult(tt, t0, final.makespan, n_ins, log)
+    return AutogenResult(tt, t0, final.makespan, n_ins, log,
+                         makespans=history)
 
 
 def _postponed(sp: SchedParams) -> TickTable:

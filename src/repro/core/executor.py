@@ -1,0 +1,841 @@
+"""The shared SPMD tick machine and its train/serve handler sets.
+
+One ``TickEngine`` runs every schedule-plan table — train, serve,
+encoder/decoder segments, ZeroPP and all baselines. Each tick it:
+
+  1. stores incoming wires (activations fwd / input-grads bwd) into
+     micro-batch buffers per the plan's static receive maps;
+  2. conditionally issues this tick's blockwise FSDP all-gather (§3.3)
+     into a rotating two-slot buffer;
+  3. dispatches this rank's table cell through a branch-handler table
+     ({NOP, F, B, W} for training, {NOP, F} for serving);
+  4. (training) conditionally reduce-scatters a finished stage block's
+     gradients (once per scheduling unit, §3.3);
+  5. runs the boundary ``ppermute``s around the intra-group stage ring.
+
+Steps 1/2/4/5 — the gather/reduce/wire plumbing — live here once; the
+bodies below (``train_body`` / ``serve_body``) only supply the branch
+handlers (F/B/W math, loss seeding, KV-cache get/put) and the carry
+extras those handlers need. ``core/pipeline.py`` keeps the Runtime and
+the jit/shard_map step builders on top of these bodies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fsdp
+from repro.core.plan import PackedTable
+from repro.core.tape import Tape
+from repro.models import blocks, model as M
+from repro.models.common import rope_tables
+
+DATA, MODEL, POD = "data", "model", "pod"
+
+
+# --------------------------------------------------------------------------- #
+# Small dynamic-index helpers (shared by all handlers)
+# --------------------------------------------------------------------------- #
+
+
+def _dyn_set2(buf, i, j, val):
+    """buf[i, j] = val with dynamic scalar indices."""
+    row = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+    row = jax.lax.dynamic_update_index_in_dim(row, val, j, 0)
+    return jax.lax.dynamic_update_index_in_dim(buf, row, i, 0)
+
+
+def _dyn_get2(buf, i, j):
+    row = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+    return jax.lax.dynamic_index_in_dim(row, j, 0, keepdims=False)
+
+
+def _dyn_add(buf, i, val):
+    old = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+    return jax.lax.dynamic_update_index_in_dim(buf, old + val, i, 0)
+
+
+def _gathered_shape(spec, dsize, ep):
+    return spec.shape
+
+
+def _local_shape(spec, dsize, ep):
+    ld = fsdp.local_dim(spec, dsize, ep)
+    if ld is None:
+        return spec.shape
+    sh = list(spec.shape)
+    sh[ld] = sh[ld] // dsize
+    return tuple(sh)
+
+
+def _loss_iog_proto(cfg, io_p, vloc):
+    names = ["final_norm.scale"]
+    if cfg.norm == "layernorm":
+        names.append("final_norm.bias")
+    names.append("embed.table" if cfg.tie_embeddings else "head.w")
+    if cfg.mtp:
+        names += [n for n in io_p
+                  if n.startswith(("mtp.proj", "mtp.layer", "mtp.norm"))]
+        if not cfg.tie_embeddings:
+            names.append("embed.table")  # MTP ties emb grads in too
+    return {n: io_p[n] for n in names}
+
+
+def _rope_for(cfg, rc, seq):
+    dims = {cfg.head_dim}
+    if cfg.mla is not None:
+        dims.add(cfg.mla.rope_dims)
+    return {e: rope_tables(seq, e, cfg.rope_theta) for e in dims}
+
+
+def make_tok_slice(g_rank, Btot: int, mbs: int) -> Callable:
+    """This rank's micro-batch slice of a [global_batch, ...] array."""
+    def tok_slice(arr, u):
+        start = (g_rank * Btot + u) * mbs
+        return jax.lax.dynamic_slice_in_dim(arr, start, mbs, axis=0)
+    return tok_slice
+
+
+# --------------------------------------------------------------------------- #
+# The tick engine
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class TickEngine:
+    """Scans one PackedTable with the shared gather/reduce/wire plumbing.
+
+    Handlers receive ``(carry, row)`` and return the updated carry; they
+    read stage parameters via ``stage_params`` and may use any extra
+    carry entries the body placed there. ``rs_dtype`` enables the
+    per-unit reduce-scatter step (training only).
+    """
+
+    pt: PackedTable
+    Pe: int
+    G: int
+    V: int
+    specs: dict
+    gatherable: list
+    seg_p: dict
+    dsize: int
+    ep: bool
+    cdt: Any
+    p_rank: Any
+    g_rank: Any
+    backward: bool = False
+    rs_dtype: Any = None
+
+    # ------------------------------------------------------------------ #
+    def stage_params(self, v, use_slot, gbuf):
+        """Params of local slot v: gathered buffer or resident stack."""
+        out = {}
+        for n in self.specs:
+            if n in self.gatherable:
+                out[n] = jax.lax.dynamic_index_in_dim(
+                    gbuf[n], jnp.clip(use_slot, 0, 1), 0, keepdims=False)
+            else:
+                out[n] = jax.lax.dynamic_index_in_dim(
+                    self.seg_p[n], jnp.clip(v, 0, self.V - 1), 0,
+                    keepdims=False)
+        return out
+
+    def init_gbuf(self):
+        """Rotating two-slot buffer for blockwise FSDP gathers."""
+        return {
+            n: jnp.zeros(
+                (2, *_gathered_shape(self.specs[n], self.dsize, self.ep)),
+                self.cdt)
+            for n in self.gatherable
+        }
+
+    # ------------------------------------------------------------------ #
+    def _store_wires(self, c, row):
+        """Step 1: land last boundary's wires in the mb buffers."""
+        Btot, U = self.pt.n_mb, self.pt.U
+        ruf = row["recv_f_u"]
+        c["xbuf"] = jax.lax.cond(
+            ruf >= 0,
+            lambda b: jax.lax.dynamic_update_index_in_dim(
+                b, c["recv_f"], jnp.clip(ruf, 0, Btot) % U, 0),
+            lambda b: b, c["xbuf"])
+        if self.backward:
+            rub = row["recv_b_u"]
+            c["bbuf"] = jax.lax.cond(
+                rub >= 0,
+                lambda b: jax.lax.dynamic_update_index_in_dim(
+                    b, c["recv_b"], jnp.clip(rub, 0, Btot) % U, 0),
+                lambda b: b, c["bbuf"])
+        return c
+
+    def _gather_step(self, c, row):
+        """Step 2: blockwise FSDP gather into the rotating slot."""
+        gv, gs = row["gather_v"], row["gather_slot"]
+
+        def do_gather(gb):
+            gb = dict(gb)
+            for n in self.gatherable:
+                pv = jax.lax.dynamic_index_in_dim(
+                    self.seg_p[n], jnp.clip(gv, 0, self.V - 1), 0,
+                    keepdims=False)
+                ld = fsdp.local_dim(self.specs[n], self.dsize, self.ep)
+                full = jax.lax.all_gather(pv, DATA, axis=ld, tiled=True)
+                gb[n] = jax.lax.dynamic_update_index_in_dim(
+                    gb[n], full.astype(self.cdt), jnp.clip(gs, 0, 1), 0)
+            return gb
+
+        if self.gatherable:
+            c["gbuf"] = jax.lax.cond(gv >= 0, do_gather, lambda gb: gb,
+                                     c["gbuf"])
+        return c
+
+    def _reduce_step(self, c, row):
+        """Step 4: per-unit blockwise reduce-scatter of finished grads."""
+        rv = row["reduce_v"]
+        rs_dt = jnp.dtype(self.rs_dtype)
+
+        def do_reduce(args):
+            full, shard = args
+            full, shard = dict(full), dict(shard)
+            for n in full:
+                g = jax.lax.dynamic_index_in_dim(
+                    full[n], jnp.clip(rv, 0, self.V - 1), 0,
+                    keepdims=False)
+                red = fsdp.reduce_scatter_grad(g.astype(rs_dt),
+                                               self.specs[n],
+                                               self.dsize, self.ep)
+                shard[n] = _dyn_add(shard[n], rv, red.astype(jnp.float32))
+                full[n] = jax.lax.dynamic_update_index_in_dim(
+                    full[n], jnp.zeros_like(g), jnp.clip(rv, 0, self.V - 1),
+                    0)
+            return full, shard
+
+        c["acc_full"], c["acc_shard"] = jax.lax.cond(
+            rv >= 0, do_reduce, lambda a: a,
+            (c["acc_full"], c["acc_shard"]))
+        return c
+
+    def _boundary(self, c):
+        """Step 5: boundary permutes (intra-group stage rings)."""
+        c["recv_f"] = jax.lax.ppermute(c["send_f"], MODEL,
+                                       fsdp.pipe_perm(self.Pe, self.G, +1))
+        if self.backward:
+            c["recv_b"] = jax.lax.ppermute(
+                c["send_b"], MODEL, fsdp.pipe_perm(self.Pe, self.G, -1))
+        return c
+
+    # ------------------------------------------------------------------ #
+    def run(self, carry, branches: list):
+        """lax.scan the plan's ticks, dispatching cells to ``branches``.
+
+        ``branches`` is the {NOP, F[, B, W]} handler table; a 2-entry
+        table (serving) clamps B/W cells to the F handler's index so
+        forward-only tables never index out of range.
+        """
+        def tick(c, row_all):
+            row = {k: a[self.p_rank] for k, a in row_all.items()}
+            c = dict(c)
+            c = self._store_wires(c, row)
+            c = self._gather_step(c, row)
+            kind = (row["kind"] if len(branches) == 4
+                    else jnp.minimum(row["kind"], len(branches) - 1))
+            c = jax.lax.switch(kind, branches, c, row)
+            if self.rs_dtype is not None:
+                c = self._reduce_step(c, row)
+            c = self._boundary(c)
+            return c, ()
+
+        carry, _ = jax.lax.scan(tick, carry, self.pt.rows())
+        return carry
+
+
+# --------------------------------------------------------------------------- #
+# Training: segment scan as F/B/W handlers over the engine
+# --------------------------------------------------------------------------- #
+
+
+def segment_train_scan(
+    rt, seg, pt: PackedTable, seg_p, io_p, batch, mbs, seq,
+    vloc, denom, aux_seed, io_g0, metrics0, p_rank, g_rank, *,
+    inject: str, seed: str | None, membuf, dmembuf, seed_buf=None,
+    carry_in=None, tmpl_override=None,
+):
+    """Run one segment's schedule-plan as a tick-engine scan.
+
+    inject:  batch key providing stage-0 inputs (int tokens or float embeds)
+    seed:    "loss" (LM head at last stage) | "buffer" (seed_buf[u]) | None
+    membuf:  None | "collect" (store drain outputs) | array [U, mbs, ctx, d]
+             (cross-attention memory for decoder segments)
+    dmembuf: "collect" to accumulate d(enc_memory) during B tasks
+    carry_in: reuse stash buffers from a previous scan of the same segment
+    """
+    cfg, rc = rt.cfg, rt.rc
+    from repro.core import vocab as Vb
+
+    cdt = jnp.dtype(rc.compute_dtype)
+    d = cfg.d_model
+    V, Pe, G, U = seg.vpp, rt.Pe, rt.G, pt.U
+    Btot = pt.n_mb
+    S = Pe * V
+    specs = rt.stage_specs[seg.name]
+    gatherable = rt.gatherable[seg.name]
+    ep_names = set(rt.ep_names[seg.name])
+    ep_axis = DATA if (rt.ep and any(
+        k.endswith(":moe") for k in seg.kinds)) else None
+    has_cross = membuf is not None and not isinstance(membuf, str)
+    cross_ctx = cfg.encdec.enc_ctx if (has_cross and cfg.encdec) else None
+    # Fused-backward baselines have no W tasks: every dense's dW is
+    # computed immediately inside B (classic 1F1B/GPipe semantics).
+    if tmpl_override is not None:
+        no_defer, tmpl = tmpl_override
+    else:
+        no_defer = set(ep_names) if pt.has_w else set(specs)
+        if rc.no_defer_extra and pt.has_w:
+            no_defer |= {n for n in specs
+                         if any(sub in n for sub in rc.no_defer_extra)}
+        tmpl = rt._stash_tmpl(seg, (mbs, seq), no_defer,
+                              cross_ctx=cross_ctx)
+    tokens = batch[inject]
+    int_tokens = jnp.issubdtype(tokens.dtype, jnp.integer)
+    labels = batch.get("labels")
+
+    rope = _rope_for(cfg, rc, seq)
+    dsize = rt.dsize
+
+    eng = TickEngine(
+        pt=pt, Pe=Pe, G=G, V=V, specs=specs, gatherable=gatherable,
+        seg_p=seg_p, dsize=dsize, ep=rt.ep, cdt=cdt,
+        p_rank=p_rank, g_rank=g_rank, backward=True,
+        rs_dtype=rc.grad_rs_dtype)
+    tok_slice = make_tok_slice(g_rank, Btot, mbs)
+    stage_params = eng.stage_params
+
+    # ---- carry ------------------------------------------------------------ #
+    act = (mbs, seq, d)
+    zeros_act = jnp.zeros(act, cdt)
+    if carry_in is None:
+        carry = dict(
+            send_f=zeros_act, send_b=zeros_act,
+            recv_f=zeros_act, recv_b=zeros_act,
+            xbuf=jnp.zeros((U, *act), cdt),
+            bbuf=jnp.zeros((U, *act), cdt),
+            fstash=jnp.zeros((V, U, *act), cdt),
+            wx=[jnp.zeros((V, U, *sh), dt) for sh, dt in tmpl.x_shapes],
+            wdy=[jnp.zeros((V, U, *sh), dt) for sh, dt in tmpl.dy_shapes],
+            gbuf=eng.init_gbuf(),
+            acc_full={n: jnp.zeros((V, *specs[n].shape), jnp.float32)
+                      for n in specs if n not in ep_names},
+            acc_shard={n: jnp.zeros(
+                (V, *_local_shape(specs[n], dsize, rt.ep)), jnp.float32)
+                for n in specs},
+            io_g=io_g0,
+            metrics=metrics0,
+        )
+    else:
+        carry = carry_in
+        carry["io_g"] = io_g0
+        carry["metrics"] = metrics0
+    if membuf == "collect":
+        carry["membuf"] = jnp.zeros((Btot, mbs, seq, d), cdt)
+    if dmembuf == "collect":
+        enc_ctx2 = cfg.encdec.enc_ctx
+        carry["dmembuf"] = jnp.zeros((Btot, mbs, enc_ctx2, d), cdt)
+
+    # ---- branch bodies ----------------------------------------------------#
+    def make_ctx(tape, u):
+        """Returns (ctx, mem_tval or None)."""
+        mem = None
+        if has_cross:
+            mem = tape.value(jax.lax.dynamic_index_in_dim(
+                membuf, u, 0, keepdims=False))
+        ctx = blocks.LayerCtx(cfg=cfg, rc=rc, rope=rope, causal=seg.causal,
+                              ep_axis=ep_axis, enc_memory=mem)
+        return ctx, mem
+
+    def get_input(c, u, v):
+        uu = u % U
+        x = jax.lax.dynamic_index_in_dim(c["xbuf"], uu, 0, keepdims=False)
+        is_inject = (p_rank == 0) & (v == 0)
+
+        def do_embed(_):
+            ids_or_emb = tok_slice(tokens, u)
+            if int_tokens:
+                return Vb.embed_lookup(io_p["embed.table"], ids_or_emb,
+                                       vloc, cdt)
+            return ids_or_emb.astype(cdt)
+
+        return jax.lax.cond(is_inject, do_embed, lambda _: x, None)
+
+    def f_branch(c, row):
+        u, v = row["mb"], row["v"]
+        uu = u % U
+        x = get_input(c, u, v)
+        params_v = stage_params(v, row["use_slot"], c["gbuf"])
+        t = Tape(params_v, mode="fwd", no_defer=frozenset(no_defer))
+        stage_id = v * Pe + p_rank
+        ctx, _ = make_ctx(t, u)
+        y, _aux = M.apply_stage(t, ctx, seg, t.value(x), stage_id)
+        c = dict(c)
+        c["fstash"] = _dyn_set2(c["fstash"], v, uu, x)
+        c["send_f"] = y.val
+        if "membuf" in c:
+            is_drain = (p_rank == Pe - 1) & (v == V - 1)
+            c["membuf"] = jax.lax.cond(
+                is_drain,
+                lambda mb: jax.lax.dynamic_update_index_in_dim(
+                    mb, y.val, u, 0),
+                lambda mb: mb, c["membuf"])
+        return c
+
+    def b_branch(c, row):
+        u, v = row["mb"], row["v"]
+        uu = u % U
+        x = jax.lax.dynamic_index_in_dim(c["fstash"], jnp.clip(v, 0, V - 1),
+                                         0, keepdims=False)
+        x = jax.lax.dynamic_index_in_dim(x, uu, 0, keepdims=False)
+        params_v = stage_params(v, row["use_slot"], c["gbuf"])
+        t = Tape(params_v, mode="bwd", no_defer=frozenset(no_defer))
+        ctx, mem_tv = make_ctx(t, u)
+        stage_id = v * Pe + p_rank
+        xin = t.value(x)
+        out, aux = M.apply_stage(t, ctx, seg, xin, stage_id)
+
+        is_last = (p_rank == Pe - 1) & (v == V - 1)
+        c = dict(c)
+        if seed == "loss":
+            def with_loss(_):
+                h = out.val.reshape(mbs * seq, d)
+                lab_u = tok_slice(labels, u).reshape(mbs * seq)
+                loss, dh, iog = Vb.loss_and_dy(
+                    cfg, rc, io_p, h, lab_u, denom, vloc, dsize)
+                if cfg.mtp:
+                    # DeepSeek multi-token-prediction aux head: one extra
+                    # layer over [norm(h); emb(label_t)] predicting t+2.
+                    lam = M.MTP_WEIGHT
+                    lab2d = tok_slice(labels, u)
+                    emb_next = Vb.embed_lookup(
+                        io_p["embed.table"], lab2d, vloc, out.val.dtype)
+                    mtp_ep = DATA if rt.ep else None
+                    hm, mtp_vjp = jax.vjp(
+                        lambda hh, ee, mp: M.mtp_hidden(
+                            cfg, rc, {**io_p, **mp}, hh, ee,
+                            ep_axis=mtp_ep),
+                        out.val, emb_next,
+                        {n: a for n, a in io_p.items()
+                         if n.startswith(("mtp.proj", "mtp.layer"))})
+                    lab_mtp = jnp.concatenate(
+                        [lab2d[:, 1:], lab2d[:, -1:]], 1).reshape(-1)
+                    mask = jnp.concatenate(
+                        [jnp.ones((mbs, seq - 1), jnp.float32),
+                         jnp.zeros((mbs, 1), jnp.float32)], 1).reshape(-1)
+                    denom_mtp = float(denom / seq * (seq - 1))
+                    l_m, dhm, iog_m = Vb.loss_and_dy(
+                        cfg, rc, io_p, hm.reshape(mbs * seq, d), lab_mtp,
+                        denom_mtp, vloc, dsize, norm_key="mtp.norm",
+                        mask=mask)
+                    dh_b, demb, dmtp = mtp_vjp(
+                        (lam * dhm).reshape(mbs, seq, d).astype(hm.dtype))
+                    dh2 = dh.reshape(mbs, seq, d) + dh_b.astype(dh.dtype)
+                    loss = loss + lam * l_m
+                    proto = _loss_iog_proto(cfg, io_p, vloc)
+                    for nk, v2 in proto.items():
+                        if nk not in iog:
+                            iog[nk] = jnp.zeros(v2.shape, jnp.float32)
+                    for nk, gv in iog_m.items():
+                        iog[nk] = iog[nk] + lam * gv
+                    for nk, gv in dmtp.items():
+                        iog[nk] = iog[nk] + gv.astype(jnp.float32)
+                    # emb_next gradient scatters into the embedding rows
+                    iog["__emb_mtp_ids"] = lab2d
+                    iog["__emb_mtp_dx"] = demb.astype(jnp.float32)
+                    return dh2, loss, iog
+                proto = _loss_iog_proto(cfg, io_p, vloc)
+                for nk, v2 in proto.items():
+                    if nk not in iog:
+                        iog[nk] = jnp.zeros(v2.shape, jnp.float32)
+                return dh.reshape(mbs, seq, d), loss, iog
+
+            def no_loss(_):
+                dy = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
+                                                  keepdims=False)
+                iog = {n: jnp.zeros(v2.shape, jnp.float32) for n, v2 in
+                       _loss_iog_proto(cfg, io_p, vloc).items()}
+                if cfg.mtp:
+                    iog["__emb_mtp_ids"] = jnp.zeros((mbs, seq), jnp.int32)
+                    iog["__emb_mtp_dx"] = jnp.zeros((mbs, seq, d),
+                                                    jnp.float32)
+                return dy, jnp.zeros((), jnp.float32), iog
+
+            dy, loss_d, iog_d = jax.lax.cond(is_last, with_loss, no_loss,
+                                             None)
+            c["io_g"] = dict(c["io_g"])
+            c["metrics"] = dict(c["metrics"])
+            if cfg.mtp:
+                ids_m = iog_d.pop("__emb_mtp_ids")
+                dx_m = iog_d.pop("__emb_mtp_dx")
+                acc_m, dr_m = Vb.embed_grad(
+                    ids_m, dx_m, vloc, cfg.vocab,
+                    c["io_g"]["embed.table"])
+                c["io_g"]["embed.table"] = acc_m
+                c["metrics"]["emb_dropped"] = (
+                    c["metrics"]["emb_dropped"] + dr_m)
+            for n, g in iog_d.items():
+                c["io_g"][n] = c["io_g"][n] + g
+            c["metrics"] = dict(c["metrics"])
+            c["metrics"]["loss_sum"] = c["metrics"]["loss_sum"] + loss_d
+        elif seed == "buffer":
+            dy_seed = jax.lax.dynamic_index_in_dim(seed_buf, u, 0,
+                                                   keepdims=False)
+            dy_wire = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
+                                                   keepdims=False)
+            dy = jnp.where(is_last, dy_seed.astype(cdt), dy_wire)
+        else:
+            dy = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
+                                              keepdims=False)
+
+        seeds = {out.idx: dy.astype(out.val.dtype)}
+        if aux is not None:
+            seeds[aux.idx] = jnp.asarray(aux_seed, jnp.float32)
+        cots, igrads, stash = t.backward(seeds)
+        dx = cots[xin.idx]
+        c["send_b"] = dx.astype(cdt)
+
+        # stash (x, dy) pairs for the deferred W task
+        sx: dict[int, Any] = {}
+        for (pname, spec_s, xs_i, dy_i), s in zip(tmpl.entries, stash):
+            if xs_i not in sx:
+                c["wx"][xs_i] = _dyn_set2(c["wx"][xs_i], v, uu,
+                                          s.x.astype(c["wx"][xs_i].dtype))
+                sx[xs_i] = True
+            c["wdy"][dy_i] = _dyn_set2(c["wdy"][dy_i], v, uu,
+                                       s.dy.astype(c["wdy"][dy_i].dtype))
+        c["wx"] = list(c["wx"])
+        c["wdy"] = list(c["wdy"])
+
+        # immediate grads: EP experts -> sharded accum; small -> full accum
+        for n, g in igrads.items():
+            if n in ep_names:
+                c["acc_shard"] = dict(c["acc_shard"])
+                c["acc_shard"][n] = _dyn_add(c["acc_shard"][n], v,
+                                             g.astype(jnp.float32))
+            else:
+                c["acc_full"] = dict(c["acc_full"])
+                c["acc_full"][n] = _dyn_add(c["acc_full"][n], v,
+                                            g.astype(jnp.float32))
+
+        # embedding gradient at the first stage
+        if int_tokens:
+            is_first = (p_rank == 0) & (v == 0)
+
+            def emb_g(args):
+                acc, drop = args
+                ids = tok_slice(tokens, u)
+                acc2, dr = Vb.embed_grad(ids, dx.astype(jnp.float32), vloc,
+                                         cfg.vocab, acc)
+                return acc2, drop + dr
+
+            c["io_g"] = dict(c["io_g"])
+            c["metrics"] = dict(c["metrics"])
+            acc2, drop2 = jax.lax.cond(
+                is_first, emb_g, lambda a: a,
+                (c["io_g"]["embed.table"], c["metrics"]["emb_dropped"]))
+            c["io_g"]["embed.table"] = acc2
+            c["metrics"]["emb_dropped"] = drop2
+
+        if "dmembuf" in c and has_cross and mem_tv is not None:
+            # cotangent of the cross-attention memory input
+            dmem = cots.get(mem_tv.idx)
+            if dmem is not None:
+                c["dmembuf"] = _dyn_add(c["dmembuf"], u,
+                                        dmem.astype(cdt))
+
+        c["metrics"] = dict(c["metrics"])
+        c["metrics"]["aux_sum"] = (
+            c["metrics"]["aux_sum"] + aux.val.astype(jnp.float32))
+        return c
+
+    def w_branch(c, row):
+        u, v = row["mb"], row["v"]
+        uu = u % U
+        c = dict(c)
+        c["acc_full"] = dict(c["acc_full"])
+        c["acc_shard"] = dict(c["acc_shard"])
+        for (pname, spec_s, xs_i, dy_i) in tmpl.entries:
+            xv = _dyn_get2(c["wx"][xs_i], v, uu)
+            dyv = _dyn_get2(c["wdy"][dy_i], v, uu)
+            g = jnp.einsum(spec_s, xv, dyv).astype(jnp.float32)
+            c["acc_full"][pname] = _dyn_add(c["acc_full"][pname], v, g)
+        return c
+
+    def nop_branch(c, row):
+        return c
+
+    carry = eng.run(carry, [nop_branch, f_branch, b_branch, w_branch])
+
+    return {
+        "stage_grads": carry["acc_shard"],
+        "io_grads": carry["io_g"],
+        "metrics": carry["metrics"],
+        "membuf": carry.get("membuf"),
+        "dmembuf": carry.get("dmembuf"),
+        "carry_out": carry,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Train body (the SPMD program under shard_map)
+# --------------------------------------------------------------------------- #
+
+
+def train_body(params, batch, *, rt, shape_cfg, mbs, vloc,
+               denom, aux_seed):
+    """The SPMD program (runs per device under shard_map)."""
+    cfg, rc = rt.cfg, rt.rc
+
+    io_p = params["io"]
+    mr = jax.lax.axis_index(MODEL)
+    Pe, G, V = rt.Pe, rt.G, rc.vpp
+    p_rank = mr % Pe
+    g_rank = mr // Pe
+
+    # io params arrive in their local (possibly vocab-sharded) shapes
+    io_zero = {n: jnp.zeros(a.shape, jnp.float32) for n, a in io_p.items()}
+
+    metrics0 = {"loss_sum": jnp.zeros((), jnp.float32),
+                "aux_sum": jnp.zeros((), jnp.float32),
+                "emb_dropped": jnp.zeros((), jnp.int32)}
+
+    if cfg.encdec is None:
+        seg = rt.segs["main"]
+        pt = rt.tables["main"]
+        res = segment_train_scan(
+            rt, seg, pt, params["segments"]["main"], io_p,
+            batch, mbs, shape_cfg.seq_len, vloc, denom, aux_seed,
+            io_zero, metrics0, p_rank, g_rank,
+            inject="tokens", seed="loss", membuf=None, dmembuf=None,
+        )
+        seg_grads = {"main": res["stage_grads"]}
+        io_g, metrics = res["io_grads"], res["metrics"]
+    else:
+        seg_e, seg_d = rt.segs["enc"], rt.segs["dec"]
+        enc_ctx = cfg.encdec.enc_ctx
+        # the enc forward scan must allocate the stash buffers its later
+        # backward scan (which *does* defer W) will fill
+        enc_nd = set(rt.ep_names["enc"])
+        enc_tmpl = (enc_nd, rt._stash_tmpl(seg_e, (mbs, enc_ctx), enc_nd))
+        # 1) encoder forward (stash inputs for its later backward)
+        res_e = segment_train_scan(
+            rt, seg_e, rt.tables["enc_fwd"], params["segments"]["enc"],
+            io_p, batch, mbs, enc_ctx, vloc, denom, aux_seed,
+            io_zero, metrics0, p_rank, g_rank,
+            inject="enc_tokens", seed=None, membuf="collect", dmembuf=None,
+            tmpl_override=enc_tmpl,
+        )
+        membuf = jax.lax.psum(res_e["membuf"], MODEL)
+        # 2) decoder train (full F/B/W) with cross-attention memory
+        res_d = segment_train_scan(
+            rt, seg_d, rt.tables["dec"], params["segments"]["dec"], io_p,
+            batch, mbs, shape_cfg.seq_len, vloc, denom, aux_seed,
+            res_e["io_grads"], res_e["metrics"], p_rank, g_rank,
+            inject="tokens", seed="loss", membuf=membuf, dmembuf="collect",
+        )
+        dmem = jax.lax.psum(res_d["dmembuf"], MODEL)
+        # 3) encoder backward (B/W only, seeded by accumulated dMemory)
+        res_eb = segment_train_scan(
+            rt, seg_e, rt.tables["enc_bwd"], params["segments"]["enc"],
+            io_p, batch, mbs, enc_ctx, vloc, denom, aux_seed,
+            res_d["io_grads"], res_d["metrics"], p_rank, g_rank,
+            inject="enc_tokens", seed="buffer", membuf=None, dmembuf=None,
+            seed_buf=dmem, carry_in=res_e["carry_out"],
+            tmpl_override=enc_tmpl,
+        )
+        seg_grads = {"enc": res_eb["stage_grads"],
+                     "dec": res_d["stage_grads"]}
+        io_g, metrics = res_eb["io_grads"], res_eb["metrics"]
+
+    # ---- cross-group / cross-pod gradient reduction ----------------------- #
+    for sname in seg_grads:
+        seg_grads[sname] = {
+            n: fsdp.group_allreduce(g, rt.G, Pe)
+            for n, g in seg_grads[sname].items()
+        }
+        if rt.multi_pod:
+            seg_grads[sname] = {n: jax.lax.psum(g, POD)
+                                for n, g in seg_grads[sname].items()}
+    io_g = {n: jax.lax.psum(g, MODEL) for n, g in io_g.items()}
+    if rt.multi_pod:
+        io_g = {n: jax.lax.psum(g, POD) for n, g in io_g.items()}
+    # replicated io params need the data-sum of per-shard contributions;
+    # vocab-sharded embed/head rows and EP-sharded MTP experts are already
+    # local-complete.
+    ep_io = {n for n, sp_ in rt.io_specs.items() if sp_.ep and rt.ep}
+    for n in io_g:
+        if n in ep_io:
+            continue
+        if vloc is None or n not in ("embed.table", "head.w"):
+            io_g[n] = jax.lax.psum(io_g[n], DATA)
+
+    metrics = {k: jax.lax.psum(v, (DATA, MODEL) + ((POD,) if rt.multi_pod
+                                                   else ()))
+               for k, v in metrics.items()}
+    grads = {"io": io_g, "segments": seg_grads}
+    return grads, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Serving: KV-cache hooks + F handler over the same engine
+# --------------------------------------------------------------------------- #
+
+
+def make_cache_io(cfg, rc, seg, *, seq_shard: bool, g_rank, Btot: int,
+                  mbs: int):
+    """(cache_get, cache_put) hooks for one segment's layer-cache tree."""
+
+    def cache_get(tree, j, v, u):
+        out = {}
+        for n in M.layer_cache_spec(cfg, rc, seg.kinds[j], 1, 1):
+            a = tree[f"L{j}.{n}"]
+            av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
+            if seq_shard:
+                out[n] = av  # batch == full local batch (1)
+            else:
+                start = (g_rank * Btot + u) * mbs
+                out[n] = jax.lax.dynamic_slice_in_dim(av, start, mbs, 0)
+        return out
+
+    def cache_put(tree, j, v, u, cd):
+        for n, val in cd.items():
+            a = tree[f"L{j}.{n}"]
+            av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
+            if seq_shard:
+                av = val.astype(a.dtype)
+            else:
+                start = (g_rank * Btot + u) * mbs
+                av = jax.lax.dynamic_update_slice_in_dim(
+                    av, val.astype(a.dtype), start, 0)
+            tree[f"L{j}.{n}"] = jax.lax.dynamic_update_index_in_dim(
+                a, av, v, 0)
+        return tree
+
+    return cache_get, cache_put
+
+
+def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
+               Btot, vloc, prompt_len, max_seq, seq_shard):
+    cfg, rc = rt.cfg, rt.rc
+    from repro.core import vocab as Vb
+
+    io_p = params["io"]
+    mr = jax.lax.axis_index(MODEL)
+    Pe, G = rt.Pe, rt.G
+    p_rank = mr % Pe
+    g_rank = mr // Pe
+    cdt = jnp.dtype(rc.compute_dtype)
+    d = cfg.d_model
+    s = prompt_len
+    tokens = batch["tokens"]
+    pos = batch.get("pos", jnp.zeros((), jnp.int32))
+
+    seg = rt.segs["dec"] if cfg.encdec is not None else rt.segs["main"]
+    seg_key = "dec" if cfg.encdec is not None else "main"
+    seg_p = params["segments"][seg_key]
+    specs = rt.stage_specs[seg_key]
+    gatherable = rt.gatherable[seg_key]
+    V = seg.vpp
+    pt = rt.tables["serve_dec" if cfg.encdec is not None else "serve_main"]
+    U = pt.U
+    cache_tree = caches[seg_key]
+
+    dims = {cfg.head_dim}
+    if cfg.mla is not None:
+        dims.add(cfg.mla.rope_dims)
+    rope = {e: rope_tables(max_seq, e, cfg.rope_theta) for e in dims}
+    ctx = blocks.LayerCtx(
+        cfg=cfg, rc=rc, rope=rope, causal=True,
+        ep_axis=DATA if rt.ep else None,
+        kv_seq_shard=seq_shard, kv_shards=rt.dsize)
+    if cfg.encdec is not None:
+        ctx.enc_memory = None  # set per micro-batch below
+
+    # The engine's wire buffers are indexed per the serve table
+    # (pt.n_mb / pt.U); the caller's Btot — which make_serve_step may
+    # shrink below rc.microbatches on degenerate tiny batches — only
+    # governs token slicing, cache addressing and the out_tok layout.
+    eng = TickEngine(
+        pt=pt, Pe=Pe, G=G, V=V, specs=specs, gatherable=gatherable,
+        seg_p=seg_p, dsize=rt.dsize, ep=rt.ep, cdt=cdt,
+        p_rank=p_rank, g_rank=g_rank, backward=False, rs_dtype=None)
+    tok_slice = make_tok_slice(g_rank, Btot, mbs)
+    stage_params = eng.stage_params
+    cache_get, cache_put = make_cache_io(
+        cfg, rc, seg, seq_shard=seq_shard, g_rank=g_rank, Btot=Btot,
+        mbs=mbs)
+
+    act = (mbs, s, d)
+    carry = dict(
+        send_f=jnp.zeros(act, cdt),
+        recv_f=jnp.zeros(act, cdt),
+        xbuf=jnp.zeros((U, *act), cdt),
+        gbuf=eng.init_gbuf(),
+        caches=dict(cache_tree),
+        out_tok=jnp.zeros((G * Btot, mbs), jnp.int32),
+    )
+
+    def f_branch(c, row):
+        u, v = row["mb"], row["v"]
+        uu = u % U
+        is_inject = (p_rank == 0) & (v == 0)
+
+        def do_embed(_):
+            ids = tok_slice(tokens, u) if not seq_shard else tokens
+            if jnp.issubdtype(tokens.dtype, jnp.integer):
+                return Vb.embed_lookup(io_p["embed.table"], ids, vloc, cdt)
+            return ids.astype(cdt)
+
+        x = jax.lax.cond(
+            is_inject, do_embed,
+            lambda _: jax.lax.dynamic_index_in_dim(c["xbuf"], uu, 0,
+                                                   keepdims=False), None)
+        params_v = stage_params(v, row["use_slot"], c["gbuf"])
+        if cfg.encdec is not None:
+            mem = caches["enc_memory"]
+            ctx.enc_memory = (mem if seq_shard else tok_slice(mem, u))
+        stage_id = v * Pe + p_rank
+        ch = [cache_get(c["caches"], j, v, u)
+              for j in range(len(seg.kinds))]
+        y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos)
+        c = dict(c)
+        c["caches"] = dict(c["caches"])
+        for j in range(len(seg.kinds)):
+            c["caches"] = cache_put(c["caches"], j, v, u, ch2[j])
+        c["send_f"] = y
+
+        is_drain = (p_rank == Pe - 1) & (v == V - 1)
+
+        def sample(ot):
+            h_last = y[:, -1]
+            tok = Vb.greedy_sample(cfg, rc, io_p, h_last, vloc)
+            return jax.lax.dynamic_update_index_in_dim(
+                ot, tok, g_rank * Btot + (u % Btot), 0)
+
+        c["out_tok"] = jax.lax.cond(is_drain, sample, lambda ot: ot,
+                                    c["out_tok"])
+        return c
+
+    def nop_branch(c, row):
+        return c
+
+    carry = eng.run(carry, [nop_branch, f_branch])
+
+    out_tok = carry["out_tok"].reshape(-1)
+    # drain ranks hold the sampled tokens; share them
+    out_tok = jax.lax.psum(
+        jnp.where((p_rank == Pe - 1), out_tok, jnp.zeros_like(out_tok)),
+        MODEL)
+    caches_out = dict(caches)
+    caches_out[seg_key] = carry["caches"]
+    return out_tok, caches_out

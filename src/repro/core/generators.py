@@ -290,6 +290,25 @@ def _gen_fwd_only(sp: SchedParams) -> TickTable:
                            fwd_only=True)
 
 
+@register_schedule("autogen")
+def _gen_autogen(sp: SchedParams) -> TickTable:
+    """§4 heuristic auto-generation under the abstract unit-cost model.
+
+    ``schedule="auto"`` sessions instead profile with a hardware preset
+    (core.plan.select_plan passes the preset CostModel to autogen), but
+    registering the abstract variant makes ``schedule="autogen"`` usable
+    anywhere a schedule name is (RunConfig, generate_schedule, ...).
+
+    W postponement crosses unit boundaries, so the table keeps the whole
+    batch live (unit = n_mb) — unit-depth stash buffers would be
+    overwritten before the postponed W tasks replay them.
+    """
+    from repro.core.autogen import autogen
+    from repro.core.simulator import CostModel
+
+    return autogen(dataclasses.replace(sp, unit=sp.n_mb), CostModel()).table
+
+
 # --------------------------------------------------------------------------- #
 # FSDP communication events (blockwise gathers, per-unit reduce-scatters)
 # --------------------------------------------------------------------------- #

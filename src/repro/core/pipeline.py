@@ -1,24 +1,19 @@
-"""Table-driven SPMD pipeline executor (the ZeroPP runtime).
+"""Runtime + step builders for the table-driven SPMD pipeline (ZeroPP).
 
-One jitted program per step: ``shard_map`` over the production mesh, inside
-which each segment's schedule runs as a ``lax.scan`` over ticks. Every tick:
+One jitted program per step: ``shard_map`` over the production mesh,
+inside which each segment's ``SchedulePlan`` runs on the shared tick
+engine (``core/executor.py``). The plan objects (``core/plan.py``) bundle
+the TickTable the simulator analyzes with the PackedTable the executor
+scans, so what we analyze is exactly what runs — structurally.
 
-  1. incoming wires (activations fwd / input-grads bwd) are stored into
-     micro-batch buffers per static receive maps derived from the table;
-  2. a ``lax.cond`` issues this tick's FSDP all-gather (blockwise, §3.3)
-     into a rotating two-slot buffer;
-  3. a ``lax.switch`` dispatches {NOP, F, B, W} on this rank's table cell —
-     F runs the tape forward and stashes the stage input (remat), B re-runs
-     forward + input-grad backward and stashes (x, dy) per GEMM, W replays
-     the deferred dW GEMMs (the paper's bubble filler);
-  4. a ``lax.cond`` reduce-scatters a finished stage block's gradients
-     (once per scheduling unit, §3.3);
-  5. boundary ``ppermute``s move activations (+1) and input-grads (−1)
-     around the intra-group stage ring.
+This module owns the *static* side only:
 
-The same executor runs ZeroPP and every baseline (they are just different
-tables), forward-only tables for prefill/decode serving, and the whisper
-encoder/decoder as chained segment scans (enc-fwd → dec-train → enc-bwd).
+  * ``Runtime`` — builds the per-segment SchedulePlans (train, serve,
+    encoder/decoder), parameter specs + shardings, and the W-stash
+    templates the executor's B/W handlers replay;
+  * ``make_train_step`` / ``make_serve_step`` — wrap the executor bodies
+    in ``shard_map`` + ``jit`` with the right in/out specs;
+  * serve-cache construction (``init_serve_caches``).
 
 All rank-varying branching is driven by *static* numpy tables indexed by
 the dynamic model-axis rank — see DESIGN.md §3 for why this is the
@@ -29,142 +24,30 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import fsdp
+from repro.core.executor import (
+    _rope_for,
+    serve_body as _serve_body,
+    train_body as _train_body,
+)
 from repro.core.generators import SchedParams, generate
-from repro.core.schedules import B as KB
-from repro.core.schedules import F as KF
-from repro.core.schedules import NOP as KN
-from repro.core.schedules import W as KW
-from repro.core.schedules import TickTable, to_arrays
-from repro.core.tape import Tape, compute_dw
+from repro.core.plan import (
+    UNIT_GATED_SCHEDULES,
+    PackedTable,
+    SchedulePlan,
+    pack_table,
+    strip_fwd as _strip_fwd,
+)
+from repro.core.tape import Tape
 from repro.models import blocks, model as M
-from repro.models.common import ModelConfig, RunConfig, rope_tables
+from repro.models.common import ModelConfig, RunConfig
 
 DATA, MODEL, POD = "data", "model", "pod"
-
-
-# --------------------------------------------------------------------------- #
-# Static table preprocessing
-# --------------------------------------------------------------------------- #
-
-
-@dataclasses.dataclass
-class PackedTable:
-    """Device-ready per-tick arrays [T, Pe] + static metadata."""
-
-    T: int
-    Pe: int            # ranks per pipeline group
-    V: int
-    U: int             # unit size (xbuf/stash depth)
-    n_mb: int
-    kind: np.ndarray   # [T, Pe] {0 nop, 1 F, 2 B, 3 W}
-    mb: np.ndarray     # [T, Pe] microbatch index
-    v: np.ndarray      # [T, Pe] local stage slot
-    gather_v: np.ndarray    # [T, Pe] slot to all-gather (-1 none)
-    gather_slot: np.ndarray  # [T, Pe] double-buffer slot for that gather
-    use_slot: np.ndarray    # [T, Pe] which buffer slot holds params of v
-    reduce_v: np.ndarray    # [T, Pe] slot to reduce-scatter (-1 none)
-    recv_f_u: np.ndarray    # [T, Pe] mb arriving on fwd wire this tick (-1)
-    recv_b_u: np.ndarray    # [T, Pe] mb arriving on bwd wire this tick (-1)
-
-    def rows(self):
-        """As jnp arrays stacked for lax.scan xs."""
-        fields = ["kind", "mb", "v", "gather_v", "gather_slot", "use_slot",
-                  "reduce_v", "recv_f_u", "recv_b_u"]
-        return {f: jnp.asarray(getattr(self, f)) for f in fields}
-
-    @property
-    def has_w(self) -> bool:
-        """False for fused-backward baselines (dW computed inside B)."""
-        return bool((self.kind == KW).any())
-
-
-def pack_table(tt: TickTable, prefetch: int = 0) -> PackedTable:
-    arr = to_arrays(tt)
-    T, Pe = arr["kind"].shape
-    V = tt.V
-    kind, mb, v = arr["kind"], arr["mb"], arr["v"]
-    gather_v = arr["gather"]
-    reduce_v = arr["reduce"]
-
-    if prefetch > 0:
-        # §3.3 prefetch: issue each stage-block gather up to `prefetch`
-        # ticks before its first use so the async all-gather overlaps the
-        # previous block's compute. Safe moves only: the target tick must
-        # be gather-free, and no task between target and origin may still
-        # be *reading* the destination buffer slot (the slot parity
-        # alternates per gather, so skipping past reads of the other slot
-        # is fine — we recompute slot assignments afterwards).
-        for p_ in range(Pe):
-            order = [t for t in range(T) if gather_v[t, p_] >= 0]
-            for gi, t in enumerate(order):
-                slot_parity = gi % 2
-                tgt = t
-                for back in range(1, prefetch + 1):
-                    cand = t - back
-                    if cand < 0 or gather_v[cand, p_] >= 0:
-                        break
-                    # reads of the same slot between cand and t?
-                    conflict = False
-                    for tt_ in range(cand, t):
-                        if kind[tt_, p_] in (KF, KB, KW):
-                            # which slot does that task read? parity of
-                            # the most recent gather before tt_
-                            prev = [g for g in order[:gi] if g <= tt_]
-                            if prev and (len(prev) - 1) % 2 == slot_parity:
-                                conflict = True
-                                break
-                    if conflict:
-                        break
-                    tgt = cand
-                if tgt != t:
-                    gather_v[tgt, p_] = gather_v[t, p_]
-                    gather_v[t, p_] = -1
-
-    # Rotating two-slot gather buffer assignment.
-    gather_slot = -np.ones((T, Pe), np.int32)
-    use_slot = np.zeros((T, Pe), np.int32)
-    for p in range(Pe):
-        nxt = 0
-        holds = {}  # v -> slot
-        for t in range(T):
-            if gather_v[t, p] >= 0:
-                gather_slot[t, p] = nxt
-                holds[gather_v[t, p]] = nxt
-                nxt = 1 - nxt
-            if kind[t, p] in (KF, KB, KW):
-                use_slot[t, p] = holds.get(v[t, p], 0)
-
-    # Receive maps: what lands on each wire at the END of tick t-1 (i.e. is
-    # available at tick t). Sender of fwd wire for rank p is p-1 (ring).
-    recv_f_u = -np.ones((T, Pe), np.int32)
-    recv_b_u = -np.ones((T, Pe), np.int32)
-    S = Pe * V
-    for t in range(1, T):
-        for p in range(Pe):
-            prev = (p - 1) % Pe
-            if kind[t - 1, prev] == KF:
-                stage = v[t - 1, prev] * Pe + prev
-                if stage < S - 1:
-                    recv_f_u[t, p] = mb[t - 1, prev]
-            nxt_r = (p + 1) % Pe
-            if kind[t - 1, nxt_r] == KB:
-                stage = v[t - 1, nxt_r] * Pe + nxt_r
-                if stage > 0:
-                    recv_b_u[t, p] = mb[t - 1, nxt_r]
-    return PackedTable(
-        T=T, Pe=Pe, V=V, U=tt.unit, n_mb=tt.n_mb,
-        kind=kind, mb=mb, v=v,
-        gather_v=gather_v, gather_slot=gather_slot, use_slot=use_slot,
-        reduce_v=reduce_v, recv_f_u=recv_f_u, recv_b_u=recv_b_u,
-    )
 
 
 # --------------------------------------------------------------------------- #
@@ -242,10 +125,17 @@ def stash_template(cfg, rc, seg, specs, mb_shape, no_defer,
 
 class Runtime:
     """Builds and runs the SPMD train/prefill/decode programs for one
-    (ModelConfig, RunConfig) on a ("data","model"[, "pod"]) mesh."""
+    (ModelConfig, RunConfig) on a ("data","model"[, "pod"]) mesh.
+
+    ``plan`` (optional) injects a pre-selected :class:`SchedulePlan` —
+    e.g. the winner of ``schedule="auto"`` — for the trainable segment
+    ("main", or "dec" for enc-dec families) instead of regenerating the
+    table from ``rc.schedule``.
+    """
 
     def __init__(self, cfg: ModelConfig, rc: RunConfig, mesh,
-                 multi_pod: bool = False):
+                 multi_pod: bool = False,
+                 plan: SchedulePlan | None = None):
         self.cfg, self.rc, self.mesh = cfg, rc, mesh
         self.geo = M.build_geometry(cfg, rc)
         self.multi_pod = multi_pod
@@ -262,17 +152,18 @@ class Runtime:
         if cfg.encdec is not None:
             assert self.G == 1, "enc-dec uses a single pipeline group"
 
-        # --- schedules per segment ---------------------------------------- #
-        # Scheduling units only gate ZeroPP; other methods keep the whole
-        # batch live, so their buffers must be n_mb deep.
-        unit = rc.unit_size if rc.schedule == "zeropp" else rc.microbatches
+        # --- schedule plans per segment ------------------------------------ #
+        # Scheduling units only gate ZeroPP-family schedules; other methods
+        # keep the whole batch live, so their buffers must be n_mb deep.
+        unit = (rc.unit_size if rc.schedule in UNIT_GATED_SCHEDULES
+                else rc.microbatches)
         sp = SchedParams(P=rc.pp, V=rc.vpp, n_mb=rc.microbatches,
                          unit=unit)
         pf = rc.gather_prefetch
 
-        def pack(t):
-            return pack_table(t, prefetch=pf)
-        self.tables: dict[str, PackedTable] = {}
+        def build(name, sp_):
+            return SchedulePlan.build(name, sp_, prefetch=pf)
+        self.plans: dict[str, SchedulePlan] = {}
         segs = {s.name: s for s in self.geo.segments}
         self.segs = segs
         if cfg.encdec is not None:
@@ -281,24 +172,28 @@ class Runtime:
             enc_sp = dataclasses.replace(sp, V=segs["enc"].vpp,
                                          unit=rc.microbatches)
             dec_sp = dataclasses.replace(sp, V=segs["dec"].vpp)
-            self.tables["enc_fwd"] = pack(generate("fwd_only", enc_sp))
-            full = generate(rc.schedule, dec_sp)
-            self.tables["dec"] = pack(full)
+            self.plans["enc_fwd"] = build("fwd_only", enc_sp)
+            self.plans["dec"] = (self._adopt(plan, dec_sp)
+                                 if plan is not None else
+                                 build(rc.schedule, dec_sp))
             enc_full = generate(rc.schedule, enc_sp)
-            self.tables["enc_bwd"] = pack(_strip_fwd(enc_full))
+            self.plans["enc_bwd"] = SchedulePlan.from_table(
+                f"strip_fwd[{rc.schedule}]", enc_sp,
+                _strip_fwd(enc_full), prefetch=pf)
         else:
-            self.tables["main"] = pack(generate(rc.schedule, sp))
-        # serving tables (forward-only pipeline; not unit-gated, so the
+            self.plans["main"] = (self._adopt(plan, sp)
+                                  if plan is not None else
+                                  build(rc.schedule, sp))
+        # serving plans (forward-only pipeline; not unit-gated, so the
         # buffers hold every micro-batch)
         sp_full = dataclasses.replace(sp, unit=rc.microbatches)
         if cfg.encdec is not None:
-            self.tables["serve_main"] = self.tables["enc_fwd"]
-            self.tables["serve_dec"] = pack(generate(
+            self.plans["serve_main"] = self.plans["enc_fwd"]
+            self.plans["serve_dec"] = build(
                 "fwd_only", dataclasses.replace(dec_sp,
-                                                unit=rc.microbatches)))
+                                                unit=rc.microbatches))
         else:
-            self.tables["serve_main"] = pack(
-                generate("fwd_only", sp_full))
+            self.plans["serve_main"] = build("fwd_only", sp_full)
 
         # --- parameter specs & shardings ---------------------------------- #
         self.stage_specs = {
@@ -353,6 +248,22 @@ class Runtime:
             else:
                 self.pspecs["io"][n] = P(*([None] * len(sp_.shape)))
         self._tmpl_cache: dict = {}
+
+    def _adopt(self, plan: SchedulePlan, sp: SchedParams) -> SchedulePlan:
+        """Validate an injected plan against this runtime's geometry and
+        re-pack it for this runtime's gather-prefetch depth."""
+        pp = plan.params
+        if (pp.P, pp.V, pp.n_mb) != (sp.P, sp.V, sp.n_mb):
+            raise ValueError(
+                f"injected plan {plan.name!r} was built for "
+                f"(P={pp.P}, V={pp.V}, B={pp.n_mb}) but this runtime "
+                f"needs (P={sp.P}, V={sp.V}, B={sp.n_mb})")
+        return plan.with_prefetch(self.rc.gather_prefetch)
+
+    @property
+    def tables(self) -> dict[str, PackedTable]:
+        """Device-ready packed tables per segment (plan view)."""
+        return {k: p.packed for k, p in self.plans.items()}
 
     def _stash_tmpl(self, seg, mb_shape, no_defer, cross_ctx=None):
         key = (seg.name, tuple(mb_shape), cross_ctx,
@@ -476,15 +387,6 @@ class Runtime:
         return batch
 
 
-def _strip_fwd(tt: TickTable) -> TickTable:
-    """B/W-only table (encoder backward segment): F ran in a prior scan."""
-    from repro.core.autogen import orders_from_table, retick
-
-    orders = orders_from_table(tt)
-    orders = [[t for t in o if t.kind != KF] for o in orders]
-    return retick(orders, tt.P, tt.V, tt.n_mb, tt.unit, assume_f=True)
-
-
 # --------------------------------------------------------------------------- #
 # Train step
 # --------------------------------------------------------------------------- #
@@ -492,7 +394,7 @@ def _strip_fwd(tt: TickTable) -> TickTable:
 
 def make_train_step(rt: Runtime, shape_cfg):
     """Returns jit(step)(params, batch) -> (grads, metrics)."""
-    cfg, rc, geo = rt.cfg, rt.rc, rt.geo
+    cfg, rc = rt.cfg, rt.rc
     from repro.core import vocab as Vb
 
     seq = shape_cfg.seq_len
@@ -503,14 +405,8 @@ def make_train_step(rt: Runtime, shape_cfg):
     assert mbs * rt.G * Btot == n_local, (
         f"global_batch {gb} must split into pods*data*groups*microbatches"
     )
-    cdt = jnp.dtype(rc.compute_dtype)
-    gdt = jnp.float32
-    d = cfg.d_model
     vloc = Vb.vocab_shard(cfg.vocab, rt.dsize)
     denom = float(gb * seq)  # global token count
-    n_moe = (sum(1 for i in range(cfg.n_layers)
-                 if cfg.layer_kind(i).endswith(":moe"))
-             if cfg.moe else 0)
     # Reference semantics: loss += w * sum over (stages, micro-batches of
     # per-token-mean aux); each micro-batch contributes aux/B_global.
     aux_seed = (
@@ -538,569 +434,6 @@ def make_train_step(rt: Runtime, shape_cfg):
         return fn(params, batch)
 
     return jax.jit(step)
-
-
-def _train_body(params, batch, *, rt: Runtime, shape_cfg, mbs, vloc,
-                denom, aux_seed):
-    """The SPMD program (runs per device under shard_map)."""
-    cfg, rc = rt.cfg, rt.rc
-    from repro.core import vocab as Vb
-
-    io_p = params["io"]
-    mr = jax.lax.axis_index(MODEL)
-    Pe, G, V = rt.Pe, rt.G, rc.vpp
-    p_rank = mr % Pe
-    g_rank = mr // Pe
-    cdt = jnp.dtype(rc.compute_dtype)
-    d = cfg.d_model
-
-    # io params arrive in their local (possibly vocab-sharded) shapes
-    io_zero = {n: jnp.zeros(a.shape, jnp.float32) for n, a in io_p.items()}
-
-    metrics0 = {"loss_sum": jnp.zeros((), jnp.float32),
-                "aux_sum": jnp.zeros((), jnp.float32),
-                "emb_dropped": jnp.zeros((), jnp.int32)}
-
-    if cfg.encdec is None:
-        seg = rt.segs["main"]
-        pt = rt.tables["main"]
-        res = _segment_train_scan(
-            rt, seg, pt, params["segments"]["main"], io_p,
-            batch, mbs, shape_cfg.seq_len, vloc, denom, aux_seed,
-            io_zero, metrics0, p_rank, g_rank,
-            inject="tokens", seed="loss", membuf=None, dmembuf=None,
-        )
-        seg_grads = {"main": res["stage_grads"]}
-        io_g, metrics = res["io_grads"], res["metrics"]
-    else:
-        seg_e, seg_d = rt.segs["enc"], rt.segs["dec"]
-        enc_ctx = cfg.encdec.enc_ctx
-        # the enc forward scan must allocate the stash buffers its later
-        # backward scan (which *does* defer W) will fill
-        enc_nd = set(rt.ep_names["enc"])
-        enc_tmpl = (enc_nd, rt._stash_tmpl(seg_e, (mbs, enc_ctx), enc_nd))
-        # 1) encoder forward (stash inputs for its later backward)
-        res_e = _segment_train_scan(
-            rt, seg_e, rt.tables["enc_fwd"], params["segments"]["enc"],
-            io_p, batch, mbs, enc_ctx, vloc, denom, aux_seed,
-            io_zero, metrics0, p_rank, g_rank,
-            inject="enc_tokens", seed=None, membuf="collect", dmembuf=None,
-            tmpl_override=enc_tmpl,
-        )
-        membuf = jax.lax.psum(res_e["membuf"], MODEL)
-        # 2) decoder train (full F/B/W) with cross-attention memory
-        res_d = _segment_train_scan(
-            rt, seg_d, rt.tables["dec"], params["segments"]["dec"], io_p,
-            batch, mbs, shape_cfg.seq_len, vloc, denom, aux_seed,
-            res_e["io_grads"], res_e["metrics"], p_rank, g_rank,
-            inject="tokens", seed="loss", membuf=membuf, dmembuf="collect",
-        )
-        dmem = jax.lax.psum(res_d["dmembuf"], MODEL)
-        # 3) encoder backward (B/W only, seeded by accumulated dMemory)
-        res_eb = _segment_train_scan(
-            rt, seg_e, rt.tables["enc_bwd"], params["segments"]["enc"],
-            io_p, batch, mbs, enc_ctx, vloc, denom, aux_seed,
-            res_d["io_grads"], res_d["metrics"], p_rank, g_rank,
-            inject="enc_tokens", seed="buffer", membuf=None, dmembuf=None,
-            seed_buf=dmem, carry_in=res_e["carry_out"],
-            tmpl_override=enc_tmpl,
-        )
-        seg_grads = {"enc": res_eb["stage_grads"],
-                     "dec": res_d["stage_grads"]}
-        io_g, metrics = res_eb["io_grads"], res_eb["metrics"]
-
-    # ---- cross-group / cross-pod gradient reduction ----------------------- #
-    for sname in seg_grads:
-        seg_grads[sname] = {
-            n: fsdp.group_allreduce(g, rt.G, Pe)
-            for n, g in seg_grads[sname].items()
-        }
-        if rt.multi_pod:
-            seg_grads[sname] = {n: jax.lax.psum(g, POD)
-                                for n, g in seg_grads[sname].items()}
-    io_g = {n: jax.lax.psum(g, MODEL) for n, g in io_g.items()}
-    if rt.multi_pod:
-        io_g = {n: jax.lax.psum(g, POD) for n, g in io_g.items()}
-    # replicated io params need the data-sum of per-shard contributions;
-    # vocab-sharded embed/head rows and EP-sharded MTP experts are already
-    # local-complete.
-    ep_io = {n for n, sp_ in rt.io_specs.items() if sp_.ep and rt.ep}
-    for n in io_g:
-        if n in ep_io:
-            continue
-        if vloc is None or n not in ("embed.table", "head.w"):
-            io_g[n] = jax.lax.psum(io_g[n], DATA)
-
-    metrics = {k: jax.lax.psum(v, (DATA, MODEL) + ((POD,) if rt.multi_pod
-                                                   else ()))
-               for k, v in metrics.items()}
-    grads = {"io": io_g, "segments": seg_grads}
-    return grads, metrics
-
-
-def _segment_train_scan(
-    rt: Runtime, seg, pt: PackedTable, seg_p, io_p, batch, mbs, seq,
-    vloc, denom, aux_seed, io_g0, metrics0, p_rank, g_rank, *,
-    inject: str, seed: str | None, membuf, dmembuf, seed_buf=None,
-    carry_in=None, tmpl_override=None,
-):
-    """Run one segment's schedule as a lax.scan over ticks.
-
-    inject:  batch key providing stage-0 inputs (int tokens or float embeds)
-    seed:    "loss" (LM head at last stage) | "buffer" (seed_buf[u]) | None
-    membuf:  None | "collect" (store drain outputs) | array [U, mbs, ctx, d]
-             (cross-attention memory for decoder segments)
-    dmembuf: "collect" to accumulate d(enc_memory) during B tasks
-    carry_in: reuse stash buffers from a previous scan of the same segment
-    """
-    cfg, rc = rt.cfg, rt.rc
-    from repro.core import vocab as Vb
-
-    cdt = jnp.dtype(rc.compute_dtype)
-    d = cfg.d_model
-    V, Pe, G, U = seg.vpp, rt.Pe, rt.G, pt.U
-    Btot = pt.n_mb
-    S = Pe * V
-    specs = rt.stage_specs[seg.name]
-    gatherable = rt.gatherable[seg.name]
-    ep_names = set(rt.ep_names[seg.name])
-    ep_axis = DATA if (rt.ep and any(
-        k.endswith(":moe") for k in seg.kinds)) else None
-    has_cross = membuf is not None and not isinstance(membuf, str)
-    cross_ctx = cfg.encdec.enc_ctx if (has_cross and cfg.encdec) else None
-    # Fused-backward baselines have no W tasks: every dense's dW is
-    # computed immediately inside B (classic 1F1B/GPipe semantics).
-    if tmpl_override is not None:
-        no_defer, tmpl = tmpl_override
-    else:
-        no_defer = set(ep_names) if pt.has_w else set(specs)
-        if rc.no_defer_extra and pt.has_w:
-            no_defer |= {n for n in specs
-                         if any(sub in n for sub in rc.no_defer_extra)}
-        tmpl = rt._stash_tmpl(seg, (mbs, seq), no_defer,
-                              cross_ctx=cross_ctx)
-    tokens = batch[inject]
-    int_tokens = jnp.issubdtype(tokens.dtype, jnp.integer)
-    labels = batch.get("labels")
-
-    rope = _rope_for(cfg, rc, seq)
-    dsize = rt.dsize
-
-    def tok_slice(arr, u):
-        start = (g_rank * Btot + u) * mbs
-        return jax.lax.dynamic_slice_in_dim(arr, start, mbs, axis=0)
-
-    def stage_params(v, use_slot, gbuf):
-        out = {}
-        for n in specs:
-            if n in gatherable:
-                out[n] = jax.lax.dynamic_index_in_dim(
-                    gbuf[n], jnp.clip(use_slot, 0, 1), 0, keepdims=False)
-            else:
-                out[n] = jax.lax.dynamic_index_in_dim(
-                    seg_p[n], jnp.clip(v, 0, V - 1), 0, keepdims=False)
-        return out
-
-    # ---- carry ------------------------------------------------------------ #
-    act = (mbs, seq, d)
-    zeros_act = jnp.zeros(act, cdt)
-    if carry_in is None:
-        gbuf = {
-            n: jnp.zeros((2, *_gathered_shape(specs[n], dsize, rt.ep)), cdt)
-            for n in gatherable
-        }
-        carry = dict(
-            send_f=zeros_act, send_b=zeros_act,
-            recv_f=zeros_act, recv_b=zeros_act,
-            xbuf=jnp.zeros((U, *act), cdt),
-            bbuf=jnp.zeros((U, *act), cdt),
-            fstash=jnp.zeros((V, U, *act), cdt),
-            wx=[jnp.zeros((V, U, *sh), dt) for sh, dt in tmpl.x_shapes],
-            wdy=[jnp.zeros((V, U, *sh), dt) for sh, dt in tmpl.dy_shapes],
-            gbuf=gbuf,
-            acc_full={n: jnp.zeros((V, *specs[n].shape), jnp.float32)
-                      for n in specs if n not in ep_names},
-            acc_shard={n: jnp.zeros(
-                (V, *_local_shape(specs[n], dsize, rt.ep)), jnp.float32)
-                for n in specs},
-            io_g=io_g0,
-            metrics=metrics0,
-        )
-    else:
-        carry = carry_in
-        carry["io_g"] = io_g0
-        carry["metrics"] = metrics0
-    if membuf == "collect":
-        carry["membuf"] = jnp.zeros((Btot, mbs, seq, d), cdt)
-    if dmembuf == "collect":
-        enc_ctx2 = cfg.encdec.enc_ctx
-        carry["dmembuf"] = jnp.zeros((Btot, mbs, enc_ctx2, d), cdt)
-
-    # ---- branch bodies ----------------------------------------------------#
-    def make_ctx(tape, u):
-        """Returns (ctx, mem_tval or None)."""
-        mem = None
-        if has_cross:
-            mem = tape.value(jax.lax.dynamic_index_in_dim(
-                membuf, u, 0, keepdims=False))
-        ctx = blocks.LayerCtx(cfg=cfg, rc=rc, rope=rope, causal=seg.causal,
-                              ep_axis=ep_axis, enc_memory=mem)
-        return ctx, mem
-
-    def get_input(c, u, v):
-        uu = u % U
-        x = jax.lax.dynamic_index_in_dim(c["xbuf"], uu, 0, keepdims=False)
-        is_inject = (p_rank == 0) & (v == 0)
-
-        def do_embed(_):
-            ids_or_emb = tok_slice(tokens, u)
-            if int_tokens:
-                return Vb.embed_lookup(io_p["embed.table"], ids_or_emb,
-                                       vloc, cdt)
-            return ids_or_emb.astype(cdt)
-
-        return jax.lax.cond(is_inject, do_embed, lambda _: x, None)
-
-    def f_branch(c, row):
-        u, v = row["mb"], row["v"]
-        uu = u % U
-        x = get_input(c, u, v)
-        params_v = stage_params(v, row["use_slot"], c["gbuf"])
-        t = Tape(params_v, mode="fwd", no_defer=frozenset(no_defer))
-        stage_id = v * Pe + p_rank
-        ctx, _ = make_ctx(t, u)
-        y, _aux = M.apply_stage(t, ctx, seg, t.value(x), stage_id)
-        c = dict(c)
-        c["fstash"] = _dyn_set2(c["fstash"], v, uu, x)
-        c["send_f"] = y.val
-        if "membuf" in c:
-            is_drain = (p_rank == Pe - 1) & (v == V - 1)
-            c["membuf"] = jax.lax.cond(
-                is_drain,
-                lambda mb: jax.lax.dynamic_update_index_in_dim(
-                    mb, y.val, u, 0),
-                lambda mb: mb, c["membuf"])
-        return c
-
-    def b_branch(c, row):
-        u, v = row["mb"], row["v"]
-        uu = u % U
-        x = jax.lax.dynamic_index_in_dim(c["fstash"], jnp.clip(v, 0, V - 1),
-                                         0, keepdims=False)
-        x = jax.lax.dynamic_index_in_dim(x, uu, 0, keepdims=False)
-        params_v = stage_params(v, row["use_slot"], c["gbuf"])
-        t = Tape(params_v, mode="bwd", no_defer=frozenset(no_defer))
-        ctx, mem_tv = make_ctx(t, u)
-        stage_id = v * Pe + p_rank
-        xin = t.value(x)
-        out, aux = M.apply_stage(t, ctx, seg, xin, stage_id)
-
-        is_last = (p_rank == Pe - 1) & (v == V - 1)
-        c = dict(c)
-        if seed == "loss":
-            def with_loss(_):
-                h = out.val.reshape(mbs * seq, d)
-                lab_u = tok_slice(labels, u).reshape(mbs * seq)
-                loss, dh, iog = Vb.loss_and_dy(
-                    cfg, rc, io_p, h, lab_u, denom, vloc, dsize)
-                if cfg.mtp:
-                    # DeepSeek multi-token-prediction aux head: one extra
-                    # layer over [norm(h); emb(label_t)] predicting t+2.
-                    lam = M.MTP_WEIGHT
-                    lab2d = tok_slice(labels, u)
-                    emb_next = Vb.embed_lookup(
-                        io_p["embed.table"], lab2d, vloc, out.val.dtype)
-                    mtp_ep = DATA if rt.ep else None
-                    hm, mtp_vjp = jax.vjp(
-                        lambda hh, ee, mp: M.mtp_hidden(
-                            cfg, rc, {**io_p, **mp}, hh, ee,
-                            ep_axis=mtp_ep),
-                        out.val, emb_next,
-                        {n: a for n, a in io_p.items()
-                         if n.startswith(("mtp.proj", "mtp.layer"))})
-                    lab_mtp = jnp.concatenate(
-                        [lab2d[:, 1:], lab2d[:, -1:]], 1).reshape(-1)
-                    mask = jnp.concatenate(
-                        [jnp.ones((mbs, seq - 1), jnp.float32),
-                         jnp.zeros((mbs, 1), jnp.float32)], 1).reshape(-1)
-                    denom_mtp = float(denom / seq * (seq - 1))
-                    l_m, dhm, iog_m = Vb.loss_and_dy(
-                        cfg, rc, io_p, hm.reshape(mbs * seq, d), lab_mtp,
-                        denom_mtp, vloc, dsize, norm_key="mtp.norm",
-                        mask=mask)
-                    dh_b, demb, dmtp = mtp_vjp(
-                        (lam * dhm).reshape(mbs, seq, d).astype(hm.dtype))
-                    dh2 = dh.reshape(mbs, seq, d) + dh_b.astype(dh.dtype)
-                    loss = loss + lam * l_m
-                    proto = _loss_iog_proto(cfg, io_p, vloc)
-                    for nk, v2 in proto.items():
-                        if nk not in iog:
-                            iog[nk] = jnp.zeros(v2.shape, jnp.float32)
-                    for nk, gv in iog_m.items():
-                        iog[nk] = iog[nk] + lam * gv
-                    for nk, gv in dmtp.items():
-                        iog[nk] = iog[nk] + gv.astype(jnp.float32)
-                    # emb_next gradient scatters into the embedding rows
-                    iog["__emb_mtp_ids"] = lab2d
-                    iog["__emb_mtp_dx"] = demb.astype(jnp.float32)
-                    return dh2, loss, iog
-                proto = _loss_iog_proto(cfg, io_p, vloc)
-                for nk, v2 in proto.items():
-                    if nk not in iog:
-                        iog[nk] = jnp.zeros(v2.shape, jnp.float32)
-                return dh.reshape(mbs, seq, d), loss, iog
-
-            def no_loss(_):
-                dy = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
-                                                  keepdims=False)
-                iog = {n: jnp.zeros(v2.shape, jnp.float32) for n, v2 in
-                       _loss_iog_proto(cfg, io_p, vloc).items()}
-                if cfg.mtp:
-                    iog["__emb_mtp_ids"] = jnp.zeros((mbs, seq), jnp.int32)
-                    iog["__emb_mtp_dx"] = jnp.zeros((mbs, seq, d),
-                                                    jnp.float32)
-                return dy, jnp.zeros((), jnp.float32), iog
-
-            dy, loss_d, iog_d = jax.lax.cond(is_last, with_loss, no_loss,
-                                             None)
-            c["io_g"] = dict(c["io_g"])
-            c["metrics"] = dict(c["metrics"])
-            if cfg.mtp:
-                ids_m = iog_d.pop("__emb_mtp_ids")
-                dx_m = iog_d.pop("__emb_mtp_dx")
-                acc_m, dr_m = Vb.embed_grad(
-                    ids_m, dx_m, vloc, cfg.vocab,
-                    c["io_g"]["embed.table"])
-                c["io_g"]["embed.table"] = acc_m
-                c["metrics"]["emb_dropped"] = (
-                    c["metrics"]["emb_dropped"] + dr_m)
-            for n, g in iog_d.items():
-                c["io_g"][n] = c["io_g"][n] + g
-            c["metrics"] = dict(c["metrics"])
-            c["metrics"]["loss_sum"] = c["metrics"]["loss_sum"] + loss_d
-        elif seed == "buffer":
-            dy_seed = jax.lax.dynamic_index_in_dim(seed_buf, u, 0,
-                                                   keepdims=False)
-            dy_wire = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
-                                                   keepdims=False)
-            dy = jnp.where(is_last, dy_seed.astype(cdt), dy_wire)
-        else:
-            dy = jax.lax.dynamic_index_in_dim(c["bbuf"], uu, 0,
-                                              keepdims=False)
-
-        seeds = {out.idx: dy.astype(out.val.dtype)}
-        if aux is not None:
-            seeds[aux.idx] = jnp.asarray(aux_seed, jnp.float32)
-        cots, igrads, stash = t.backward(seeds)
-        dx = cots[xin.idx]
-        c["send_b"] = dx.astype(cdt)
-
-        # stash (x, dy) pairs for the deferred W task
-        sx: dict[int, Any] = {}
-        for (pname, spec_s, xs_i, dy_i), s in zip(tmpl.entries, stash):
-            if xs_i not in sx:
-                c["wx"][xs_i] = _dyn_set2(c["wx"][xs_i], v, uu,
-                                          s.x.astype(c["wx"][xs_i].dtype))
-                sx[xs_i] = True
-            c["wdy"][dy_i] = _dyn_set2(c["wdy"][dy_i], v, uu,
-                                       s.dy.astype(c["wdy"][dy_i].dtype))
-        c["wx"] = list(c["wx"])
-        c["wdy"] = list(c["wdy"])
-
-        # immediate grads: EP experts -> sharded accum; small -> full accum
-        for n, g in igrads.items():
-            if n in ep_names:
-                c["acc_shard"] = dict(c["acc_shard"])
-                c["acc_shard"][n] = _dyn_add(c["acc_shard"][n], v,
-                                             g.astype(jnp.float32))
-            else:
-                c["acc_full"] = dict(c["acc_full"])
-                c["acc_full"][n] = _dyn_add(c["acc_full"][n], v,
-                                            g.astype(jnp.float32))
-
-        # embedding gradient at the first stage
-        if int_tokens:
-            is_first = (p_rank == 0) & (v == 0)
-
-            def emb_g(args):
-                acc, drop = args
-                ids = tok_slice(tokens, u)
-                acc2, dr = Vb.embed_grad(ids, dx.astype(jnp.float32), vloc,
-                                         cfg.vocab, acc)
-                return acc2, drop + dr
-
-            c["io_g"] = dict(c["io_g"])
-            c["metrics"] = dict(c["metrics"])
-            acc2, drop2 = jax.lax.cond(
-                is_first, emb_g, lambda a: a,
-                (c["io_g"]["embed.table"], c["metrics"]["emb_dropped"]))
-            c["io_g"]["embed.table"] = acc2
-            c["metrics"]["emb_dropped"] = drop2
-
-        if "dmembuf" in c and has_cross and mem_tv is not None:
-            # cotangent of the cross-attention memory input
-            dmem = cots.get(mem_tv.idx)
-            if dmem is not None:
-                c["dmembuf"] = _dyn_add(c["dmembuf"], u,
-                                        dmem.astype(cdt))
-
-        c["metrics"] = dict(c["metrics"])
-        c["metrics"]["aux_sum"] = (
-            c["metrics"]["aux_sum"] + aux.val.astype(jnp.float32))
-        return c
-
-    def w_branch(c, row):
-        u, v = row["mb"], row["v"]
-        uu = u % U
-        c = dict(c)
-        c["acc_full"] = dict(c["acc_full"])
-        c["acc_shard"] = dict(c["acc_shard"])
-        for (pname, spec_s, xs_i, dy_i) in tmpl.entries:
-            xv = _dyn_get2(c["wx"][xs_i], v, uu)
-            dyv = _dyn_get2(c["wdy"][dy_i], v, uu)
-            g = jnp.einsum(spec_s, xv, dyv).astype(jnp.float32)
-            c["acc_full"][pname] = _dyn_add(c["acc_full"][pname], v, g)
-        return c
-
-    def nop_branch(c, row):
-        return c
-
-    # ---- tick ------------------------------------------------------------ #
-    def tick(c, row_all):
-        row = {k: a[p_rank] for k, a in row_all.items()}
-        # 1. store wires that arrived at the last boundary
-        ruf, rub = row["recv_f_u"], row["recv_b_u"]
-        c = dict(c)
-        c["xbuf"] = jax.lax.cond(
-            ruf >= 0,
-            lambda b: jax.lax.dynamic_update_index_in_dim(
-                b, c["recv_f"], jnp.clip(ruf, 0, Btot) % U, 0),
-            lambda b: b, c["xbuf"])
-        c["bbuf"] = jax.lax.cond(
-            rub >= 0,
-            lambda b: jax.lax.dynamic_update_index_in_dim(
-                b, c["recv_b"], jnp.clip(rub, 0, Btot) % U, 0),
-            lambda b: b, c["bbuf"])
-
-        # 2. blockwise FSDP gather into the rotating slot
-        gv, gs = row["gather_v"], row["gather_slot"]
-
-        def do_gather(gb):
-            gb = dict(gb)
-            for n in gatherable:
-                pv = jax.lax.dynamic_index_in_dim(
-                    seg_p[n], jnp.clip(gv, 0, V - 1), 0, keepdims=False)
-                ld = fsdp.local_dim(specs[n], dsize, rt.ep)
-                full = jax.lax.all_gather(pv, DATA, axis=ld, tiled=True)
-                gb[n] = jax.lax.dynamic_update_index_in_dim(
-                    gb[n], full.astype(cdt), jnp.clip(gs, 0, 1), 0)
-            return gb
-
-        if gatherable:
-            c["gbuf"] = jax.lax.cond(gv >= 0, do_gather, lambda gb: gb,
-                                     c["gbuf"])
-
-        # 3. dispatch F/B/W
-        c = jax.lax.switch(
-            row["kind"],
-            [nop_branch, f_branch, b_branch, w_branch],
-            c, row,
-        )
-
-        # 4. per-unit blockwise reduce-scatter of finished stage grads
-        rv = row["reduce_v"]
-
-        rs_dt = jnp.dtype(rc.grad_rs_dtype)
-
-        def do_reduce(args):
-            full, shard = args
-            full, shard = dict(full), dict(shard)
-            for n in full:
-                g = jax.lax.dynamic_index_in_dim(full[n],
-                                                 jnp.clip(rv, 0, V - 1),
-                                                 0, keepdims=False)
-                red = fsdp.reduce_scatter_grad(g.astype(rs_dt), specs[n],
-                                               dsize, rt.ep)
-                shard[n] = _dyn_add(shard[n], rv, red.astype(jnp.float32))
-                full[n] = jax.lax.dynamic_update_index_in_dim(
-                    full[n], jnp.zeros_like(g), jnp.clip(rv, 0, V - 1), 0)
-            return full, shard
-
-        c["acc_full"], c["acc_shard"] = jax.lax.cond(
-            rv >= 0, do_reduce, lambda a: a,
-            (c["acc_full"], c["acc_shard"]))
-
-        # 5. boundary permutes (intra-group stage rings)
-        c["recv_f"] = jax.lax.ppermute(c["send_f"], MODEL,
-                                       fsdp.pipe_perm(Pe, G, +1))
-        c["recv_b"] = jax.lax.ppermute(c["send_b"], MODEL,
-                                       fsdp.pipe_perm(Pe, G, -1))
-        return c, ()
-
-    rows = pt.rows()
-    carry, _ = jax.lax.scan(tick, carry, rows)
-
-    return {
-        "stage_grads": carry["acc_shard"],
-        "io_grads": carry["io_g"],
-        "metrics": carry["metrics"],
-        "membuf": carry.get("membuf"),
-        "dmembuf": carry.get("dmembuf"),
-        "carry_out": carry,
-    }
-
-
-# ---- small helpers -------------------------------------------------------- #
-
-
-def _dyn_set2(buf, i, j, val):
-    """buf[i, j] = val with dynamic scalar indices."""
-    row = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
-    row = jax.lax.dynamic_update_index_in_dim(row, val, j, 0)
-    return jax.lax.dynamic_update_index_in_dim(buf, row, i, 0)
-
-
-def _dyn_get2(buf, i, j):
-    row = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
-    return jax.lax.dynamic_index_in_dim(row, j, 0, keepdims=False)
-
-
-def _dyn_add(buf, i, val):
-    old = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
-    return jax.lax.dynamic_update_index_in_dim(buf, old + val, i, 0)
-
-
-def _gathered_shape(spec, dsize, ep):
-    return spec.shape
-
-
-def _local_shape(spec, dsize, ep):
-    ld = fsdp.local_dim(spec, dsize, ep)
-    if ld is None:
-        return spec.shape
-    sh = list(spec.shape)
-    sh[ld] = sh[ld] // dsize
-    return tuple(sh)
-
-
-def _loss_iog_proto(cfg, io_p, vloc):
-    names = ["final_norm.scale"]
-    if cfg.norm == "layernorm":
-        names.append("final_norm.bias")
-    names.append("embed.table" if cfg.tie_embeddings else "head.w")
-    if cfg.mtp:
-        names += [n for n in io_p
-                  if n.startswith(("mtp.proj", "mtp.layer", "mtp.norm"))]
-        if not cfg.tie_embeddings:
-            names.append("embed.table")  # MTP ties emb grads in too
-    return {n: io_p[n] for n in names}
-
-
-def _rope_for(cfg, rc, seq):
-    dims = {cfg.head_dim}
-    if cfg.mla is not None:
-        dims.add(cfg.mla.rope_dims)
-    return {e: rope_tables(seq, e, cfg.rope_theta) for e in dims}
 
 
 # --------------------------------------------------------------------------- #
@@ -1236,179 +569,3 @@ def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
         return fn(params, caches, batch)
 
     return jax.jit(step, donate_argnums=(1,))
-
-
-def _serve_body(params, caches, batch, *, rt: Runtime, shape_cfg, mbs,
-                Btot, vloc, prompt_len, max_seq, seq_shard):
-    cfg, rc = rt.cfg, rt.rc
-    from repro.core import vocab as Vb
-
-    io_p = params["io"]
-    mr = jax.lax.axis_index(MODEL)
-    Pe, G = rt.Pe, rt.G
-    p_rank = mr % Pe
-    g_rank = mr // Pe
-    cdt = jnp.dtype(rc.compute_dtype)
-    d = cfg.d_model
-    s = prompt_len
-    tokens = batch["tokens"]
-    pos = batch.get("pos", jnp.zeros((), jnp.int32))
-
-    seg = rt.segs["dec"] if cfg.encdec is not None else rt.segs["main"]
-    seg_key = "dec" if cfg.encdec is not None else "main"
-    seg_p = params["segments"][seg_key]
-    specs = rt.stage_specs[seg_key]
-    gatherable = rt.gatherable[seg_key]
-    ep_names = set(rt.ep_names[seg_key])
-    V = seg.vpp
-    pt = rt.tables["serve_dec" if cfg.encdec is not None else "serve_main"]
-    U = pt.U
-    cache_tree = caches[seg_key]
-
-    dims = {cfg.head_dim}
-    if cfg.mla is not None:
-        dims.add(cfg.mla.rope_dims)
-    rope = {e: rope_tables(max_seq, e, cfg.rope_theta) for e in dims}
-    ctx = blocks.LayerCtx(
-        cfg=cfg, rc=rc, rope=rope, causal=True,
-        ep_axis=DATA if rt.ep else None,
-        kv_seq_shard=seq_shard, kv_shards=rt.dsize)
-    if cfg.encdec is not None:
-        ctx.enc_memory = None  # set per micro-batch below
-
-    def tok_slice(arr, u):
-        start = (g_rank * Btot + u) * mbs
-        return jax.lax.dynamic_slice_in_dim(arr, start, mbs, axis=0)
-
-    def stage_params(v, use_slot, gbuf):
-        out = {}
-        for n in specs:
-            if n in gatherable:
-                out[n] = jax.lax.dynamic_index_in_dim(
-                    gbuf[n], jnp.clip(use_slot, 0, 1), 0, keepdims=False)
-            else:
-                out[n] = jax.lax.dynamic_index_in_dim(
-                    seg_p[n], jnp.clip(v, 0, V - 1), 0, keepdims=False)
-        return out
-
-    def cache_get(tree, j, v, u):
-        out = {}
-        for n in M.layer_cache_spec(cfg, rc, seg.kinds[j], 1, 1):
-            a = tree[f"L{j}.{n}"]
-            av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
-            if seq_shard:
-                out[n] = av  # batch == full local batch (1)
-            else:
-                start = (g_rank * Btot + u) * mbs
-                out[n] = jax.lax.dynamic_slice_in_dim(av, start, mbs, 0)
-        return out
-
-    def cache_put(tree, j, v, u, cd):
-        for n, val in cd.items():
-            a = tree[f"L{j}.{n}"]
-            av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
-            if seq_shard:
-                av = val.astype(a.dtype)
-            else:
-                start = (g_rank * Btot + u) * mbs
-                av = jax.lax.dynamic_update_slice_in_dim(
-                    av, val.astype(a.dtype), start, 0)
-            tree[f"L{j}.{n}"] = jax.lax.dynamic_update_index_in_dim(
-                a, av, v, 0)
-        return tree
-
-    act = (mbs, s, d)
-    carry = dict(
-        send_f=jnp.zeros(act, cdt),
-        recv_f=jnp.zeros(act, cdt),
-        xbuf=jnp.zeros((U, *act), cdt),
-        gbuf={n: jnp.zeros((2, *specs[n].shape), cdt) for n in gatherable},
-        caches=dict(cache_tree),
-        out_tok=jnp.zeros((G * Btot, mbs), jnp.int32),
-    )
-
-    def f_branch(c, row):
-        u, v = row["mb"], row["v"]
-        uu = u % U
-        is_inject = (p_rank == 0) & (v == 0)
-
-        def do_embed(_):
-            ids = tok_slice(tokens, u) if not seq_shard else tokens
-            if jnp.issubdtype(tokens.dtype, jnp.integer):
-                return Vb.embed_lookup(io_p["embed.table"], ids, vloc, cdt)
-            return ids.astype(cdt)
-
-        x = jax.lax.cond(
-            is_inject, do_embed,
-            lambda _: jax.lax.dynamic_index_in_dim(c["xbuf"], uu, 0,
-                                                   keepdims=False), None)
-        params_v = stage_params(v, row["use_slot"], c["gbuf"])
-        if cfg.encdec is not None:
-            mem = caches["enc_memory"]
-            ctx.enc_memory = (mem if seq_shard else tok_slice(mem, u))
-        stage_id = v * Pe + p_rank
-        ch = [cache_get(c["caches"], j, v, u)
-              for j in range(len(seg.kinds))]
-        y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos)
-        c = dict(c)
-        c["caches"] = dict(c["caches"])
-        for j in range(len(seg.kinds)):
-            c["caches"] = cache_put(c["caches"], j, v, u, ch2[j])
-        c["send_f"] = y
-
-        is_drain = (p_rank == Pe - 1) & (v == V - 1)
-
-        def sample(ot):
-            h_last = y[:, -1]
-            tok = Vb.greedy_sample(cfg, rc, io_p, h_last, vloc)
-            return jax.lax.dynamic_update_index_in_dim(
-                ot, tok, g_rank * Btot + (u % Btot), 0)
-
-        c["out_tok"] = jax.lax.cond(is_drain, sample, lambda ot: ot,
-                                    c["out_tok"])
-        return c
-
-    def nop_branch(c, row):
-        return c
-
-    def tick(c, row_all):
-        row = {k: a[p_rank] for k, a in row_all.items()}
-        ruf = row["recv_f_u"]
-        c = dict(c)
-        c["xbuf"] = jax.lax.cond(
-            ruf >= 0,
-            lambda b: jax.lax.dynamic_update_index_in_dim(
-                b, c["recv_f"], jnp.clip(ruf, 0, pt.n_mb) % U, 0),
-            lambda b: b, c["xbuf"])
-        gv, gs = row["gather_v"], row["gather_slot"]
-
-        def do_gather(gb):
-            gb = dict(gb)
-            for n in gatherable:
-                pv = jax.lax.dynamic_index_in_dim(
-                    seg_p[n], jnp.clip(gv, 0, V - 1), 0, keepdims=False)
-                ld = fsdp.local_dim(specs[n], rt.dsize, rt.ep)
-                full = jax.lax.all_gather(pv, DATA, axis=ld, tiled=True)
-                gb[n] = jax.lax.dynamic_update_index_in_dim(
-                    gb[n], full.astype(cdt), jnp.clip(gs, 0, 1), 0)
-            return gb
-
-        if gatherable:
-            c["gbuf"] = jax.lax.cond(gv >= 0, do_gather, lambda g: g,
-                                     c["gbuf"])
-        c = jax.lax.switch(jnp.minimum(row["kind"], 1),
-                           [nop_branch, f_branch], c, row)
-        c["recv_f"] = jax.lax.ppermute(c["send_f"], MODEL,
-                                       fsdp.pipe_perm(Pe, G, +1))
-        return c, ()
-
-    carry, _ = jax.lax.scan(tick, carry, pt.rows())
-
-    out_tok = carry["out_tok"].reshape(-1)
-    # drain ranks hold the sampled tokens; share them
-    out_tok = jax.lax.psum(
-        jnp.where((p_rank == Pe - 1), out_tok, jnp.zeros_like(out_tok)),
-        MODEL)
-    caches_out = dict(caches)
-    caches_out[seg_key] = carry["caches"]
-    return out_tok, caches_out

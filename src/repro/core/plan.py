@@ -1,0 +1,393 @@
+"""SchedulePlan: the one schedule object that is analyzed, cached, and run.
+
+The paper's whole §3–§4 argument is that a well-scheduled PP×FSDP tick
+table beats TP — which only holds if the table we *analyze* (discrete-event
+simulator, core/simulator.py) is the table we *execute* (SPMD tick engine,
+core/executor.py). ``SchedulePlan`` makes that structural: it bundles
+
+  * the ``TickTable`` (task order + FSDP gather/reduce events),
+  * the ``PackedTable`` (device-ready per-tick arrays the executor scans),
+  * per-preset ``PlanAnalysis`` (simulated makespan, bubble fraction,
+    peak memory, collective counts).
+
+``select_plan`` runs the §4 selection: every registered schedule (plus the
+§4 autogen heuristic) is built for the same (P, V, B, U), simulated under
+a hardware cost preset (A800 = paper testbed, TPU v5e = our target), and
+the minimum-makespan plan wins. Selections are cached per
+(arch × shape × mesh) key so repeated sessions pay once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.generators import SchedParams, generate
+from repro.core.schedules import B as KB
+from repro.core.schedules import F as KF
+from repro.core.schedules import W as KW
+from repro.core.schedules import TickTable, to_arrays
+from repro.core.simulator import (
+    A800,
+    TPU_V5E,
+    CostModel,
+    cost_model_for,
+    simulate,
+)
+
+# --------------------------------------------------------------------------- #
+# Static table preprocessing (device-ready arrays for the executor)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class PackedTable:
+    """Device-ready per-tick arrays [T, Pe] + static metadata."""
+
+    T: int
+    Pe: int            # ranks per pipeline group
+    V: int
+    U: int             # unit size (xbuf/stash depth)
+    n_mb: int
+    kind: np.ndarray   # [T, Pe] {0 nop, 1 F, 2 B, 3 W}
+    mb: np.ndarray     # [T, Pe] microbatch index
+    v: np.ndarray      # [T, Pe] local stage slot
+    gather_v: np.ndarray    # [T, Pe] slot to all-gather (-1 none)
+    gather_slot: np.ndarray  # [T, Pe] double-buffer slot for that gather
+    use_slot: np.ndarray    # [T, Pe] which buffer slot holds params of v
+    reduce_v: np.ndarray    # [T, Pe] slot to reduce-scatter (-1 none)
+    recv_f_u: np.ndarray    # [T, Pe] mb arriving on fwd wire this tick (-1)
+    recv_b_u: np.ndarray    # [T, Pe] mb arriving on bwd wire this tick (-1)
+
+    def rows(self):
+        """As jnp arrays stacked for lax.scan xs."""
+        import jax.numpy as jnp
+
+        fields = ["kind", "mb", "v", "gather_v", "gather_slot", "use_slot",
+                  "reduce_v", "recv_f_u", "recv_b_u"]
+        return {f: jnp.asarray(getattr(self, f)) for f in fields}
+
+    @property
+    def has_w(self) -> bool:
+        """False for fused-backward baselines (dW computed inside B)."""
+        return bool((self.kind == KW).any())
+
+
+def pack_table(tt: TickTable, prefetch: int = 0) -> PackedTable:
+    arr = to_arrays(tt)
+    T, Pe = arr["kind"].shape
+    V = tt.V
+    kind, mb, v = arr["kind"], arr["mb"], arr["v"]
+    gather_v = arr["gather"]
+    reduce_v = arr["reduce"]
+
+    if prefetch > 0:
+        # §3.3 prefetch: issue each stage-block gather up to `prefetch`
+        # ticks before its first use so the async all-gather overlaps the
+        # previous block's compute. Safe moves only: the target tick must
+        # be gather-free, and no task between target and origin may still
+        # be *reading* the destination buffer slot (the slot parity
+        # alternates per gather, so skipping past reads of the other slot
+        # is fine — we recompute slot assignments afterwards).
+        for p_ in range(Pe):
+            order = [t for t in range(T) if gather_v[t, p_] >= 0]
+            for gi, t in enumerate(order):
+                slot_parity = gi % 2
+                tgt = t
+                for back in range(1, prefetch + 1):
+                    cand = t - back
+                    if cand < 0 or gather_v[cand, p_] >= 0:
+                        break
+                    # reads of the same slot between cand and t?
+                    conflict = False
+                    for tt_ in range(cand, t):
+                        if kind[tt_, p_] in (KF, KB, KW):
+                            # which slot does that task read? parity of
+                            # the most recent gather before tt_
+                            prev = [g for g in order[:gi] if g <= tt_]
+                            if prev and (len(prev) - 1) % 2 == slot_parity:
+                                conflict = True
+                                break
+                    if conflict:
+                        break
+                    tgt = cand
+                if tgt != t:
+                    gather_v[tgt, p_] = gather_v[t, p_]
+                    gather_v[t, p_] = -1
+
+    # Rotating two-slot gather buffer assignment.
+    gather_slot = -np.ones((T, Pe), np.int32)
+    use_slot = np.zeros((T, Pe), np.int32)
+    for p in range(Pe):
+        nxt = 0
+        holds = {}  # v -> slot
+        for t in range(T):
+            if gather_v[t, p] >= 0:
+                gather_slot[t, p] = nxt
+                holds[gather_v[t, p]] = nxt
+                nxt = 1 - nxt
+            if kind[t, p] in (KF, KB, KW):
+                use_slot[t, p] = holds.get(v[t, p], 0)
+
+    # Receive maps: what lands on each wire at the END of tick t-1 (i.e. is
+    # available at tick t). Sender of fwd wire for rank p is p-1 (ring).
+    recv_f_u = -np.ones((T, Pe), np.int32)
+    recv_b_u = -np.ones((T, Pe), np.int32)
+    S = Pe * V
+    for t in range(1, T):
+        for p in range(Pe):
+            prev = (p - 1) % Pe
+            if kind[t - 1, prev] == KF:
+                stage = v[t - 1, prev] * Pe + prev
+                if stage < S - 1:
+                    recv_f_u[t, p] = mb[t - 1, prev]
+            nxt_r = (p + 1) % Pe
+            if kind[t - 1, nxt_r] == KB:
+                stage = v[t - 1, nxt_r] * Pe + nxt_r
+                if stage > 0:
+                    recv_b_u[t, p] = mb[t - 1, nxt_r]
+    return PackedTable(
+        T=T, Pe=Pe, V=V, U=tt.unit, n_mb=tt.n_mb,
+        kind=kind, mb=mb, v=v,
+        gather_v=gather_v, gather_slot=gather_slot, use_slot=use_slot,
+        reduce_v=reduce_v, recv_f_u=recv_f_u, recv_b_u=recv_b_u,
+    )
+
+
+def strip_fwd(tt: TickTable) -> TickTable:
+    """B/W-only table (encoder backward segment): F ran in a prior scan."""
+    from repro.core.autogen import orders_from_table, retick
+
+    orders = orders_from_table(tt)
+    orders = [[t for t in o if t.kind != KF] for o in orders]
+    return retick(orders, tt.P, tt.V, tt.n_mb, tt.unit, assume_f=True)
+
+
+# --------------------------------------------------------------------------- #
+# SchedulePlan
+# --------------------------------------------------------------------------- #
+
+
+# Schedules whose tables gate micro-batches into §3.1 scheduling units —
+# their buffers only need unit depth. Everything else keeps the whole
+# batch live (unit = n_mb); notably the §4 "autogen" schedule postpones
+# W tasks across unit boundaries, which is incompatible with unit-depth
+# stash reuse, so it always runs full-depth. Custom unit-gated schedules
+# register here.
+UNIT_GATED_SCHEDULES = {"zeropp"}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanAnalysis:
+    """Discrete-event-simulated properties of one plan under one preset."""
+
+    preset: str
+    makespan: float
+    bubble_frac: float
+    peak_mem: float
+    n_gather: int
+    n_reduce: int
+    gathers_per_rank: float
+    comm_frac: float       # mean per-rank collective time / makespan
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SchedulePlan:
+    """A runnable + analyzable schedule: TickTable, PackedTable, analyses.
+
+    The packed arrays the executor scans are derived from exactly the
+    table the simulator sees; nothing else flows between them.
+    """
+
+    name: str
+    params: SchedParams
+    table: TickTable
+    packed: PackedTable
+    prefetch: int = 0
+    analyses: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def build(cls, name: str, sp: SchedParams, *,
+              prefetch: int = 0) -> "SchedulePlan":
+        """Generate a registered schedule's table and pack it."""
+        return cls.from_table(name, sp, generate(name, sp),
+                              prefetch=prefetch)
+
+    @classmethod
+    def from_table(cls, name: str, sp: SchedParams, tt: TickTable, *,
+                   prefetch: int = 0) -> "SchedulePlan":
+        return cls(name=name, params=sp, table=tt,
+                   packed=pack_table(tt, prefetch=prefetch),
+                   prefetch=prefetch)
+
+    def with_prefetch(self, prefetch: int) -> "SchedulePlan":
+        """Same table, re-packed for a different gather-prefetch depth."""
+        if prefetch == self.prefetch:
+            return self
+        return SchedulePlan(
+            name=self.name, params=self.params, table=self.table,
+            packed=pack_table(self.table, prefetch=prefetch),
+            prefetch=prefetch, analyses=dict(self.analyses))
+
+    @property
+    def has_w(self) -> bool:
+        return self.packed.has_w
+
+    def validate(self) -> None:
+        self.table.validate()
+
+    def analyze(self, cm: CostModel, preset: str = "abstract"
+                ) -> PlanAnalysis:
+        """Simulate this plan under ``cm``; cached per preset name."""
+        if preset not in self.analyses:
+            res = simulate(self.table, cm)
+            self.analyses[preset] = PlanAnalysis(
+                preset=preset,
+                makespan=res.makespan,
+                bubble_frac=res.bubble_frac,
+                peak_mem=res.peak_mem,
+                n_gather=res.n_gather,
+                n_reduce=res.n_reduce,
+                gathers_per_rank=res.n_gather / self.table.P,
+                comm_frac=float(res.comm_busy.mean()
+                                / max(res.makespan, 1e-12)),
+            )
+        return self.analyses[preset]
+
+
+# --------------------------------------------------------------------------- #
+# Hardware cost presets
+# --------------------------------------------------------------------------- #
+
+PRESETS = {"a800": A800, "tpu_v5e": TPU_V5E}
+
+
+def fused_cost_model(cm: CostModel) -> CostModel:
+    """Fold W into B for schedules without split backward (baselines)."""
+    return dataclasses.replace(cm, t_b=cm.t_b + cm.t_w, t_w=0.0,
+                               m_wstash=0.0)
+
+
+def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
+                      seq: int = 1024, mbs: int = 1, dp: int = 1,
+                      mfu: float = 0.5) -> CostModel:
+    """CostModel for a hardware preset and a (model × shape) workload.
+
+    With a ModelConfig, per-task durations come from transformer napkin
+    math (GEMM flops at an assumed MFU, stage-boundary activation bytes,
+    blockwise FSDP gather bytes) via ``cost_model_for``; without one, the
+    abstract unit-cost model (F=1, B=2, W=1) is returned so device-free
+    callers still get a simulatable preset.
+    """
+    if preset not in PRESETS:
+        raise ValueError(
+            f"unknown cost preset {preset!r}; known: "
+            f"{', '.join(sorted(PRESETS))}")
+    if cfg is None:
+        return CostModel()
+    hw = PRESETS[preset]
+    d = cfg.d_model
+    L = max(cfg.n_layers, 1)
+    layers_per_stage = max(L / (P * V), 1e-9)
+    layer_flops = 2 * (12 * d * d) * seq * mbs + 2 * seq * seq * d * mbs
+    act_bytes = seq * mbs * d * 2
+    stage_param_bytes = 12 * d * d * layers_per_stage * 2
+    return cost_model_for(
+        hw, layer_flops_f=layer_flops, layers_per_stage=layers_per_stage,
+        act_bytes=act_bytes, stage_param_bytes=stage_param_bytes,
+        dp=max(dp, 1), mfu=mfu)
+
+
+# --------------------------------------------------------------------------- #
+# §4 plan selection (schedule="auto")
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class PlanSelection:
+    """Outcome of one auto-selection: winner + every candidate's analysis."""
+
+    selected: SchedulePlan
+    analysis: PlanAnalysis
+    preset: str
+    candidates: dict    # name -> PlanAnalysis | "failed: ..." str
+    key: tuple | None = None
+
+    def ranking(self) -> list[tuple[str, float]]:
+        ok = [(n, a.makespan) for n, a in self.candidates.items()
+              if isinstance(a, PlanAnalysis)]
+        return sorted(ok, key=lambda x: x[1])
+
+
+_PLAN_CACHE: dict[tuple, PlanSelection] = {}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_info() -> dict:
+    return {"entries": len(_PLAN_CACHE), "keys": sorted(_PLAN_CACHE)}
+
+
+def candidate_schedules() -> list[str]:
+    """Registered schedules eligible for auto-selection (trainable ones)."""
+    from repro.api.registry import SCHEDULE_REGISTRY
+
+    return [n for n in SCHEDULE_REGISTRY.names() if n != "fwd_only"]
+
+
+def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
+                preset: str = "abstract", prefetch: int = 0,
+                candidates: list[str] | None = None,
+                cache_key: tuple | None = None) -> PlanSelection:
+    """Build + simulate every candidate schedule; the minimum simulated
+    makespan wins (ties keep the earlier candidate). Unit-gated schedules
+    (UNIT_GATED_SCHEDULES, i.e. zeropp) use the requested unit; all
+    others — including autogen, whose postponed W passes cross unit
+    boundaries and therefore need full-depth stash buffers — keep the
+    whole batch live (unit = n_mb). Fused-backward candidates are costed
+    with W folded into B so total work is identical across candidates."""
+    if cache_key is not None and cache_key in _PLAN_CACHE:
+        return _PLAN_CACHE[cache_key]
+
+    names = list(candidates) if candidates is not None \
+        else candidate_schedules()
+    cm_fused = fused_cost_model(cm)
+    results: dict = {}
+    best: tuple[SchedulePlan, PlanAnalysis] | None = None
+    for name in names:
+        sp = SchedParams(
+            P=P, V=V, n_mb=n_mb,
+            unit=(unit if name in UNIT_GATED_SCHEDULES else n_mb),
+            split_bw=True)
+        try:
+            if name == "autogen":
+                # §4 heuristic profiles with the *preset* cost model, not
+                # the abstract default the registry builder would use.
+                from repro.core.autogen import autogen
+
+                plan = SchedulePlan.from_table(
+                    name, sp, autogen(sp, cm).table, prefetch=prefetch)
+            else:
+                plan = SchedulePlan.build(name, sp, prefetch=prefetch)
+        except Exception as e:  # noqa: BLE001 — skip broken candidates
+            results[name] = f"failed: {e}"
+            continue
+        ana = plan.analyze(cm if plan.has_w else cm_fused, preset=preset)
+        results[name] = ana
+        if best is None or ana.makespan < best[1].makespan - 1e-12:
+            best = (plan, ana)
+    if best is None:
+        raise RuntimeError(
+            f"no schedule candidate could be built for P={P} V={V} "
+            f"n_mb={n_mb} unit={unit}: {results}")
+    sel = PlanSelection(selected=best[0], analysis=best[1], preset=preset,
+                        candidates=results, key=cache_key)
+    if cache_key is not None:
+        _PLAN_CACHE[cache_key] = sel
+    return sel

@@ -2,20 +2,26 @@ import os
 
 from repro.api import ensure_host_devices, get_arch, session
 
-ensure_host_devices(512, force=True)
+ensure_host_devices(int(os.environ.get("DRYRUN_DEVICES", "512")),
+                    force=True)
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape ×
 mesh), print the compiled memory/cost analyses, scrape the collective
 schedule, and emit the roofline terms.
 
-Must be run as its own process (the 512 fake host devices are forced
-before any other JAX use above — do NOT import this module from
-tests/benchmarks).
+Must be run as its own process (the fake host devices — 512, or
+DRYRUN_DEVICES — are forced before any other JAX use above; do NOT
+import this module from tests/benchmarks).
 
 Usage:
   PYTHONPATH=src:. python -m repro.launch.dryrun --arch llama3.2-1b \
       --shape train_4k [--multi-pod] [--out results/]
   PYTHONPATH=src:. python -m repro.launch.dryrun --all [--multi-pod]
+
+Budgeted CI cell (8 fake CPU devices, reduced smoke config, compile-time
+budget enforced):
+  DRYRUN_DEVICES=8 PYTHONPATH=src:. python -m repro.launch.dryrun \
+      --reduced --arch llama3.2-1b --schedule auto --budget-s 600
 """
 
 import argparse  # noqa: E402
@@ -147,6 +153,65 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None):
     return rec
 
 
+def run_reduced_cell(arch: str, schedule: str | None, budget_s: float,
+                     out_dir: str | None):
+    """Budgeted smoke dry-run: reduced() config through the facade on the
+    forced (small) device count — lower + compile the train step, print
+    the compiled analyses, enforce a wall-clock budget. This is the CI
+    cell ROADMAP asked for once compile times were budgeted."""
+    import jax
+
+    t_start = time.time()
+    overrides = dict(microbatches=4, unit=2)
+    if schedule:
+        overrides["schedule"] = schedule
+    sess = session(arch, mode="dry-run", seq_len=32, overrides=overrides)
+    d = sess.describe()
+    print(f"plan: {d['schedule']['name']} "
+          f"(preset={d['schedule']['preset']}, "
+          f"bubble={d['schedule']['bubble_ratio']:.3f}, "
+          f"makespan={d['schedule']['makespan']:.3e})")
+    if "auto" in d["schedule"]:
+        print(f"auto candidates: {d['schedule']['auto']['candidates']}")
+
+    t0 = time.time()
+    lowered = sess.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    print(f"--- memory_analysis [{arch} reduced, "
+          f"{jax.device_count()} fake devices] ---")
+    print(mem)
+    colls = scrape_collectives(compiled.as_text())
+    print("--- collective schedule ---")
+    for op, rec in sorted(colls.items()):
+        print(f"  {op:20s} n={rec['count']:4d} bytes={rec['bytes']:.3e}")
+    elapsed = time.time() - t_start
+    over_budget = elapsed > budget_s
+    rec = {
+        "arch": arch, "shape": "reduced",
+        "schedule": d["schedule"]["name"],
+        "devices": jax.device_count(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "collectives": colls,
+        "status": ("budget_exceeded" if over_budget else "ok"),
+        "budget_s": budget_s, "elapsed_s": round(elapsed, 1),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}_reduced.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if over_budget:
+        print(f"CELL_FAIL {arch} reduced: {elapsed:.0f}s exceeded the "
+              f"{budget_s:.0f}s budget")
+        raise SystemExit(1)
+    print(f"CELL_OK {arch} reduced lower={t_lower:.1f}s "
+          f"compile={t_compile:.1f}s budget={elapsed:.0f}/{budget_s:.0f}s")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -154,7 +219,19 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--reduced", action="store_true",
+                    help="budgeted smoke cell: reduced() config on the "
+                         "forced device count (set DRYRUN_DEVICES)")
+    ap.add_argument("--schedule", default=None,
+                    help="schedule override for --reduced (e.g. auto)")
+    ap.add_argument("--budget-s", type=float, default=600.0,
+                    help="wall-clock budget for the --reduced cell")
     args = ap.parse_args()
+
+    if args.reduced:
+        run_reduced_cell(args.arch or "llama3.2-1b", args.schedule,
+                         args.budget_s, args.out)
+        return
 
     cells = []
     if args.all:

@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--prompt", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--schedule", default=None,
+                    help="registered schedule name or 'auto' (§4 plan "
+                         "selection; serving itself runs the fwd-only "
+                         "table, the choice sizes the unit buffers)")
     args = ap.parse_args()
 
     ensure_host_devices()
@@ -32,8 +36,13 @@ def main():
     sess = session(
         args.arch, mode="serve", data=args.data,
         global_batch=args.batch, max_seq=max_seq,
+        schedule=args.schedule,
         overrides=dict(microbatches=2),
     )
+    d = sess.describe()["schedule"]
+    print(f"serving with schedule={d['name']} "
+          f"(simulated bubble {d['bubble_ratio']:.3f}, "
+          f"preset {d['preset']})")
     params = sess.init_params(jax.random.PRNGKey(0))
     caches = sess.init_caches()
     toks = jax.random.randint(jax.random.PRNGKey(1),

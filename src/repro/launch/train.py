@@ -2,10 +2,13 @@
 sharded AdamW → checkpoint/restart under the fault-tolerance controller.
 
 All assembly goes through the ``repro.api`` Session facade.
+``--schedule auto`` runs the §4 plan selection (every registered schedule
++ the autogen heuristic, simulated under ``--preset``) and trains with
+the winner.
 
 Usage (CPU demo; device count via SPMD_DEVICES, default 8):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
-      --steps 100 --data 2 [--schedule zeropp] [--ckpt-dir /tmp/ckpt]
+      --steps 100 --data 2 [--schedule auto] [--ckpt-dir /tmp/ckpt]
 """
 
 from __future__ import annotations
@@ -16,14 +19,22 @@ from repro.api import ensure_host_devices, session
 
 
 def build_session(arch: str, *, data: int, seq: int, microbatches: int,
-                  schedule: str, lr: float, unit: int = 0):
+                  schedule: str, lr: float, unit: int = 0,
+                  preset: str = "a800"):
     """One facade call replaces the old 8-step assembly ritual."""
-    return session(
-        arch, mode="train", data=data, seq_len=seq,
+    sess = session(
+        arch, mode="train", data=data, seq_len=seq, cost_preset=preset,
         overrides=dict(schedule=schedule, microbatches=microbatches,
                        unit=unit),
         optim=dict(lr=lr, warmup=20, total=10_000),
     )
+    if sess.plan_selection is not None:
+        sel = sess.plan_selection
+        print(f"schedule=auto selected {sel.selected.name!r} "
+              f"(makespan {sel.analysis.makespan:.3e}, preset "
+              f"{sel.preset}); ranking: "
+              + ", ".join(f"{n}={m:.3e}" for n, m in sel.ranking()))
+    return sess
 
 
 def main():
@@ -34,7 +45,11 @@ def main():
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--unit", type=int, default=0)
-    ap.add_argument("--schedule", default="zeropp")
+    ap.add_argument("--schedule", default="zeropp",
+                    help="a registered schedule name, or 'auto' for the "
+                         "§4 simulated plan selection")
+    ap.add_argument("--preset", default="a800",
+                    help="cost preset for schedule=auto (a800 | tpu_v5e)")
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -58,7 +73,7 @@ def main():
         sess = build_session(
             args.arch, data=args.data, seq=args.seq,
             microbatches=args.microbatches, schedule=args.schedule,
-            lr=args.lr, unit=args.unit)
+            lr=args.lr, unit=args.unit, preset=args.preset)
         stream = sess.stream()
         if restored is None:
             params = sess.init_params(jax.random.PRNGKey(0))

@@ -458,12 +458,33 @@ def case_elastic_reshard(arch: str = "llama3.2-1b"):
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d)
         params4, losses4, _ = run(4, steps=2)
-        mgr.save(2, jax.device_get(params4))
+        saved = jax.device_get(params4)
+        mgr.save(2, saved)
         tree, manifest = mgr.restore(2)
-        # resume on HALF the data axis (elastic shrink)
+        # restore must be exact: the round-trip is the deterministic
+        # invariant (the loss comparison below has run-to-run XLA noise)
+        flat_s = jax.tree_util.tree_flatten_with_path(saved)[0]
+        flat_r = dict(jax.tree_util.tree_flatten_with_path(tree)[0])
+        for kp, vs in flat_s:
+            assert np.array_equal(np.asarray(vs), np.asarray(flat_r[kp])), (
+                f"restore mismatch at {jax.tree_util.keystr(kp)}")
+        # resume on HALF the data axis (elastic shrink). The D=2 batch
+        # is a different draw (gb halves), so 2 SGD steps of D=4
+        # progress give no reliable loss-direction signal on it — the
+        # robust invariants are: the restored params are actually used
+        # (first-step loss deterministically differs from a fresh
+        # PRNGKey(0) init on the same batch/mesh/program) and training
+        # continues finitely from them.
+        _, losses_fresh, _ = run(2, steps=1)
         params2, losses2, _ = run(2, params_in=tree, steps=2)
-        assert losses2[0] < losses4[0], (losses4, losses2)
-    print(f"  D=4 losses {losses4} -> D=2 resume losses {losses2}")
+        assert losses2[0] != losses_fresh[0], (
+            "resume ignored the restored params", losses_fresh, losses2)
+        assert all(np.isfinite(l) for l in losses2), losses2
+        assert abs(losses2[0] - losses_fresh[0]) < 1.0, (
+            "resumed loss implausibly far from the trained state",
+            losses_fresh, losses2)
+    print(f"  D=4 losses {losses4} -> D=2 fresh {losses_fresh[0]:.4f} "
+          f"vs resume losses {losses2}")
     print(f"CASE_OK elastic_reshard {arch}")
 
 
@@ -520,10 +541,164 @@ def case_api_parity(arch: str = "llama3.2-1b"):
     print(f"CASE_OK api_parity {arch}")
 
 
+def case_auto_schedule(arch: str = "llama3.2-1b"):
+    """schedule="auto" end-to-end: the session must pick the plan with
+    the minimum simulated makespan among every registered schedule, then
+    train AND serve with it on the fake-device mesh."""
+    from repro.api import session
+    from repro.core.plan import PlanAnalysis
+
+    mod = M.get_arch(arch)
+    cfg, rc0 = mod.reduced()
+    geo = M.build_geometry(cfg, dataclasses.replace(rc0, microbatches=4,
+                                                    unit=2))
+    data = max(1, int(N_DEV) // geo.model_ranks)
+
+    sess = session(arch, schedule="auto", data=data, seq_len=16,
+                   overrides=dict(microbatches=4, unit=2))
+    sel = sess.plan_selection
+    assert sel is not None
+    span = {n: a.makespan for n, a in sel.candidates.items()
+            if isinstance(a, PlanAnalysis)}
+    assert len(span) >= 5, span  # all builtins (+ autogen) simulated
+    for n, m in span.items():
+        assert sel.analysis.makespan <= m + 1e-12, (
+            f"selected {sel.selected.name} ({sel.analysis.makespan}) "
+            f"worse than {n} ({m})")
+    assert sess.rc.schedule == sel.selected.name
+    d = sess.describe()
+    assert d["schedule"]["auto"]["selected"] == sel.selected.name
+    assert d["schedule"]["preset"] in ("a800", "tpu_v5e")
+
+    # train: two steps must run and reduce the loss direction-agnostically
+    params = sess.init_params(jax.random.PRNGKey(0))
+    batch = sess.stream().batch(0)
+    grads, metrics = sess.train_step(params, batch)
+    loss = float(metrics["loss_sum"])
+    assert np.isfinite(loss), loss
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+
+    # serve: prefill + decode through an auto-scheduled serve session
+    sess_s = session(arch, mode="serve", schedule="auto", data=data,
+                     global_batch=data * rc0.groups * 2, max_seq=24,
+                     overrides=dict(microbatches=2))
+    params_s = sess_s.init_params(jax.random.PRNGKey(0))
+    caches = jax.tree.map(
+        lambda s: jax.device_put(jnp.zeros(s.shape, s.dtype), s.sharding),
+        sess_s.init_caches(abstract=True),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    gb_s = sess_s.shape_cfg.global_batch
+    toks = jax.random.randint(jax.random.PRNGKey(3), (gb_s, 8), 0,
+                              cfg.vocab)
+    tok, caches = sess_s.serve_prefill(params_s, caches,
+                                       {"tokens": toks,
+                                        "pos": jnp.int32(0)})
+    tok2, caches = sess_s.serve_decode(params_s, caches,
+                                       {"tokens": tok[:, None],
+                                        "pos": jnp.int32(8)})
+    assert tok2.shape == (gb_s,)
+    assert (np.asarray(tok2) >= 0).all()
+    print(f"  selected={sel.selected.name} "
+          f"makespan={sel.analysis.makespan:.3e} "
+          f"candidates={sorted(span, key=span.get)} loss={loss:.4f}")
+    print(f"CASE_OK auto_schedule {arch}")
+
+
+def _golden_path():
+    return os.path.join(os.path.dirname(__file__), "golden",
+                        "pipeline_llama3p2_1b.npz")
+
+
+def _golden_outputs(arch: str = "llama3.2-1b"):
+    """Deterministic train grads/metrics + serve tokens for one config."""
+    from repro.core.pipeline import make_serve_step, init_serve_caches
+    from jax.sharding import NamedSharding
+
+    mod = M.get_arch(arch)
+    cfg, rc = mod.reduced()
+    rc = dataclasses.replace(rc, schedule="zeropp", microbatches=4, unit=2)
+    geo = M.build_geometry(cfg, rc)
+    data = max(1, int(N_DEV) // geo.model_ranks)
+    mesh = _mesh(data, geo.model_ranks)
+    rt = Runtime(cfg, rc, mesh)
+    gb = data * rc.groups * rc.microbatches
+    seq = 16
+    batch = _batch(cfg, gb, seq)
+    params = rt.init_params(jax.random.PRNGKey(0))
+    step = make_train_step(rt, ShapeConfig("toy", seq, gb, "train"))
+    grads, metrics = step(params, batch)
+
+    out = {}
+    for kp, v in jax.tree_util.tree_flatten_with_path(
+            jax.device_get(grads))[0]:
+        out["grad:" + jax.tree_util.keystr(kp)] = np.asarray(v)
+    for k, v in jax.device_get(metrics).items():
+        out["metric:" + k] = np.asarray(v)
+
+    # serve path: prefill + 2 decode steps on a fresh serve runtime
+    rc_s = dataclasses.replace(rc, microbatches=2)
+    rt_s = Runtime(cfg, rc_s, mesh)
+    gb_s = data * rc_s.groups * rc_s.microbatches
+    prompt, max_seq = 8, 16
+    shape_s = ShapeConfig("toy", max_seq, gb_s, "decode")
+    params_s = rt_s.init_params(jax.random.PRNGKey(0))
+    caches = jax.tree.map(
+        lambda s: jax.device_put(jnp.zeros(s.shape, s.dtype), s.sharding),
+        init_serve_caches(rt_s, shape_s, max_seq=max_seq),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (gb_s, prompt), 0,
+                              cfg.vocab)
+    prefill = make_serve_step(rt_s, shape_s, prompt_len=prompt,
+                              max_seq=max_seq)
+    tok, caches = prefill(params_s, caches, {"tokens": toks,
+                                             "pos": jnp.int32(0)})
+    serve_toks = [np.asarray(tok)]
+    decode = make_serve_step(rt_s, shape_s, prompt_len=1, max_seq=max_seq)
+    cur = tok[:, None]
+    for i in range(2):
+        cur, caches = decode(params_s, caches,
+                             {"tokens": cur, "pos": jnp.int32(prompt + i)})
+        serve_toks.append(np.asarray(cur))
+        cur = cur[:, None]
+    out["serve:tokens"] = np.stack(serve_toks, 1)
+    return out
+
+
+def case_golden_parity(arch: str = "llama3.2-1b", write=None):
+    """The executor must reproduce the recorded seed step outputs
+    bit-for-bit (train grads + metrics + served tokens). Regenerate the
+    golden file with ``python -m tests.spmd_case golden_parity write=1``
+    only when a change is *intended* to alter numerics."""
+    path = _golden_path()
+    out = _golden_outputs(arch)
+    if write:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        np.savez_compressed(path, **out)
+        print(f"  wrote {path} ({len(out)} arrays)")
+        print(f"CASE_OK golden_parity {arch} (wrote)")
+        return
+    ref = np.load(path)
+    assert sorted(ref.files) == sorted(out), (
+        set(ref.files) ^ set(out))
+    n_bad = 0
+    for k in ref.files:
+        if not np.array_equal(ref[k], out[k]):
+            n_bad += 1
+            err = np.abs(np.asarray(ref[k], np.float64)
+                         - np.asarray(out[k], np.float64)).max()
+            print(f"  MISMATCH {k}: max abs err {err:.3e}")
+    assert n_bad == 0, f"{n_bad}/{len(ref.files)} arrays differ from seed"
+    print(f"  {len(ref.files)} arrays bit-for-bit equal to the seed")
+    print(f"CASE_OK golden_parity {arch}")
+
+
 CASES["prefetch_equiv"] = case_prefetch_equiv
 CASES["int8_grads"] = case_int8_grads
 CASES["elastic_reshard"] = case_elastic_reshard
 CASES["api_parity"] = case_api_parity
+CASES["golden_parity"] = case_golden_parity
+CASES["auto_schedule"] = case_auto_schedule
 
 
 if __name__ == "__main__":

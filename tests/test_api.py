@@ -152,6 +152,63 @@ def test_opt_config_rejects_unknown_keys():
 
 
 # --------------------------------------------------------------------------- #
+# schedule="auto" (device-free selection + describe)
+# --------------------------------------------------------------------------- #
+
+
+def test_schedule_auto_is_device_free_and_optimal():
+    sess = session("llama3.2-1b", schedule="auto",
+                   overrides=dict(microbatches=4, unit=2))
+    sel = sess.plan_selection
+    assert sel is not None
+    assert sess.rc.schedule == sel.selected.name != "auto"
+    spans = {n: a.makespan for n, a in sel.candidates.items()
+             if not isinstance(a, str)}
+    assert len(spans) >= 5  # every registered built-in simulated
+    assert all(sel.analysis.makespan <= m + 1e-12 for m in spans.values())
+    d = sess.describe()
+    assert d["schedule"]["name"] == sel.selected.name
+    assert d["schedule"]["auto"]["selected"] == sel.selected.name
+    assert set(spans) <= set(d["schedule"]["auto"]["candidates"])
+    assert d["schedule"]["preset"] == "a800"
+    assert d["schedule"]["makespan"] > 0
+
+
+def test_schedule_auto_selection_is_cached():
+    kw = dict(schedule="auto", overrides=dict(microbatches=4, unit=2))
+    s1 = session("llama3.2-1b", **kw)
+    s2 = session("llama3.2-1b", **kw)
+    assert s1.plan_selection is s2.plan_selection  # same cache entry
+    s3 = session("llama3.2-1b", schedule="auto", cost_preset="tpu_v5e",
+                 overrides=dict(microbatches=4, unit=2))
+    assert s3.plan_selection is not s1.plan_selection
+    assert s3.describe()["schedule"]["preset"] == "tpu_v5e"
+
+
+def test_schedule_kw_and_override_consistency():
+    # schedule= kw is shorthand for overrides["schedule"]
+    s = session("llama3.2-1b", schedule="gpipe")
+    assert s.rc.schedule == "gpipe"
+    with pytest.raises(SessionError, match="twice and inconsistently"):
+        session("llama3.2-1b", schedule="gpipe",
+                overrides=dict(schedule="1f1b"))
+    with pytest.raises(SessionError, match="unknown cost_preset"):
+        session("llama3.2-1b", cost_preset="h100")
+
+
+def test_describe_uses_simulator_not_tick_counts():
+    sess = session("llama3.2-1b", overrides=dict(microbatches=4, unit=2))
+    d = sess.describe()["schedule"]
+    for k in ("preset", "makespan", "peak_mem", "bubble_ratio",
+              "gathers_per_rank", "comm_frac"):
+        assert k in d, k
+    # simulated bubble fraction, not the tick-quantized ratio
+    from repro.api import SchedParams, generate_schedule
+    tt = generate_schedule("zeropp", SchedParams(P=2, V=1, n_mb=4, unit=2))
+    assert d["ticks"] == tt.T
+
+
+# --------------------------------------------------------------------------- #
 # Numerical parity facade vs hand-assembled path (subprocess, 8 devices)
 # --------------------------------------------------------------------------- #
 

@@ -14,11 +14,12 @@ import pytest
 TIMEOUT = 1200
 
 
-def _run(case: str, *args: str):
+def _run(case: str, *args: str, env_extra: dict | None = None):
     cmd = [sys.executable, "-m", "tests.spmd_case", case, *args]
     p = subprocess.run(
         cmd, capture_output=True, text=True, timeout=TIMEOUT,
-        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        env={**__import__("os").environ, "PYTHONPATH": "src",
+             **(env_extra or {})},
         cwd=__import__("os").path.dirname(
             __import__("os").path.dirname(__file__)),
     )
@@ -45,10 +46,28 @@ def test_train_equivalence(arch):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("schedule", ["bfs", "gpipe", "1f1b"])
+@pytest.mark.parametrize("schedule", ["bfs", "gpipe", "1f1b", "autogen"])
 def test_baseline_schedules_equivalence(schedule):
-    """Every baseline runs through the same executor, exactly."""
+    """Every baseline (and the §4 autogen table) runs through the same
+    tick engine, exactly."""
     _run("train_equiv", "llama3.2-1b", f"schedule={schedule}")
+
+
+@pytest.mark.slow
+def test_executor_matches_seed_bit_for_bit():
+    """The extracted tick engine must reproduce the recorded seed
+    executor's train grads/metrics and served tokens bit-for-bit.
+    PYTHONHASHSEED is pinned: trace-time set iteration order is the only
+    run-to-run variance in this fully-deterministic CPU setup."""
+    _run("golden_parity", "llama3.2-1b",
+         env_extra={"PYTHONHASHSEED": "0"})
+
+
+@pytest.mark.slow
+def test_auto_schedule_trains_and_serves():
+    """session(arch, schedule="auto"): picks the min-makespan plan among
+    every registered schedule, then trains and serves with it."""
+    _run("auto_schedule", "llama3.2-1b")
 
 
 @pytest.mark.slow

@@ -1,0 +1,204 @@
+"""SchedulePlan / executor-plan layer + §4 auto-selection tests.
+
+Covers the ISSUE-2 properties:
+  * each §4 autogen insertion step never increases the simulated makespan;
+  * ``retick`` output always passes ``TickTable.validate()``;
+  * ``select_plan`` picks a plan whose makespan is ≤ every registered
+    built-in, caches per key, and the packed table matches the analyzed
+    table tick-for-tick.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.autogen import autogen, orders_from_table, retick
+from repro.core.generators import SchedParams, generate
+from repro.core.plan import (
+    UNIT_GATED_SCHEDULES,
+    PlanAnalysis,
+    SchedulePlan,
+    candidate_schedules,
+    clear_plan_cache,
+    fused_cost_model,
+    pack_table,
+    preset_cost_model,
+    select_plan,
+)
+from repro.core.schedules import W
+from repro.core.simulator import CostModel, simulate
+from tests.proptest import propcase
+
+CM = CostModel(t_f=1.0, t_b=2.0, t_w=1.0, t_p2p=0.02,
+               t_gather=0.3, t_reduce=0.3)
+
+
+# --------------------------------------------------------------------------- #
+# §4 autogen properties
+# --------------------------------------------------------------------------- #
+
+
+@propcase(n_cases=8)
+def test_autogen_insertions_never_increase_makespan(draw):
+    """Every accepted W insertion strictly improves the simulated
+    makespan — the §4 loop's invariant, as a recorded trajectory."""
+    P = draw.choice([2, 3, 4])
+    V = draw.choice([1, 2])
+    B_ = draw.ints(1, 3) * P
+    res = autogen(SchedParams(P=P, V=V, n_mb=B_), CM)
+    assert res.makespans[0] == pytest.approx(res.makespan_before)
+    assert res.makespans[-1] == pytest.approx(res.makespan_after)
+    assert len(res.makespans) == res.n_insertions + 1
+    for a, b in zip(res.makespans, res.makespans[1:]):
+        assert b < a + 1e-12, res.makespans
+    res.table.validate()
+
+
+@propcase(n_cases=10)
+def test_retick_output_always_validates(draw):
+    """Re-quantizing any valid per-rank order must produce a valid
+    TickTable (dependencies, placement, completeness)."""
+    P = draw.choice([2, 3, 4, 8])
+    V = draw.choice([1, 2, 3])
+    B_ = draw.ints(1, 3) * P
+    method = draw.choice(["gpipe", "1f1b", "interleaved", "bfs",
+                          "zeropp", "autogen"])
+    split = method in ("zeropp", "autogen")
+    sp = SchedParams(P=P, V=V, n_mb=B_, split_bw=split)
+    tt = generate(method, sp)
+    re = retick(orders_from_table(tt), P, V, B_, sp.U)
+    re.validate()
+    # same task multiset before and after
+    assert sorted((t.kind, t.mb, t.stage) for _, _, t in tt.tasks()) == \
+        sorted((t.kind, t.mb, t.stage) for _, _, t in re.tasks())
+
+
+def test_autogen_tables_are_full_depth():
+    """§4 postpones W across unit boundaries, so the registered autogen
+    schedule must never claim unit-depth buffers (ISSUE-2 executor
+    contract)."""
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=2)
+    tt = generate("autogen", sp)
+    assert tt.unit == sp.n_mb
+    assert "autogen" not in UNIT_GATED_SCHEDULES
+    assert any(t.kind == W for _, _, t in tt.tasks())
+
+
+# --------------------------------------------------------------------------- #
+# SchedulePlan object
+# --------------------------------------------------------------------------- #
+
+
+def test_plan_bundles_table_and_packed():
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=4)
+    plan = SchedulePlan.build("zeropp", sp)
+    assert plan.packed.T == plan.table.T
+    assert plan.packed.U == plan.table.unit
+    assert plan.has_w
+    # packed kind grid mirrors the table cells
+    for t, r, task in plan.table.tasks():
+        assert plan.packed.kind[t, r] == task.kind
+        assert plan.packed.mb[t, r] == task.mb
+    # analyses cache per preset
+    a1 = plan.analyze(CM, preset="abstract")
+    a2 = plan.analyze(CM, preset="abstract")
+    assert a1 is a2
+    assert a1.makespan == pytest.approx(simulate(plan.table, CM).makespan)
+    assert a1.gathers_per_rank == a1.n_gather / plan.table.P
+
+
+def test_plan_with_prefetch_repacks():
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=4)
+    plan = SchedulePlan.build("zeropp", sp)
+    pf = plan.with_prefetch(2)
+    assert pf is not plan and pf.prefetch == 2
+    assert pf.table is plan.table  # same analyzed table
+    assert plan.with_prefetch(0) is plan
+    # prefetch moves gather issue ticks earlier, never later
+    g0 = np.argwhere(plan.packed.gather_v >= 0)
+    g2 = np.argwhere(pf.packed.gather_v >= 0)
+    assert (g0[:, 0] >= g2[:, 0]).all() or len(g0) == 0
+
+
+def test_preset_cost_models():
+    cm_a = preset_cost_model("a800", None, P=4, V=2)
+    assert cm_a.t_f == CostModel().t_f  # abstract fallback without a cfg
+    with pytest.raises(ValueError, match="unknown cost preset"):
+        preset_cost_model("h100", None, P=4, V=2)
+    fused = fused_cost_model(CM)
+    assert fused.t_b == CM.t_b + CM.t_w and fused.t_w == 0.0
+    assert fused.m_wstash == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# select_plan (the schedule="auto" engine)
+# --------------------------------------------------------------------------- #
+
+
+def test_select_plan_beats_every_builtin():
+    sel = select_plan(4, 2, 8, 4, CM, preset="abstract")
+    names = set(candidate_schedules())
+    assert names <= set(sel.candidates) | set()
+    spans = {n: a.makespan for n, a in sel.candidates.items()
+             if isinstance(a, PlanAnalysis)}
+    assert len(spans) >= 5
+    for n, m in spans.items():
+        assert sel.analysis.makespan <= m + 1e-12, (n, m)
+    assert sel.selected.name in spans
+    # ranking() is sorted by makespan
+    r = sel.ranking()
+    assert [m for _, m in r] == sorted(m for _, m in r)
+
+
+def test_select_plan_caches_per_key():
+    clear_plan_cache()
+    key = ("test-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract")
+    s1 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key)
+    s2 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key)
+    assert s1 is s2
+    s3 = select_plan(4, 2, 8, 4, CM, preset="abstract")  # no key: fresh
+    assert s3 is not s1
+    clear_plan_cache()
+
+
+def test_select_plan_skips_broken_candidates():
+    from repro.api.registry import register_schedule, SCHEDULE_REGISTRY
+
+    name = "always-broken-plan-test"
+
+    @register_schedule(name)
+    def _broken(sp):
+        raise RuntimeError("intentionally broken")
+
+    try:
+        sel = select_plan(2, 1, 4, 4, CM, preset="abstract",
+                          candidates=["zeropp", name])
+        assert sel.selected.name == "zeropp"
+        assert str(sel.candidates[name]).startswith("failed:")
+    finally:
+        # keep the process-wide registry clean for later tests
+        SCHEDULE_REGISTRY._entries.pop(name, None)
+    assert name not in SCHEDULE_REGISTRY
+
+
+def test_unit_gated_unit_depth_vs_full_depth():
+    """Unit-gated candidates keep the requested unit; others run with
+    full-depth buffers (n_mb) so postponed/fused work stays sound."""
+    sel = select_plan(4, 1, 8, 2, CM, preset="abstract",
+                      candidates=["zeropp", "1f1b", "autogen"])
+    assert isinstance(sel.candidates["zeropp"], PlanAnalysis)
+    # rebuild to inspect unit depths directly
+    z = SchedulePlan.build("zeropp", SchedParams(P=4, V=1, n_mb=8, unit=2))
+    assert z.packed.U == 2
+    a = SchedulePlan.build("autogen", SchedParams(P=4, V=1, n_mb=8,
+                                                  unit=2))
+    assert a.packed.U == 8
+
+
+def test_pack_table_roundtrip_matches_plan():
+    sp = SchedParams(P=2, V=2, n_mb=4, unit=4)
+    tt = generate("zeropp", sp)
+    pt = pack_table(tt)
+    plan = SchedulePlan.from_table("zeropp", sp, tt)
+    for f in ("kind", "mb", "v", "gather_v", "reduce_v",
+              "recv_f_u", "recv_b_u"):
+        assert np.array_equal(getattr(pt, f), getattr(plan.packed, f)), f
