@@ -13,6 +13,7 @@ import time
 
 def main() -> None:
     from benchmarks import paper_tables as T
+    from benchmarks import serving_bench
 
     rows = []
     rows += T.table2()
@@ -22,6 +23,7 @@ def main() -> None:
     rows += T.fig7()
     rows += T.autogen_bench()
     rows += kernel_bench()
+    rows += serving_bench.serving_rows()
 
     print("\n=== CSV (name,us_per_call,derived) ===")
     for name, us, derived in rows:

@@ -1,5 +1,6 @@
-"""Batched pipelined serving demo: prefill a prompt batch, then greedy
-decode with per-stage KV caches flowing through the pipeline.
+"""Continuous-batching serving demo: staggered requests stream through a
+fixed pool of KV-cache slots; finished requests release their slot
+mid-decode and the FIFO queue refills it.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,6 +14,7 @@ import sys  # noqa: E402
 from repro.launch import serve  # noqa: E402
 
 if __name__ == "__main__":
-    sys.argv = ["serve", "--arch", "llama3.2-1b", "--batch", "8",
-                "--prompt", "12", "--gen", "6", "--data", "2"]
+    sys.argv = ["serve", "--arch", "llama3.2-1b", "--slots", "4",
+                "--n-requests", "8", "--prompt", "12", "--gen", "6",
+                "--data", "2"]
     serve.main()

@@ -36,6 +36,10 @@ _EXPORTS = {
     "PlanSelection": ("repro.core.plan", "PlanSelection"),
     "select_plan": ("repro.core.plan", "select_plan"),
     "clear_plan_cache": ("repro.core.plan", "clear_plan_cache"),
+    "ServeEngine": ("repro.serving", "ServeEngine"),
+    "Request": ("repro.serving", "Request"),
+    "SchedulerPolicy": ("repro.serving", "SchedulerPolicy"),
+    "SlotPool": ("repro.serving", "SlotPool"),
 }
 
 __all__ = sorted(_EXPORTS)

@@ -141,7 +141,7 @@ class Session:
         if self._shape_cfg is None:
             sp = self.spec
             if sp.mode == "serve":
-                gb = sp.global_batch or 8
+                gb = sp.global_batch or sp.max_slots or 8
                 self._shape_cfg = ShapeConfig("serve", sp.max_seq, gb,
                                               "decode")
             else:
@@ -308,6 +308,82 @@ class Session:
         """One cached decode step; returns (tokens, caches)."""
         return self.serve_step_fn(1)(params, caches, batch)
 
+    # ---- slot-aware (continuous-batching) serving -------------------- #
+
+    @property
+    def max_slots(self) -> int:
+        """Serving slot count == the serve-mode global batch."""
+        return self.shape_cfg.global_batch
+
+    def serve_step_batched(self, params, caches, batch):
+        """One slot-aware step (prefill chunk s>=1 or decode s==1).
+
+        Unlike :meth:`serve_prefill`/:meth:`serve_decode`, ``batch`` is
+        per-slot: ``pos`` is an int32 ``[max_slots]`` vector (each slot's
+        first absolute position) and the optional ``slot_mask`` bool
+        ``[max_slots]`` gates cache writes so a prefill into one slot
+        cannot clobber a neighbouring in-flight request. Returns
+        ``(tokens[max_slots], caches)``; rows outside ``slot_mask`` carry
+        garbage samples the caller ignores.
+        """
+        pos = batch.get("pos")
+        if getattr(pos, "ndim", 0) != 1:
+            raise SessionError(
+                "serve_step_batched needs batch['pos'] as a per-slot "
+                f"[{self.max_slots}] int32 vector (got "
+                f"{getattr(pos, 'shape', None)}); use serve_prefill/"
+                "serve_decode for the scalar-pos path")
+        self.check_slot_sharding()
+        s = batch["tokens"].shape[1]
+        return self.serve_step_fn(s)(params, caches, batch)
+
+    def check_slot_sharding(self) -> None:
+        """The slotted (per-slot pos) path needs a batch-sharded cache
+        AND a micro-batch tiling that covers every slot row — rows
+        beyond the tiling would silently never be computed. The
+        spec-level check only fires when ``data=`` is explicit, so
+        re-check against the materialized mesh (covers derived axes).
+        Session-invariant, so the result is cached."""
+        if self._steps.get("slot_sharding_ok"):
+            return
+        from repro.core.pipeline import serve_tiling
+
+        shards = (self.spec.pods or 1) * self.data_size
+        if self.max_slots % shards != 0:
+            raise SessionError(
+                f"max_slots ({self.max_slots}) must divide evenly over "
+                f"the pods×data axes ({shards}) for the slotted serve "
+                "path — round max_slots up or shrink data=/pods=")
+        b_loc, Btot, mbs = serve_tiling(self.rt, self.max_slots,
+                                        seq_shard=False)
+        covered = self.rt.G * Btot * mbs
+        if covered != b_loc:
+            raise SessionError(
+                f"max_slots ({self.max_slots}) gives {b_loc} slot rows "
+                f"per data shard, but the serve step tiles them as "
+                f"groups×microbatches×mbs = {self.rt.G}×{Btot}×{mbs}, "
+                f"covering only {covered} — pick max_slots so "
+                f"slots/(pods·data) is a multiple of "
+                f"groups·min(microbatches, slots/(pods·data)), or "
+                "adjust the microbatches override")
+        self._steps["slot_sharding_ok"] = True
+
+    def reset_slot_caches(self, caches, slot_mask):
+        """Zero the cache rows of the slots flagged in ``slot_mask``
+        (slot reclaim: recurrent state and stale bytes must not leak
+        into the next request)."""
+        if "slot_reset" not in self._steps:
+            from repro.core.pipeline import reset_slot_caches
+            self._steps["slot_reset"] = jax.jit(reset_slot_caches,
+                                                donate_argnums=(0,))
+        return self._steps["slot_reset"](caches, slot_mask)
+
+    def serve_engine(self, params, **kw):
+        """A continuous-batching :class:`repro.serving.ServeEngine` over
+        this session (serve mode only)."""
+        from repro.serving import ServeEngine
+        return ServeEngine(self, params, **kw)
+
     # ------------------------------------------------------------------ #
     # Data / checkpointing / dry-run
     # ------------------------------------------------------------------ #
@@ -330,6 +406,63 @@ class Session:
         )
         return TrainController(ckpt_dir,
                                FaultToleranceConfig(ckpt_every=every, **kw))
+
+    def restore_params(self, ckpt_dir: str, *, step: int | None = None):
+        """Boot this session's params from a train checkpoint
+        (train→serve handoff).
+
+        Accepts checkpoints whose tree either *is* the params tree
+        (``{"io": ..., "segments": ...}``) or nests it under a ``params``
+        key (the fault-tolerance controller's usual state layout). The
+        restored arrays are re-laid-out onto THIS session's mesh and
+        shardings — a serve session may use a different data axis, dtype
+        or schedule than the trainer that wrote the checkpoint; only the
+        pipeline geometry (pp × vpp × groups stacking) must match, and a
+        mismatch raises with the offending leaf.
+        """
+        from repro.ckpt.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(ckpt_dir)
+        tree, manifest = mgr.restore(step)
+        if tree is None:
+            raise SessionError(
+                f"no checkpoint found under {ckpt_dir!r} "
+                f"(steps: {mgr.list_steps()})")
+        if "params" in tree and "io" not in tree:
+            tree = tree["params"]
+        if not ("io" in tree and "segments" in tree):
+            raise SessionError(
+                f"checkpoint at {ckpt_dir!r} has keys {sorted(tree)}; "
+                "expected a params tree with 'io' and 'segments' (or one "
+                "nested under 'params')")
+        shapes = self.param_shapes()
+        flat_want = dict(jax.tree_util.tree_flatten_with_path(shapes)[0])
+        flat_got = dict(jax.tree_util.tree_flatten_with_path(
+            {"io": tree["io"], "segments": tree["segments"]})[0])
+        missing = sorted(set(map(jax.tree_util.keystr, flat_want))
+                         - set(map(jax.tree_util.keystr, flat_got)))
+        if missing:
+            raise SessionError(
+                f"checkpoint is missing param leaves {missing[:5]}"
+                f"{'...' if len(missing) > 5 else ''} — was it written by "
+                "a different architecture?")
+        out_flat = {}
+        for kp, want in flat_want.items():
+            got = flat_got[kp]
+            if tuple(got.shape) != tuple(want.shape):
+                raise SessionError(
+                    f"param {jax.tree_util.keystr(kp)} has shape "
+                    f"{tuple(got.shape)} in the checkpoint but this "
+                    f"session needs {tuple(want.shape)} — the pipeline "
+                    "geometry (pp/vpp/groups) must match the trainer's")
+            # host -> sharded directly; never commit a full leaf to one
+            # device (large train checkpoints exceed a single device)
+            out_flat[kp] = jax.device_put(
+                np.asarray(got, want.dtype), want.sharding)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(shapes), [
+                out_flat[kp] for kp, _ in
+                jax.tree_util.tree_flatten_with_path(shapes)[0]])
 
     def lower(self):
         """Lower the step for this shape (dry-run: inspect, then compile)."""

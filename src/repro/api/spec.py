@@ -54,6 +54,12 @@ class SessionSpec:
     global_batch: int | None = None  # derived-shape global batch
     microbatch_size: int = 1        # samples per micro-batch (derived gb)
     max_seq: int | None = None      # serving cache length
+    max_slots: int | None = None    # continuous-batching slot count
+    #                                 (serve-mode global batch; each slot
+    #                                 holds one in-flight request)
+    prefill_chunk: int | None = None  # split prompts into chunks of this
+    #                                   width (bounds the number of
+    #                                   distinct prefill compilations)
     mesh: Any = None                # pre-built jax Mesh (advanced)
 
     def __post_init__(self):
@@ -114,6 +120,30 @@ class SessionSpec:
             raise SessionError(
                 "serve sessions need max_seq=<prompt+gen+slack> (the KV "
                 "cache length) or an explicit shape")
+        if self.max_slots is not None:
+            if self.mode != "serve":
+                raise SessionError(
+                    "max_slots is a serving knob (the continuous-batching "
+                    f"slot count); this session is mode={self.mode!r}")
+            if self.max_slots < 1:
+                raise SessionError(
+                    f"max_slots must be >= 1, got {self.max_slots}")
+            if self.global_batch is not None \
+                    and self.global_batch != self.max_slots:
+                raise SessionError(
+                    f"max_slots ({self.max_slots}) and global_batch "
+                    f"({self.global_batch}) disagree; in serve mode they "
+                    "are the same quantity — pass one of them")
+            shards = (self.pods or 1) * (self.data or 1)
+            if self.max_slots % shards != 0:
+                raise SessionError(
+                    f"max_slots ({self.max_slots}) must divide evenly "
+                    f"over the pods×data axes ({shards}): the slotted "
+                    "(per-slot pos) serve path needs a batch-sharded "
+                    "cache — round max_slots up or shrink data=/pods=")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise SessionError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
         return self
 
     # ------------------------------------------------------------------ #

@@ -739,6 +739,16 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
     s = prompt_len
     tokens = batch["tokens"]
     pos = batch.get("pos", jnp.zeros((), jnp.int32))
+    slot_mask = batch.get("slot_mask")
+    # pos may be a [gb] per-slot vector (continuous batching): every slot
+    # sits at its own absolute position and only the rows flagged in
+    # slot_mask commit cache writes. Sliced per micro-batch below.
+    per_slot = getattr(pos, "ndim", 0) == 1
+    if per_slot and seq_shard:
+        raise NotImplementedError(
+            "per-slot pos vectors need a batch-sharded cache; this shape "
+            "fell back to the sequence-sharded (500k) cache layout — use "
+            "a global_batch divisible by the data axis")
 
     seg = rt.segs["dec"] if cfg.encdec is not None else rt.segs["main"]
     seg_key = "dec" if cfg.encdec is not None else "main"
@@ -805,9 +815,12 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
             mem = caches["enc_memory"]
             ctx.enc_memory = (mem if seq_shard else tok_slice(mem, u))
         stage_id = v * Pe + p_rank
+        pos_u = tok_slice(pos, u) if per_slot else pos
+        ctx.slot_mask = (tok_slice(slot_mask, u)
+                         if slot_mask is not None else None)
         ch = [cache_get(c["caches"], j, v, u)
               for j in range(len(seg.kinds))]
-        y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos)
+        y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos_u)
         c = dict(c)
         c["caches"] = dict(c["caches"])
         for j in range(len(seg.kinds)):

@@ -522,6 +522,46 @@ def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True):
     return tree
 
 
+def reset_slot_caches(caches, slot_mask):
+    """Zero the cache rows of the slots flagged in ``slot_mask`` [gb].
+
+    Used by the continuous-batching engine when a slot is reclaimed for a
+    new request: attention caches are overwritten position-by-position
+    anyway, but recurrent state (mamba/xlstm) and any stale bytes beyond
+    the new request's horizon must not leak between requests. Cache leaves
+    are [M·V, gb, ...] (batch on axis 1); ``enc_memory`` is [gb, ...].
+    """
+    out = {}
+    for key, sub in caches.items():
+        if key == "enc_memory":
+            m = slot_mask.reshape((-1,) + (1,) * (sub.ndim - 1))
+            out[key] = jnp.where(m, jnp.zeros((), sub.dtype), sub)
+        else:
+            out[key] = {
+                n: jnp.where(
+                    slot_mask.reshape((1, -1) + (1,) * (a.ndim - 2)),
+                    jnp.zeros((), a.dtype), a)
+                for n, a in sub.items()
+            }
+    return out
+
+
+def serve_tiling(rt: Runtime, gb: int, seq_shard: bool):
+    """(b_loc, Btot, mbs): how the serve step tiles a local batch into
+    (groups × micro-batches × mbs). Shared by ``make_serve_step`` and
+    the slot-count validation — rows beyond G·Btot·mbs would silently
+    never be computed, so slotted callers must check exact coverage."""
+    shards = rt.pods * rt.dsize if rt.multi_pod else rt.dsize
+    b_loc = gb // shards if not seq_shard else gb
+    Btot = min(rt.rc.microbatches, b_loc)
+    mbs = b_loc // (rt.G * Btot) if b_loc >= rt.G * Btot else 1
+    # degenerate tiny batches: one microbatch per group
+    if b_loc < rt.G * Btot:
+        Btot = max(b_loc // rt.G, 1)
+        mbs = 1
+    return b_loc, Btot, mbs
+
+
 def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
                     max_seq: int | None = None):
     """Returns jit(step)(params, caches, batch) -> (tokens_out, caches).
@@ -536,21 +576,17 @@ def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
     gb = shape_cfg.global_batch
     max_seq = max_seq or shape_cfg.seq_len
     pspecs, seq_shard, bspec = serve_cache_pspecs(rt, shape_cfg)
-    shards = rt.pods * rt.dsize if rt.multi_pod else rt.dsize
-    b_loc = gb // shards if not seq_shard else gb
-    Btot = min(rc.microbatches, b_loc)
-    mbs = b_loc // (rt.G * Btot) if b_loc >= rt.G * Btot else 1
-    # degenerate tiny batches: one microbatch per group
-    if b_loc < rt.G * Btot:
-        Btot = max(b_loc // rt.G, 1)
-        mbs = 1
+    b_loc, Btot, mbs = serve_tiling(rt, gb, seq_shard)
     vloc = Vb.vocab_shard(cfg.vocab, rt.dsize)
     batch_spec = P(bspec) if bspec else P()
 
     mesh = rt.mesh
 
     def step(params, caches, batch):
-        bsp = {k: (P() if k == "pos" else batch_spec) for k in batch}
+        # scalar pos is replicated; a per-slot [gb] pos vector (and the
+        # slot_mask that rides with it) shards with the batch rows.
+        bsp = {k: (P() if k == "pos" and not getattr(batch[k], "ndim", 0)
+                   else batch_spec) for k in batch}
         in_specs = (
             {"io": rt.pspecs["io"], "segments": rt.pspecs["segments"]},
             pspecs if cfg.encdec is not None else {

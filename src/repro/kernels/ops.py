@@ -14,6 +14,7 @@ import jax
 from repro.kernels import ref
 
 _FORCE_REF = os.environ.get("REPRO_FORCE_REF", "0") == "1"
+_WARNED_VECTOR_OFFSET = False
 
 
 def _on_tpu() -> bool:
@@ -35,6 +36,22 @@ def _use_pallas(impl: str | None) -> bool:
 
 
 def attention(q, k, v, *, causal=True, q_offset=0, block_k=512, impl=None):
+    # per-row q_offset vectors (slotted serving) are only implemented by
+    # the reference path; the Pallas kernel takes a scalar offset.
+    if getattr(q_offset, "ndim", 0):
+        if _use_pallas(impl):
+            global _WARNED_VECTOR_OFFSET
+            if not _WARNED_VECTOR_OFFSET:
+                _WARNED_VECTOR_OFFSET = True
+                import warnings
+
+                warnings.warn(
+                    "per-row q_offset (slotted serving) falls back to "
+                    "the reference attention kernel on this backend; "
+                    "expect a perf hit vs the Pallas path, and token "
+                    "identity with scalar-pos serving only holds within "
+                    "one kernel implementation", stacklevel=2)
+        impl = "ref"
     if _use_pallas(impl):
         from repro.kernels import flash_attention
 

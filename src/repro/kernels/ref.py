@@ -31,7 +31,9 @@ def attention(
     """Streaming-softmax attention; O(sq * block_k) live memory.
 
     ``q_offset`` is the absolute position of q[0] (used for decode where
-    sq << sk). Accumulation in f32 regardless of input dtype.
+    sq << sk); a ``[b]`` vector gives each batch row its own offset
+    (slotted serving, where every slot sits at a different position).
+    Accumulation in f32 regardless of input dtype.
     """
     b, sq, h, e = q.shape
     _, sk, g, _ = k.shape
@@ -50,7 +52,9 @@ def attention(
     kf = k.astype(jnp.float32).reshape(b, n_blocks, block_k, g, e)
     vf = v.astype(jnp.float32).reshape(b, n_blocks, block_k, g, ev)
 
-    q_pos = jnp.arange(sq) + q_offset  # [sq]
+    off = jnp.asarray(q_offset)
+    per_row = off.ndim == 1  # [b] vector: per-slot absolute positions
+    q_pos = jnp.arange(sq) + (off[:, None] if per_row else off)
 
     def body(carry, blk):
         m, l, acc = carry
@@ -59,17 +63,19 @@ def attention(
         # scores: [b, h, sq, block_k]
         kb_h = jnp.repeat(kb, rep, axis=2)  # [b, block_k, h, e]
         s = jnp.einsum("bqhe,bkhe->bhqk", qf, kb_h.astype(jnp.float32))
-        mask = k_pos[None, :] <= q_pos[:, None] if causal else (
+        mask = k_pos[None, :] <= q_pos[..., :, None] if causal else (
             k_pos[None, :] >= 0
         ) & jnp.ones((sq, 1), bool)
         valid = k_pos < sk  # mask out sk padding
         mask = mask & valid[None, :]
-        s = jnp.where(mask[None, None], s, -jnp.inf)
+        # [sq, bk] -> [1, 1, sq, bk]; per-row [b, sq, bk] -> [b, 1, sq, bk]
+        mask = mask[:, None] if mask.ndim == 3 else mask[None, None]
+        s = jnp.where(mask, s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         # guard fully-masked rows
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(s - m_safe[..., None])
-        p = jnp.where(mask[None, None], p, 0.0)
+        p = jnp.where(mask, p, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
         l_new = l * corr + p.sum(axis=-1)
         vb_h = jnp.repeat(vb, rep, axis=2).astype(jnp.float32)

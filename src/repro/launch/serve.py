@@ -1,77 +1,168 @@
-"""Serving driver: batched prefill + decode through the pipeline, via the
-``repro.api`` Session facade.
+"""Serving driver: the continuous-batching engine over the ``repro.api``
+Session facade.
+
+Requests stream through a fixed pool of KV-cache slots (``--slots``);
+finished requests release their slot mid-decode and the FIFO queue
+refills it without rebuilding the jitted step. The workload comes from
+``--requests FILE`` (JSON / JSON-lines, see ``--help``) or is
+synthesized with staggered lengths from ``--n-requests/--prompt/--gen``.
 
 Usage (CPU demo):
   SPMD_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
-      --arch llama3.2-1b --batch 8 --prompt 16 --gen 8
+      --arch llama3.2-1b --slots 4 --n-requests 8 --prompt 16 --gen 8
+
+Workload file: a JSON array (or one JSON object per line) of requests::
+
+  {"prompt_len": 12, "max_gen": 8}          # synthetic prompt (seeded)
+  {"tokens": [3, 14, 15], "max_gen": 4, "stop": [0]}   # explicit prompt
+
+A serve session can boot straight from a train checkpoint
+(``--ckpt DIR``): ``Session.restore_params`` re-lays the trained params
+out onto the serving mesh (train→serve handoff).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-from repro.api import ensure_host_devices, session
+from repro.api import ensure_host_devices, get_arch, session
+
+
+def load_requests(path: str, vocab: int, seed: int = 0):
+    """Parse a --requests workload file into (tokens, max_gen, stop)."""
+    import numpy as np
+
+    with open(path) as f:
+        text = f.read().strip()
+    if text.startswith("["):
+        entries = json.loads(text)
+    else:
+        entries = [json.loads(line) for line in text.splitlines() if line]
+    rng = np.random.RandomState(seed)
+    out = []
+    for i, e in enumerate(entries):
+        if "tokens" in e:
+            toks = np.asarray(e["tokens"], np.int32)
+            if toks.size and (toks.min() < 0 or toks.max() >= vocab):
+                raise SystemExit(
+                    f"--requests entry {i}: token ids must be in "
+                    f"[0, {vocab}) for this config, got range "
+                    f"[{toks.min()}, {toks.max()}] — reduced() configs "
+                    "use a small demo vocab")
+        elif "prompt_len" in e:
+            toks = rng.randint(0, vocab, size=int(e["prompt_len"])
+                               ).astype(np.int32)
+        else:
+            raise SystemExit(
+                f"--requests entry {i} needs 'tokens' or 'prompt_len': "
+                f"{e}")
+        out.append((toks, int(e.get("max_gen", 8)),
+                    tuple(e.get("stop", ()))))
+    if not out:
+        raise SystemExit(f"--requests file {path!r} holds no requests")
+    return out
+
+
+def synth_requests(n: int, prompt: int, gen: int, vocab: int,
+                   seed: int = 0):
+    """Staggered synthetic workload: lengths skewed around the means."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        p = max(2, int(prompt * (0.5 + i / max(n - 1, 1))))
+        g = max(2, int(gen * (0.25 + 1.5 * (i % 4) / 3)))
+        toks = rng.randint(0, vocab, size=p).astype(np.int32)
+        out.append((toks, g, ()))
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots (in-flight requests)")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=16,
+                    help="mean synthetic prompt length")
+    ap.add_argument("--gen", type=int, default=8,
+                    help="mean synthetic generation budget")
+    ap.add_argument("--requests", default=None,
+                    help="workload file (JSON array or JSON-lines)")
     ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=None,
+                    help="KV cache length (default: fits the workload)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts into chunks of this width "
+                         "(bounds distinct prefill compilations)")
     ap.add_argument("--schedule", default=None,
                     help="registered schedule name or 'auto' (§4 plan "
                          "selection; serving itself runs the fwd-only "
                          "table, the choice sizes the unit buffers)")
+    ap.add_argument("--preset", default="a800",
+                    help="cost preset for schedule='auto' simulation "
+                         "(a800 | tpu_v5e)")
+    ap.add_argument("--ckpt", default=None,
+                    help="train checkpoint dir to boot params from "
+                         "(train→serve handoff)")
     args = ap.parse_args()
 
     ensure_host_devices()
     import jax
-    import jax.numpy as jnp
-    import numpy as np
 
-    max_seq = args.prompt + args.gen + 8
+    # size the workload before the session so max_seq can default to
+    # whatever the requests actually need (sessions default to reduced())
+    vocab = get_arch(args.arch).reduced()[0].vocab
+    if args.requests:
+        work = load_requests(args.requests, vocab)
+    else:
+        work = synth_requests(args.n_requests, args.prompt, args.gen,
+                              vocab)
+    if not work:
+        raise SystemExit("no requests to serve (--n-requests 0?)")
+    need = max(len(t) + g for t, g, _ in work) + 1
+    max_seq = args.max_seq or need
+    if max_seq < need:
+        raise SystemExit(f"--max-seq {max_seq} too small for the "
+                         f"workload (needs >= {need})")
+
     sess = session(
-        args.arch, mode="serve", data=args.data,
-        global_batch=args.batch, max_seq=max_seq,
-        schedule=args.schedule,
+        args.arch, mode="serve", data=args.data, max_slots=args.slots,
+        max_seq=max_seq, schedule=args.schedule, cost_preset=args.preset,
+        prefill_chunk=args.prefill_chunk,
         overrides=dict(microbatches=2),
     )
     d = sess.describe()["schedule"]
     print(f"serving with schedule={d['name']} "
           f"(simulated bubble {d['bubble_ratio']:.3f}, "
-          f"preset {d['preset']})")
-    params = sess.init_params(jax.random.PRNGKey(0))
-    caches = sess.init_caches()
-    toks = jax.random.randint(jax.random.PRNGKey(1),
-                              (args.batch, args.prompt), 0,
-                              sess.cfg.vocab)
+          f"preset {d['preset']}); {args.slots} slots, "
+          f"max_seq {max_seq}")
 
-    t0 = time.time()
-    tok, caches = sess.serve_prefill(params, caches,
-                                     {"tokens": toks,
-                                      "pos": jnp.int32(0)})
-    tok.block_until_ready()
-    print(f"prefill: {args.batch}×{args.prompt} tokens in "
-          f"{time.time() - t0:.3f}s -> first tokens {np.asarray(tok)[:4]}")
+    if args.ckpt:
+        params = sess.restore_params(args.ckpt)
+        print(f"params restored from train checkpoint {args.ckpt}")
+    else:
+        params = sess.init_params(jax.random.PRNGKey(0))
 
-    seq = [np.asarray(tok)]
-    cur = tok[:, None]
+    eng = sess.serve_engine(params)
     t0 = time.time()
-    for i in range(args.gen - 1):
-        cur, caches = sess.serve_decode(params, caches,
-                                        {"tokens": cur,
-                                         "pos": jnp.int32(args.prompt + i)})
-        seq.append(np.asarray(cur))
-        cur = cur[:, None]
+    with eng:
+        handles = [eng.submit(toks, max_gen=g, stop=stop)
+                   for toks, g, stop in work]
+        results = [h.result(timeout=600) for h in handles]
     dt = time.time() - t0
-    out = np.stack(seq, 1)
-    print(f"decoded {args.gen - 1} steps in {dt:.3f}s "
-          f"({args.batch * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
-    for row in out[:4]:
-        print("  ", row.tolist())
+    for i, ((toks, g, _), res) in enumerate(zip(work, results)):
+        print(f"  req{i}: prompt {len(toks):3d} -> {len(res)} tokens "
+              f"{res[:8]}{'...' if len(res) > 8 else ''}")
+    st = eng.stats
+    total = st.generated_tokens
+    print(f"{len(work)} requests, {total} tokens in {dt:.3f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s, "
+          f"{st.prefill_steps} prefill + {st.decode_steps} decode steps, "
+          f"slot occupancy {st.occupancy:.2f})")
     print("SERVE_OK")
 
 

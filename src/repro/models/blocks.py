@@ -43,6 +43,9 @@ class LayerCtx:
     rope_full: dict | None = None    # head_dim -> full-cache rope tables (decode)
     kv_seq_shard: bool = False       # 500k path: KV cache sharded on seq
     kv_shards: int = 1               # over this many "data" ranks
+    slot_mask: Any = None            # [b] bool: rows allowed to write their
+    #                                  cache slot (continuous batching);
+    #                                  None = every row writes
 
 
 # --------------------------------------------------------------------------- #
@@ -640,12 +643,52 @@ def slstm_decode(ctx, params, pfx, x, cache, pos):
 
 def _rope_slice(ctx, e, pos, s):
     cos, sin = ctx.rope[e]  # full tables [max_seq, e/2]
+    if getattr(pos, "ndim", 0):  # per-slot [b] positions -> [b, s, e/2]
+        return jax.vmap(lambda p: (
+            jax.lax.dynamic_slice_in_dim(cos, p, s, 0),
+            jax.lax.dynamic_slice_in_dim(sin, p, s, 0)))(pos)
     return (jax.lax.dynamic_slice_in_dim(cos, pos, s, 0),
             jax.lax.dynamic_slice_in_dim(sin, pos, s, 0))
 
 
+def _slot_scatter(ctx, cache_arr, new, pos):
+    """Write ``new`` [b, s, ...] into ``cache_arr`` [b, S, ...] at the
+    per-row position ``pos`` [b], honouring ``ctx.slot_mask``: masked-off
+    rows keep their cache bytes untouched (their window is read back and
+    rewritten unchanged), so a prefill into one slot can never clobber a
+    neighbouring in-flight request."""
+    s = new.shape[1]
+    mask = ctx.slot_mask
+    if mask is None:
+        mask = jnp.ones((new.shape[0],), bool)
+
+    def upd(row, new_row, p, m):
+        old = jax.lax.dynamic_slice_in_dim(row, p, s, 0)
+        win = jnp.where(m, new_row.astype(row.dtype), old)
+        return jax.lax.dynamic_update_slice_in_dim(row, win, p, 0)
+
+    return jax.vmap(upd)(cache_arr, new, pos, mask)
+
+
+def _slot_state(ctx, old, new):
+    """Per-row select for positionless (recurrent) caches: masked-off rows
+    keep their previous state. No-op without a slot mask (legacy path)."""
+    mask = ctx.slot_mask
+    if mask is None:
+        return new
+    out = {}
+    for n, v in new.items():
+        m = mask.reshape((-1,) + (1,) * (v.ndim - 1))
+        out[n] = jnp.where(m, v.astype(old[n].dtype), old[n])
+    return out
+
+
 def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
     """x: [b, s, d]; cache k/v: [b, S, g, e]; pos: first absolute position.
+
+    ``pos`` may be a [b] vector (slotted serving): each row scatters into
+    its cache at its own position, writes gated by ``ctx.slot_mask``, and
+    attends with a per-row causal offset.
 
     s == 1 with ctx.kv_seq_shard uses flash-decoding combine over "data"
     (the 500k-context path: the KV cache is sequence-sharded).
@@ -658,7 +701,13 @@ def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
     cos, sin = _rope_slice(ctx, cfg.head_dim, pos, s)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    if getattr(ctx, "kv_seq_shard", False):
+    if getattr(pos, "ndim", 0):
+        kc = _slot_scatter(ctx, cache["k"], k, pos)
+        vc = _slot_scatter(ctx, cache["v"], v, pos)
+        o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
+                          block_k=ctx.rc.attn_block_k)
+        cache = {"k": kc, "v": vc}
+    elif getattr(ctx, "kv_seq_shard", False):
         # cache local window [b, S/D, g, e]; only the owner of `pos` writes
         dsz = ctx.kv_shards
         S_loc = cache["k"].shape[1]
@@ -708,8 +757,11 @@ def mla_cached(ctx, params, pfx, x, cache, pos):
           * params[f"{pfx}.qnorm.scale"]).astype(x.dtype)
     q = jnp.einsum("bsr,rhe->bshe", cq, params[f"{pfx}.wuq"])
     ckv = jnp.einsum("bsd,dc->bsc", x, params[f"{pfx}.wdkv"])
-    cache_new = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+    if getattr(pos, "ndim", 0):  # per-slot positions (slotted serving)
+        cache_new = _slot_scatter(ctx, cache["ckv"], ckv, pos)
+    else:
+        cache_new = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
     full = cache_new
     c_kv, k_rope = full[..., : m.kv_lora], full[..., m.kv_lora:]
     cf = c_kv.astype(jnp.float32)

@@ -216,14 +216,16 @@ def rope_tables(seq: int, d: int, theta: float, dtype=jnp.float32):
 
 
 def apply_rope(x: jnp.ndarray, cos, sin):
-    """x: [..., s, h, e] with cos/sin [s, e/2] (broadcast over heads).
+    """x: [..., s, h, e] with cos/sin [s, e/2] — or [b, s, e/2] when each
+    batch row sits at its own absolute position (slotted serving) —
+    broadcast over heads.
 
     Rotation in fp32, result cast back to x.dtype (keeps bf16 pipelines
     bf16 — fp32 tables must not promote activations)."""
     e = x.shape[-1]
     xf = x.astype(jnp.float32)
     x1, x2 = xf[..., : e // 2], xf[..., e // 2:]
-    c = cos[:, None, :].astype(jnp.float32)
-    s = sin[:, None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
     out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
     return out.astype(x.dtype)

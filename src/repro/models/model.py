@@ -587,14 +587,17 @@ def cached_layer(ctx, params, kind, pfx, x, cache, pos):
         dh, cache = blocks.mla_cached(ctx, params, f"{pfx}.mix", h, cache,
                                       pos)
     elif mix == "mamba":
-        dh, cache = blocks.mamba_cached(ctx, params, f"{pfx}.mix", h, cache,
-                                        pos)
+        dh, c2 = blocks.mamba_cached(ctx, params, f"{pfx}.mix", h, cache,
+                                     pos)
+        cache = blocks._slot_state(ctx, cache, c2)
     elif mix == "mlstm":
-        dh, cache = blocks.mlstm_cached(ctx, params, f"{pfx}.mix", h, cache,
-                                        pos)
+        dh, c2 = blocks.mlstm_cached(ctx, params, f"{pfx}.mix", h, cache,
+                                     pos)
+        cache = blocks._slot_state(ctx, cache, c2)
     elif mix == "slstm":
-        dh, cache = blocks.slstm_cached(ctx, params, f"{pfx}.mix", h, cache,
-                                        pos)
+        dh, c2 = blocks.slstm_cached(ctx, params, f"{pfx}.mix", h, cache,
+                                     pos)
+        cache = blocks._slot_state(ctx, cache, c2)
     else:
         raise ValueError(mix)
     x = x + dh

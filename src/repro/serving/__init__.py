@@ -1,0 +1,36 @@
+"""repro.serving — continuous batching over the Session facade.
+
+ZeroPP's TP-free design means serving runs the same forward-only
+pipeline table as training, so keeping every stage busy is purely a
+batching problem — the serving analogue of the bubble elimination the
+schedule search does for training. This package supplies that batching:
+
+* :class:`SlotPool` — the serve caches' ``(batch, max_seq)`` rows viewed
+  as independent *slots*, each with its own position/length state, so a
+  finished request's row is reclaimed and refilled mid-decode without
+  rebuilding the jitted step;
+* :class:`RequestScheduler` — FIFO admission with a prefill/decode
+  interleave policy and per-request ``max_gen``/stop handling;
+* :class:`ServeEngine` — the driver: ``submit()`` enqueues a request
+  from any thread, ``stream()`` yields its tokens as they are decoded,
+  and a background (or manually ticked) loop runs batched prefill/decode
+  steps through ``Session.serve_step_batched``.
+
+Correctness bar: engine output for N staggered requests is
+token-identical to N independent single-request ``serve_prefill``/
+``serve_decode`` runs (see tests/test_serving.py).
+"""
+
+from repro.serving.engine import EngineStats, ServeEngine
+from repro.serving.scheduler import Request, RequestScheduler, SchedulerPolicy
+from repro.serving.slots import SlotPool, SlotView
+
+__all__ = [
+    "EngineStats",
+    "Request",
+    "RequestScheduler",
+    "SchedulerPolicy",
+    "ServeEngine",
+    "SlotPool",
+    "SlotView",
+]

@@ -1,0 +1,342 @@
+"""ServeEngine: the continuous-batching driver over a serve Session.
+
+One engine owns the params, the slotted caches and the jitted step
+functions (one decode step, one prefill step per distinct chunk width —
+``prefill_chunk`` bounds the compile count for ragged workloads).
+``submit()`` is thread-safe and non-blocking; tokens can be consumed per
+request via ``stream()``/``Request.result()`` while the driver loop —
+``start()`` for the async background thread, or ``step()``/
+``run_until_idle()`` for deterministic manual ticking — interleaves
+prefills and batched decodes per the scheduler policy.
+
+Each tick:
+  1. free slots are refilled from the FIFO queue (admission policy);
+  2. each admitted request's slot rows are zeroed
+     (``Session.reset_slot_caches``) and its prompt is prefilled —
+     writes masked to its slot, so in-flight neighbours are untouched;
+  3. one batched decode step advances every active slot at its own
+     position (the per-slot ``pos`` vector), and finished requests
+     (stop token, ``max_gen``, or cache-full) release their slots.
+
+Because every cache position a request reads was written by that same
+request (prefill covers [0, prompt) and each decode writes its position
+before attending), a reclaimed slot never leaks state between requests —
+engine output is token-identical to independent sequential serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler import (
+    Request,
+    RequestScheduler,
+    SchedulerPolicy,
+)
+from repro.serving.slots import SlotPool
+
+_DONE = object()  # per-request stream sentinel
+
+# prefill chunking re-runs the step with a carried cache; recurrent-state
+# kinds recompute their state from scratch per call, so chunking is only
+# sound for position-indexed (attention-family) caches.
+_CHUNKABLE_MIXES = ("attn", "mla", "dec")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    generated_tokens: int = 0
+    finished_requests: int = 0
+    occupancy: float = 0.0          # mean busy-slot fraction per decode
+
+
+class ServeEngine:
+    """Continuous batching over ``Session.serve_step_batched``."""
+
+    def __init__(self, session, params, *, policy: SchedulerPolicy
+                 | None = None, prefill_chunk: int | None = None):
+        if session.spec.mode != "serve":
+            raise ValueError(
+                f"ServeEngine needs a serve-mode session (got mode="
+                f"{session.spec.mode!r}); build one with "
+                "session(arch, mode='serve', max_slots=..., max_seq=...)")
+        if session.cfg.encdec is not None:
+            raise NotImplementedError(
+                "continuous batching drives the decoder-only serve path; "
+                "enc-dec architectures still use serve_prefill/"
+                "serve_decode")
+        self.session = session
+        self.params = params
+        self.pool = SlotPool(session.max_slots, session._max_seq())
+        self.scheduler = RequestScheduler(policy)
+        self.prefill_chunk = (prefill_chunk
+                              if prefill_chunk is not None
+                              else session.spec.prefill_chunk)
+        seg = (session.geo.segments[-1])
+        if self.prefill_chunk is not None and any(
+                k.split(":")[0] not in _CHUNKABLE_MIXES
+                for k in seg.kinds):
+            raise NotImplementedError(
+                "prefill_chunk needs position-indexed caches; segment "
+                f"kinds {seg.kinds} include recurrent state that does "
+                "not carry across prefill chunks")
+        session.check_slot_sharding()  # fail before allocating caches
+        self.caches = session.init_caches(abstract=False)
+        self.stats = EngineStats()
+        self._by_slot: dict[int, Request] = {}
+        self._lock = threading.RLock()      # one tick at a time
+        self._wake = threading.Event()      # submit() -> driver loop
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._failure: BaseException | None = None
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+    # Submission / consumption (any thread)
+    # ------------------------------------------------------------------ #
+
+    def submit(self, prompt, *, max_gen: int = 16,
+               stop: Sequence[int] = ()) -> Request:
+        """Enqueue a generation request; returns its handle immediately."""
+        if self._closed:
+            raise RuntimeError("engine closed; no further submissions")
+        if self._failure is not None:
+            raise RuntimeError("engine failed; no further submissions") \
+                from self._failure
+        req = Request(prompt=np.asarray(prompt, np.int32),
+                      max_gen=max_gen, stop=stop)
+        self.pool.validate_prompt(req.prompt_len)  # reject before queuing
+        self.scheduler.submit(req)
+        if self._failure is not None or self._closed:
+            # the engine died or closed while we enqueued: the final
+            # drain may have run before our append landed, so pull the
+            # request back out and fail it loudly instead of letting it
+            # hang in a dead engine's queue.
+            self.scheduler.remove(req)
+            _fail_request(req,
+                          self._failure or RuntimeError("engine closed"))
+            raise RuntimeError("engine stopped; no further submissions") \
+                from self._failure
+        self._wake.set()
+        return req
+
+    def stream(self, req: Request, timeout: float | None = None,
+               ) -> Iterator[int]:
+        """Yield ``req``'s tokens as they are decoded; returns on finish.
+
+        Blocks between tokens by default (first-token latency includes
+        jit compiles, which can be long on full-size archs); pass
+        ``timeout`` seconds to raise TimeoutError on a stalled driver
+        instead.
+        """
+        import queue as _queue
+
+        while True:
+            try:
+                item = req._stream.get(timeout=timeout)
+            except _queue.Empty:
+                raise TimeoutError(
+                    f"request {req.id}: no token within {timeout}s — is "
+                    "the engine driver running (start()/step())?") \
+                    from None
+            if item is _DONE:
+                if req.error is not None:
+                    raise req.error
+                return
+            yield item
+
+    # ------------------------------------------------------------------ #
+    # Driving (one driver at a time: background thread OR manual ticks)
+    # ------------------------------------------------------------------ #
+
+    def step(self) -> bool:
+        """One engine tick. Returns True if any work ran."""
+        with self._lock:
+            try:
+                admitted = self.scheduler.admit(self.pool)
+                if admitted:
+                    reset = self.pool.mask_for(
+                        [r.slot for r in admitted])
+                    self.caches = self.session.reset_slot_caches(
+                        self.caches, reset)
+                    for req in admitted:
+                        self._by_slot[req.slot] = req
+                    self._prefill_admitted(admitted)
+                active = self.pool.active()
+                if active:
+                    self._decode_tick()
+                return bool(admitted or active)
+            except BaseException as e:  # noqa: BLE001 — fail all waiters
+                self._fail(e)
+                raise
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> EngineStats:
+        """Tick until the queue and every slot are empty (sync driver)."""
+        for _ in range(max_ticks):
+            if not self.step() and self.scheduler.n_queued == 0:
+                break
+        else:
+            e = RuntimeError(f"not idle after {max_ticks} ticks")
+            with self._lock:
+                self._fail(e)  # unblock waiters like every error path
+            raise e
+        return self.stats
+
+    def start(self) -> "ServeEngine":
+        """Run the driver loop in a daemon thread (async driver)."""
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="repro-serve-engine")
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the driver. Requests still queued or in flight are failed
+        (their waiters unblock with the close error) rather than left
+        hanging in a dead engine."""
+        self._closed = True
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=60)
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    "engine driver still running after 60s (a long "
+                    "compile?); close() aborted — retry once the tick "
+                    "finishes")
+            self._thread = None
+        with self._lock:
+            if self._by_slot or self.scheduler.n_queued:
+                self._fail(RuntimeError(
+                    "engine closed with requests outstanding"))
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                did = self.step()
+            except BaseException:  # noqa: BLE001 — recorded by step()
+                return
+            if not did and self.scheduler.n_queued == 0:
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    # ------------------------------------------------------------------ #
+    # Tick internals
+    # ------------------------------------------------------------------ #
+
+    def _step_batched(self, batch):
+        """One slot-aware step; asserts the output covers every slot
+        (a compacted output would silently misalign slot indexing)."""
+        out, caches = self.session.serve_step_batched(
+            self.params, self.caches, batch)
+        if out.shape[0] != self.pool.n_slots:
+            raise RuntimeError(
+                f"serve step returned {out.shape[0]} tokens for "
+                f"{self.pool.n_slots} slots — the step tiling does not "
+                "cover the slot pool (check_slot_sharding should have "
+                "caught this)")
+        return out, caches
+
+    def _prefill_admitted(self, reqs: list[Request]) -> None:
+        """Prefill the admitted requests' prompts into their slots.
+
+        Co-admitted chunks of equal width share one pipeline pass (the
+        pos/mask vectors are already per-row), so K same-length prompts
+        — or K chunk-aligned long prompts under ``prefill_chunk`` — cost
+        one step, not K. A request's first token is sampled by the step
+        that covers its prompt's last position.
+        """
+        n = self.pool.n_slots
+        pending = [(r, 0) for r in reqs]  # (request, chunk offset)
+        while pending:
+            by_width: dict[int, list] = {}
+            for r, off in pending:
+                c = min(self.prefill_chunk or r.prompt_len,
+                        r.prompt_len - off)
+                by_width.setdefault(c, []).append((r, off))
+            pending = []
+            for c, group in sorted(by_width.items()):
+                toks = np.zeros((n, c), np.int32)
+                pos = self.pool.pos_vector()
+                mask = np.zeros(n, bool)
+                for r, off in group:
+                    toks[r.slot] = r.prompt[off:off + c]
+                    pos[r.slot] = off
+                    mask[r.slot] = True
+                out, self.caches = self._step_batched(
+                    {"tokens": toks, "pos": pos, "slot_mask": mask})
+                self.stats.prefill_steps += 1
+                out_np = None
+                for r, off in group:
+                    if off + c >= r.prompt_len:
+                        self.pool.slots[r.slot].pos = r.prompt_len
+                        if out_np is None:
+                            out_np = np.asarray(out)
+                        # greedy sample from the prompt's last position
+                        self._emit(r, int(out_np[r.slot]))
+                    else:
+                        pending.append((r, off + c))
+
+    def _decode_tick(self) -> None:
+        """One batched decode step over every active slot."""
+        n = self.pool.n_slots
+        active = self.pool.active()
+        toks = np.zeros((n, 1), np.int32)
+        for s in active:
+            toks[s.index, 0] = self._by_slot[s.index].tokens[-1]
+        batch = {"tokens": toks, "pos": self.pool.pos_vector(),
+                 "slot_mask": self.pool.active_mask()}
+        out, self.caches = self._step_batched(batch)
+        self.pool.observe_tick()
+        self.stats.decode_steps += 1
+        self.stats.occupancy = self.pool.occupancy
+        out_np = np.asarray(out)
+        for s in active:
+            s.pos += 1
+            self._emit(self._by_slot[s.index], int(out_np[s.index]))
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.tokens.append(tok)
+        req._stream.put(tok)
+        self.stats.generated_tokens += 1
+        slot = self.pool.slots[req.slot]
+        if (len(req.tokens) >= req.max_gen or tok in req.stop
+                or slot.pos >= self.pool.max_seq):
+            self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        self._by_slot.pop(req.slot, None)
+        self.pool.release(req.slot)
+        self.stats.finished_requests += 1
+        req.done.set()
+        req._stream.put(_DONE)
+        self._wake.set()
+
+    def _fail(self, e: BaseException) -> None:
+        self._failure = e
+        for req in list(self._by_slot.values()):
+            _fail_request(req, e)
+        self._by_slot.clear()
+        for req in self.scheduler.drain():
+            _fail_request(req, e)
+
+
+def _fail_request(req: Request, e: BaseException) -> None:
+    """Tear down one request's waiters with ``e``."""
+    req.error = e
+    req.done.set()
+    req._stream.put(_DONE)

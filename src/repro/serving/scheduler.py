@@ -1,0 +1,137 @@
+"""Request queue + admission policy for the continuous-batching engine.
+
+The scheduler owns *which* work runs each tick; the engine owns *how*.
+FIFO admission keeps the correctness story simple (and matches the
+paper's framing of serving as a pure batching problem); the policy knobs
+bound how much prefill work may delay in-flight decodes per tick, and
+``mode="static"`` degrades admission to classic static batching (admit a
+full batch only when the pool is empty) — the baseline the benchmark
+compares against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.serving.slots import SlotPool
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its in-flight state."""
+
+    prompt: np.ndarray              # int32 [prompt_len]
+    max_gen: int = 16               # generated-token budget (incl. first)
+    stop: Sequence[int] = ()        # stop-token ids (emitted, then done)
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    # in-flight state (engine-owned)
+    slot: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)  # generated
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    error: BaseException | None = None
+    _stream: "queue.SimpleQueue[Any]" = dataclasses.field(
+        default_factory=queue.SimpleQueue)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_gen < 1:
+            raise ValueError(f"max_gen must be >= 1, got {self.max_gen}")
+        self.stop = tuple(int(t) for t in self.stop)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    def result(self, timeout: float | None = None) -> list:
+        """Block until finished; returns the generated tokens."""
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"request {self.id} still running")
+        if self.error is not None:
+            raise self.error
+        return list(self.tokens)
+
+
+@dataclasses.dataclass
+class SchedulerPolicy:
+    # max new requests prefills per engine tick: bounds how long in-flight
+    # decodes stall behind prompt processing (prefill/decode interleave)
+    max_prefills_per_tick: int = 2
+    # "continuous": refill any free slot each tick;
+    # "static": admit only when the pool is completely idle (baseline)
+    mode: str = "continuous"
+
+    def __post_init__(self):
+        if self.mode not in ("continuous", "static"):
+            raise ValueError(
+                f"unknown admission mode {self.mode!r}; pick "
+                "'continuous' or 'static'")
+        if self.max_prefills_per_tick < 1:
+            raise ValueError("max_prefills_per_tick must be >= 1")
+
+
+class RequestScheduler:
+    """Thread-safe FIFO queue with slot-pool admission."""
+
+    def __init__(self, policy: SchedulerPolicy | None = None):
+        self.policy = policy or SchedulerPolicy()
+        self._lock = threading.Lock()
+        self._queue: list[Request] = []
+
+    def submit(self, req: Request) -> Request:
+        with self._lock:
+            self._queue.append(req)
+        return req
+
+    @property
+    def n_queued(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def remove(self, req: Request) -> bool:
+        """Pull a still-queued request back out (e.g. failed submit)."""
+        with self._lock:
+            if req in self._queue:
+                self._queue.remove(req)
+                return True
+            return False
+
+    def drain(self) -> list[Request]:
+        """Empty the queue, returning what was waiting (engine failure)."""
+        with self._lock:
+            out, self._queue = self._queue, []
+            return out
+
+    def admit(self, pool: SlotPool) -> list[Request]:
+        """Move queued requests into free slots (FIFO), per the policy.
+
+        Returns the admitted requests with ``req.slot`` assigned; the
+        engine still has to reset + prefill those slots.
+        """
+        admitted: list[Request] = []
+        with self._lock:
+            if self.policy.mode == "static" and pool.n_active > 0:
+                return admitted
+            limit = (self.policy.max_prefills_per_tick
+                     if self.policy.mode == "continuous"
+                     else pool.n_slots)
+            while self._queue and len(admitted) < limit:
+                s = pool.alloc(self._queue[0].id,
+                               self._queue[0].prompt_len)
+                if s is None:
+                    break
+                req = self._queue.pop(0)
+                req.slot = s.index
+                admitted.append(req)
+        return admitted

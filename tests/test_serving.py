@@ -1,0 +1,173 @@
+"""Continuous-batching serving engine tests.
+
+Fast cases exercise the host-side pieces (SlotPool bookkeeping,
+FIFO/stop/max_gen scheduling policy) in-process — they never touch jax
+devices. The SPMD cases (batched ≡ sequential token identity under
+staggered lengths with slot reclaim, and the train→serve checkpoint
+handoff) run in subprocesses with fake host devices via
+tests/spmd_case.py, like the other pipeline tests.
+"""
+
+import numpy as np
+import pytest
+
+from tests.test_pipeline_equiv import _run
+
+
+# --------------------------------------------------------------------------- #
+# SlotPool (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def test_slot_pool_alloc_release_cycle():
+    from repro.serving import SlotPool
+
+    pool = SlotPool(3, max_seq=16)
+    a = pool.alloc(10, prompt_len=4)
+    b = pool.alloc(11, prompt_len=4)
+    assert (a.index, b.index) == (0, 1)
+    assert pool.n_active == 2 and pool.n_free == 1
+    pool.release(a.index)
+    assert pool.n_free == 2
+    # lowest free slot is reused, with position state reset
+    a.pos = 9
+    c = pool.alloc(12, prompt_len=4)
+    assert c.index == 0 and c.pos == 0 and c.request_id == 12
+    assert pool.alloc(13, 4) is not None
+    assert pool.alloc(14, 4) is None  # full
+
+
+def test_slot_pool_vectors_and_occupancy():
+    from repro.serving import SlotPool
+
+    pool = SlotPool(4, max_seq=32)
+    s = pool.alloc(1, prompt_len=5)
+    s.pos = 5
+    assert pool.pos_vector().tolist() == [5, 0, 0, 0]
+    assert pool.active_mask().tolist() == [True, False, False, False]
+    assert pool.mask_for([1, 3]).tolist() == [False, True, False, True]
+    pool.observe_tick()
+    pool.alloc(2, prompt_len=5)
+    pool.observe_tick()
+    assert pool.occupancy == pytest.approx((1 + 2) / (2 * 4))
+
+
+def test_slot_pool_rejects_oversized_prompt():
+    from repro.serving import SlotPool
+
+    pool = SlotPool(2, max_seq=8)
+    with pytest.raises(ValueError, match="max_seq"):
+        pool.alloc(1, prompt_len=8)  # no room for even one new token
+
+
+# --------------------------------------------------------------------------- #
+# RequestScheduler (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def _req(n=4, **kw):
+    from repro.serving import Request
+
+    return Request(prompt=np.arange(1, n + 1, dtype=np.int32), **kw)
+
+
+def test_scheduler_fifo_admission_respects_policy():
+    from repro.serving import RequestScheduler, SchedulerPolicy, SlotPool
+
+    sched = RequestScheduler(SchedulerPolicy(max_prefills_per_tick=2))
+    pool = SlotPool(4, max_seq=16)
+    reqs = [_req() for _ in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    first = sched.admit(pool)
+    # FIFO order, capped by the interleave policy
+    assert [r.id for r in first] == [reqs[0].id, reqs[1].id]
+    assert [r.slot for r in first] == [0, 1]
+    second = sched.admit(pool)
+    assert [r.id for r in second] == [reqs[2].id, reqs[3].id]
+    # pool is now full: admission stalls until a slot frees up
+    assert sched.admit(pool) == [] and sched.n_queued == 1
+    pool.release(first[0].slot)
+    refill = sched.admit(pool)
+    assert [r.id for r in refill] == [reqs[4].id]
+    assert refill[0].slot == first[0].slot  # reclaimed slot refilled
+    assert sched.admit(pool) == [] and sched.n_queued == 0
+
+
+def test_scheduler_static_mode_waits_for_idle_pool():
+    from repro.serving import RequestScheduler, SchedulerPolicy, SlotPool
+
+    sched = RequestScheduler(SchedulerPolicy(mode="static"))
+    pool = SlotPool(2, max_seq=16)
+    for _ in range(4):
+        sched.submit(_req())
+    batch1 = sched.admit(pool)
+    assert len(batch1) == 2        # fills the whole pool at once
+    assert sched.admit(pool) == []  # pool busy -> no admission at all
+    pool.release(0)
+    assert sched.admit(pool) == []  # still one active slot
+    pool.release(1)
+    assert len(sched.admit(pool)) == 2
+
+
+def test_request_validation():
+    from repro.serving import Request
+
+    with pytest.raises(ValueError, match="empty"):
+        Request(prompt=np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="max_gen"):
+        _req(max_gen=0)
+    r = _req(stop=[7.0])
+    assert r.stop == (7,)
+
+
+def test_scheduler_policy_validation():
+    from repro.serving import SchedulerPolicy
+
+    with pytest.raises(ValueError, match="admission mode"):
+        SchedulerPolicy(mode="round-robin")
+    with pytest.raises(ValueError, match="max_prefills"):
+        SchedulerPolicy(max_prefills_per_tick=0)
+
+
+# --------------------------------------------------------------------------- #
+# Spec plumbing (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_serving_knobs_validate():
+    from repro.api import SessionError, session
+
+    with pytest.raises(SessionError, match="serving knob"):
+        session("llama3.2-1b", mode="train", max_slots=4)
+    with pytest.raises(SessionError, match="disagree"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                global_batch=8)
+    with pytest.raises(SessionError, match="prefill_chunk"):
+        session("llama3.2-1b", mode="serve", max_seq=16, prefill_chunk=0)
+    with pytest.raises(SessionError, match="divide evenly"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=3,
+                data=2)
+    sess = session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4)
+    assert sess.max_slots == 4
+    assert sess.shape_cfg.global_batch == 4
+
+
+# --------------------------------------------------------------------------- #
+# SPMD cases (subprocess, fake devices)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_batched_equals_sequential_serving():
+    """The issue's correctness bar: token-identical engine output for a
+    staggered 8-request workload vs independent sequential serving, with
+    slot reclaim/refill mid-decode and chunked prefill."""
+    _run("serving_engine_equiv", "llama3.2-1b")
+
+
+@pytest.mark.slow
+def test_train_serve_handoff_roundtrip():
+    """mode='serve' sessions boot from a train checkpoint with
+    cache-aware relayout; tokens equal a direct param transplant."""
+    _run("serve_handoff", "llama3.2-1b")
