@@ -1,0 +1,280 @@
+"""Coalesced flat-segment collectives benchmark (A/B + calibration).
+
+Measures the ISSUE-4 claim end-to-end on fake CPU devices:
+
+  * **collapse** — compiled-HLO collective *sites* in the train step under
+    ``coalesce="flat"`` vs ``"none"``: per-tensor gathering emits one
+    all-gather / reduce-scatter per gatherable tensor inside the tick
+    scan body, the flat layout exactly one of each — O(#tensors) → O(1)
+    per stage segment per tick;
+  * **parity** — one train step under both modes must produce
+    bit-identical gradients and metrics (the layout only changes the wire
+    format, never the math);
+  * **ranking** — ``schedule="auto"`` under the calibrated ``a800``
+    preset, i.e. the §4 selection with α–β collective costs
+    (per-tick collective count × launch latency + bytes × 1/bandwidth);
+  * **--calibrate** — re-derive the α–β constants from the hardware
+    presets (launch latency + effective bandwidth) and gate the literals
+    recorded in ``repro.core.plan.COLLECTIVE_ALPHA_BETA`` against them
+    (25% drift fails), then report the per-cell α-term share over a
+    ``benchmarks/roofline.py`` byte-accounting grid — the latency
+    fraction per-tensor collectives pay and the flat layout removes.
+
+Run: ``SPMD_DEVICES=8 PYTHONPATH=src:. python -m benchmarks.comm_bench
+[--json comm_bench.json] [--calibrate]``.  Prints the harness CSV
+contract (``name,us_per_call,derived``) and writes the same rows as a
+machine-readable JSON artifact for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import time
+
+from repro.api import ensure_host_devices
+
+ARCH = "llama3.2-1b"
+
+#: Per-collective launch latencies (s) — published small-message
+#: latencies for each preset's DP interconnect; the α source.
+LAUNCH_LATENCY = {"a800": 8.0e-06, "tpu_v5e": 1.2e-06}
+#: Effective link efficiency applied to the preset peak bandwidth.
+LINK_EFFICIENCY = 0.9
+
+
+def _collective_sites(hlo_text: str) -> dict:
+    """Count collective instruction sites in compiled HLO text."""
+    out = {}
+    for op in ("all-gather", "reduce-scatter", "all-reduce",
+               "collective-permute"):
+        # matches both `op(` applications and async `op-start(` forms
+        out[op] = len(re.findall(rf"\b{op}(?:-start)?\(", hlo_text))
+    return out
+
+
+def _session(mode: str, **extra):
+    from repro.api import session
+
+    return session(ARCH, seq_len=16, coalesce=mode,
+                   overrides=dict(microbatches=4, unit=2), **extra)
+
+
+def bench_rows(json_path: str | None = None):
+    """The A/B cell: HLO collective sites, step timing, bitwise parity,
+    and the calibrated-preset auto ranking. Returns harness CSV rows."""
+    ensure_host_devices()
+    import jax
+    import numpy as np
+
+    rows = []
+    sites = {}
+    grads = {}
+    metrics = {}
+    step_us = {}
+    n_tensors = None
+    print("=== flat-segment coalescing (A/B on fake CPU devices) ===")
+    for mode in ("flat", "none"):
+        sess = _session(mode)
+        rt = sess.rt
+        n_tensors = len(rt.gatherable["main"])
+        if mode == "flat":
+            assert rt.flat_layouts["main"] is not None
+        params = sess.init_params(jax.random.PRNGKey(0))
+        batch = sess.stream().batch(0)
+        # one AOT compile serves both the HLO scrape and the timed calls
+        # (train_step_fn() would retrace + recompile the same program)
+        step = sess.train_step_fn().lower(params, batch).compile()
+        sites[mode] = _collective_sites(step.as_text())
+        g, m = step(params, batch)
+        jax.block_until_ready(g)
+        t0 = time.time()
+        for _ in range(2):
+            g, m = step(params, batch)
+            jax.block_until_ready(g)
+        step_us[mode] = (time.time() - t0) / 2 * 1e6
+        grads[mode] = jax.device_get(g)
+        metrics[mode] = jax.device_get(m)
+        print(f"  {mode:>4}: all-gather sites={sites[mode]['all-gather']:3d}"
+              f" reduce-scatter sites={sites[mode]['reduce-scatter']:3d}"
+              f" step={step_us[mode] / 1e3:.1f} ms")
+
+    # collapse: per-tensor emits >= n_tensors gather sites in the scan
+    # body; flat collapses the body to one of each.
+    ag_f, ag_n = sites["flat"]["all-gather"], sites["none"]["all-gather"]
+    rs_f, rs_n = (sites["flat"]["reduce-scatter"],
+                  sites["none"]["reduce-scatter"])
+    assert n_tensors and n_tensors > 1
+    assert ag_n - ag_f >= n_tensors - 1, (
+        f"expected the flat layout to remove >= {n_tensors - 1} "
+        f"all-gather sites, got {ag_n} -> {ag_f}")
+    assert rs_n > rs_f, (rs_n, rs_f)
+    print(f"  collapse: {n_tensors} gatherable tensors -> "
+          f"all-gather sites {ag_n} -> {ag_f}, "
+          f"reduce-scatter {rs_n} -> {rs_f}")
+
+    # parity: bit-identical grads + metrics
+    flat_g = dict(jax.tree_util.tree_flatten_with_path(grads["flat"])[0])
+    n_cmp = 0
+    for kp, vn in jax.tree_util.tree_flatten_with_path(grads["none"])[0]:
+        assert np.array_equal(np.asarray(vn), np.asarray(flat_g[kp])), (
+            f"flat/none grads differ at {jax.tree_util.keystr(kp)}")
+        n_cmp += 1
+    for k in metrics["none"]:
+        assert np.array_equal(np.asarray(metrics["none"][k]),
+                              np.asarray(metrics["flat"][k])), k
+    print(f"  parity: {n_cmp} grad tensors bit-identical")
+
+    rows += [
+        ("comm/allgather_sites_flat", float(ag_f),
+         f"n_tensors={n_tensors}"),
+        ("comm/allgather_sites_none", float(ag_n),
+         f"n_tensors={n_tensors}"),
+        ("comm/reducescatter_sites_flat", float(rs_f), ""),
+        ("comm/reducescatter_sites_none", float(rs_n), ""),
+        ("comm/train_step_flat", step_us["flat"], "us_per_step"),
+        ("comm/train_step_none", step_us["none"], "us_per_step"),
+        ("comm/grad_parity_tensors", float(n_cmp), "bit_identical=1"),
+    ]
+
+    # schedule="auto" ranking under the calibrated a800 α–β preset
+    sess_auto = _session("flat", schedule="auto", cost_preset="a800")
+    d = sess_auto.describe()
+    auto = d["schedule"]["auto"]
+    coll = d["schedule"]["collectives"]
+    print(f"  auto(a800): selected={auto['selected']} "
+          f"alpha={coll['alpha_s']:.1e}s "
+          f"per_gather_tick={coll['per_gather_tick']}")
+    ranked = sorted(
+        ((n, m) for n, m in auto["candidates"].items()
+         if isinstance(m, float)), key=lambda x: x[1])
+    for i, (name, mk) in enumerate(ranked):
+        mark = " <- selected" if name == auto["selected"] else ""
+        print(f"    {i + 1}. {name:<12} makespan={mk:.3e}{mark}")
+        rows.append((f"comm/auto_rank_{name}", mk * 1e6,
+                     f"rank={i + 1}"))
+
+    if json_path:
+        payload = {n: {"us_per_call": us, "derived": der}
+                   for n, us, der in rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"  wrote {json_path} ({len(rows)} rows)")
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# α–β calibration against the roofline terms
+# --------------------------------------------------------------------------- #
+
+
+def derive_alpha_beta(preset: str) -> tuple[float, float]:
+    """(α, β) derived from the preset hardware constants: α is the
+    published small-message launch latency of the preset's DP
+    interconnect (``LAUNCH_LATENCY``), β the inverse effective bandwidth
+    (peak intra-node/link bandwidth × ``LINK_EFFICIENCY``). These are the
+    source of the ``COLLECTIVE_ALPHA_BETA`` literals in core/plan.py —
+    the drift gate below fires if either side is edited without the
+    other (e.g. a Hardware preset bandwidth change)."""
+    from repro.core.plan import PRESETS
+
+    hw = PRESETS[preset]
+    bw_eff = (hw.intra_bw or hw.link_bw) * LINK_EFFICIENCY
+    return LAUNCH_LATENCY[preset], 1.0 / bw_eff
+
+
+def alpha_share_grid(preset: str):
+    """Per-cell (n_coll, bytes, α-term share) over a schedule grid.
+
+    Uses the ``benchmarks/roofline.py`` collective-byte accounting (the
+    terms the compiled-HLO scrape validates) to show how much of each
+    cell's collective time is launch latency under per-tensor
+    collectives — the fraction the flat layout removes. Pure reporting;
+    the α/β constants themselves come from ``derive_alpha_beta``.
+    """
+    ensure_host_devices()
+    import dataclasses as dc
+
+    import jax
+
+    from benchmarks.roofline import analyze_cell
+    from repro.core.pipeline import Runtime
+    from repro.models import model as M
+    from repro.models.common import ShapeConfig
+
+    alpha, beta = derive_alpha_beta(preset)
+    mod = M.get_arch(ARCH)
+    cfg, rc0 = mod.reduced()
+    samples = []
+    for mb, unit in ((4, 2), (4, 4), (8, 2), (8, 4)):
+        rc = dc.replace(rc0, microbatches=mb, unit=unit, coalesce="none")
+        geo = M.build_geometry(cfg, rc)
+        mesh = jax.make_mesh((4, geo.model_ranks), ("data", "model"))
+        rt = Runtime(cfg, rc, mesh)
+        pt = rt.tables["main"]
+        n_tensors = len(rt.gatherable["main"])
+        events = float((pt.gather_v >= 0).sum() + (pt.reduce_v >= 0).sum())
+        n_coll = events / pt.Pe * n_tensors
+        gb = 4 * rc.groups * rc.microbatches
+        roof = analyze_cell(rt, ShapeConfig("cal", 16, gb, "train"))
+        t_alpha = n_coll * alpha
+        t_beta = roof.coll_bytes * beta
+        samples.append({"microbatches": mb, "unit": unit,
+                        "n_coll": n_coll, "coll_bytes": roof.coll_bytes,
+                        "alpha_share": t_alpha / (t_alpha + t_beta)})
+    return samples
+
+
+def calibrate(verbose: bool = True):
+    """Consistency-gate the recorded ``COLLECTIVE_ALPHA_BETA`` literals
+    against the values derived from the hardware presets, and report the
+    per-cell α-term share over the roofline grid."""
+    from repro.core.plan import COLLECTIVE_ALPHA_BETA
+
+    out = {}
+    for preset in sorted(COLLECTIVE_ALPHA_BETA):
+        alpha, beta = derive_alpha_beta(preset)
+        ra, rb = COLLECTIVE_ALPHA_BETA[preset]
+        drift_a = abs(alpha - ra) / ra
+        drift_b = abs(beta - rb) / rb
+        out[preset] = {"alpha_derived": alpha, "beta_derived": beta,
+                       "alpha_recorded": ra, "beta_recorded": rb,
+                       "drift_alpha": drift_a, "drift_beta": drift_b}
+        if verbose:
+            print(f"  {preset}: derived alpha={alpha:.3e} "
+                  f"beta={beta:.3e} | recorded alpha={ra:.3e} "
+                  f"beta={rb:.3e} | drift {drift_a:.1%}/{drift_b:.1%}")
+    for s in alpha_share_grid("a800"):
+        if verbose:
+            print(f"  a800 cell mb={s['microbatches']} u={s['unit']}: "
+                  f"n_coll={s['n_coll']:.0f} "
+                  f"bytes={s['coll_bytes']:.2e} -> per-tensor ticks are "
+                  f"{s['alpha_share']:.0%} launch latency")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="comm_bench.json",
+                    help="machine-readable artifact path ('' to skip)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="refit the α–β constants against roofline terms")
+    args = ap.parse_args()
+    rows = bench_rows(json_path=args.json or None)
+    if args.calibrate:
+        print("=== α–β calibration (roofline terms) ===")
+        cal = calibrate()
+        for preset, c in cal.items():
+            assert c["drift_alpha"] < 0.25 and c["drift_beta"] < 0.25, (
+                f"{preset}: recorded COLLECTIVE_ALPHA_BETA drifted "
+                f">=25% from the fit — re-record the constants in "
+                f"repro/core/plan.py: {c}")
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    print("COMM_BENCH_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,32 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) after the
-human-readable tables. Roofline terms for the dry-run cells live in
-results/dryrun_* (produced by repro.launch.dryrun) and are summarized by
+human-readable tables, and writes the same rows as machine-readable JSON
+(``BENCH_pr4.json`` by default) so the perf trajectory is tracked across
+PRs. Roofline terms for the dry-run cells live in results/dryrun_*
+(produced by repro.launch.dryrun) and are summarized by
 benchmarks/summarize.py.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_pr4.json",
+                    help="machine-readable rows artifact ('' to skip)")
+    args = ap.parse_args()
+
+    # the device-backed cells (serving, comm) need the fake-device flag
+    # set before the first backend touch (kernel_bench initializes it)
+    from repro.api import ensure_host_devices
+    ensure_host_devices()
+
+    from benchmarks import comm_bench
     from benchmarks import paper_tables as T
     from benchmarks import serving_bench
 
@@ -24,10 +39,17 @@ def main() -> None:
     rows += T.autogen_bench()
     rows += kernel_bench()
     rows += serving_bench.serving_rows()
+    rows += comm_bench.bench_rows()
 
     print("\n=== CSV (name,us_per_call,derived) ===")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+    if args.json:
+        payload = {name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json} ({len(payload)} rows)")
 
 
 def kernel_bench():

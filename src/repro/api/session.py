@@ -18,6 +18,7 @@ constructing a Session — and calling ``describe()`` — needs no devices.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
@@ -189,11 +190,37 @@ class Session:
             dp = 8
         return seq, self.spec.microbatch_size, dp
 
+    def _coll_counts(self, seg) -> tuple[int, int]:
+        """(per-gather-tick, per-reduce-tick) collective counts for the
+        α–β cost model — 1 each under the flat-segment layout, the
+        gatherable tensor count under per-tensor collectives. Device-free:
+        divisibility is judged against the cost-shape dp guess."""
+        if self.rc.serve_resident:
+            return 0, 0  # weight-resident: no FSDP collectives at all
+        _, _, dp = self._cost_shape()
+        ep = self.rc.moe_mode == "ep" and self.cfg.moe is not None
+        specs = M.stage_specs(self.cfg, seg)
+        n_gath = n_repl = 0
+        for n, sp in specs.items():
+            if sp.ep and ep:
+                continue  # EP tensors never enter the FSDP collectives
+            if sp.shape and sp.shape[sp.fsdp_dim] % dp == 0:
+                n_gath += 1
+            else:
+                n_repl += 1  # replicated: psum'd per tensor on reduce
+        if n_gath == 0:
+            return 0, n_repl
+        if self.rc.coalesce == "flat":
+            return 1, 1 + n_repl
+        return n_gath, n_gath + n_repl
+
     def _cost_model(self, vpp: int):
         seq, mbs, dp = self._cost_shape()
+        n_g, n_r = self._coll_counts(self.geo.segments[-1])
         return preset_cost_model(
             self.spec.cost_preset, self.cfg, P=self.rc.pp, V=vpp,
-            seq=seq, mbs=mbs, dp=dp)
+            seq=seq, mbs=mbs, dp=dp,
+            n_coll_gather=n_g, n_coll_reduce=n_r)
 
     def _auto_select(self):
         """Simulate every registered schedule (+ the §4 autogen heuristic)
@@ -206,7 +233,7 @@ class Session:
         cache_key = (
             self.cfg.name, rc.pp, seg.vpp, rc.groups, rc.microbatches,
             rc.unit_size, rc.gather_prefetch, seq, mbs, dp,
-            self.spec.pods or 1, preset,
+            self.spec.pods or 1, preset, rc.coalesce,
         )
         return select_plan(
             rc.pp, seg.vpp, rc.microbatches, rc.unit_size,
@@ -247,7 +274,11 @@ class Session:
         if "opt" not in self._steps:
             opt_cfg, use_sched, warmup, total = self.opt_config()
 
-            @jax.jit
+            # params and opt state are consumed and replaced every step:
+            # donate both so the updated trees reuse their buffers (no
+            # transient 2× params + 2× moments residency). Callers follow
+            # the rebind pattern (``params, opt, om = sess.opt_step(...)``).
+            @partial(jax.jit, donate_argnums=(0, 2))
             def _opt(params, grads, opt_state):
                 scale = adamw.lr_schedule(
                     opt_state["step"], base_lr=1.0, warmup=warmup,
@@ -512,6 +543,9 @@ class Session:
             n_params += geo.seg_stages(sg) * sum(
                 int(np.prod(s.shape))
                 for s in M.stage_specs(cfg, sg).values())
+        from repro.core.plan import COLLECTIVE_ALPHA_BETA
+        alpha, beta = COLLECTIVE_ALPHA_BETA[self.spec.cost_preset]
+        n_g, n_r = self._coll_counts(seg)
         sched: dict[str, Any] = {
             "name": rc.schedule,
             "microbatches": rc.microbatches,
@@ -524,6 +558,16 @@ class Session:
             "gathers_per_rank": ana.gathers_per_rank,
             "reduces": ana.n_reduce,
             "comm_frac": ana.comm_frac,
+            "prefetch": rc.gather_prefetch,
+            # α–β collective profile: per-tick counts under the session's
+            # coalesce mode, with the calibrated preset constants.
+            "collectives": {
+                "coalesce": rc.coalesce,
+                "per_gather_tick": n_g,
+                "per_reduce_tick": n_r,
+                "alpha_s": alpha,
+                "beta_s_per_byte": beta,
+            },
         }
         if self.plan_selection is not None:
             sel = self.plan_selection
@@ -537,6 +581,16 @@ class Session:
         return {
             "arch": cfg.name,
             "mode": self.spec.mode,
+            # jit buffer-donation audit: which step inputs alias their
+            # outputs (no spurious full-size copies). The train step's
+            # carry lives inside its scan; params are reused by opt_step
+            # and must NOT be donated there.
+            "donation": {
+                "opt_step": ["params", "opt_state"],
+                "serve_step": ["caches"],
+                "reset_slot_caches": ["caches"],
+                "train_step": [],
+            },
             "geometry": {
                 "pp": rc.pp, "vpp": seg.vpp, "groups": rc.groups,
                 "model_ranks": geo.model_ranks,

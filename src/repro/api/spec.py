@@ -44,6 +44,12 @@ class SessionSpec:
     # for overrides["schedule"].
     schedule: str | None = None
     cost_preset: str = "a800"       # simulator preset: a800 | tpu_v5e
+    # collective coalescing: "flat" (default via RunConfig) packs each
+    # stage's gatherable params into one flat buffer so every FSDP
+    # gather/reduce tick issues ONE collective; "none" is the per-tensor
+    # escape hatch (debugging / bitwise A-B). Shorthand for
+    # overrides["coalesce"].
+    coalesce: str | None = None
     overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     optim: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     data: int | None = None         # data-axis size (None -> derived)
@@ -75,6 +81,14 @@ class SessionSpec:
                     f"schedule={self.schedule!r} vs "
                     f"overrides['schedule']={prev!r}")
             self.overrides["schedule"] = self.schedule
+        if self.coalesce is not None:
+            prev = self.overrides.get("coalesce")
+            if prev is not None and prev != self.coalesce:
+                raise SessionError(
+                    f"coalesce given twice and inconsistently: "
+                    f"coalesce={self.coalesce!r} vs "
+                    f"overrides['coalesce']={prev!r}")
+            self.overrides["coalesce"] = self.coalesce
 
     # ------------------------------------------------------------------ #
     def validate(self) -> "SessionSpec":
@@ -100,6 +114,12 @@ class SessionSpec:
                 raise SessionError(
                     str(e) + " (or pass schedule='auto' to search the "
                     "registered schedules)") from e
+        co = self.overrides.get("coalesce")
+        if co is not None and co not in ("flat", "none"):
+            raise SessionError(
+                f"unknown coalesce mode {co!r}; pick 'flat' (one "
+                "collective per stage segment per tick) or 'none' "
+                "(per-tensor collectives)")
         from repro.core.plan import PRESETS
         if self.cost_preset not in PRESETS:
             raise SessionError(

@@ -105,6 +105,9 @@ def make_tok_slice(g_rank, Btot: int, mbs: int) -> Callable:
 # --------------------------------------------------------------------------- #
 
 
+_FLAT = "__flat__"  # gbuf key of the coalesced flat segment
+
+
 @dataclasses.dataclass
 class TickEngine:
     """Scans one PackedTable with the shared gather/reduce/wire plumbing.
@@ -113,6 +116,13 @@ class TickEngine:
     read stage parameters via ``stage_params`` and may use any extra
     carry entries the body placed there. ``rs_dtype`` enables the
     per-unit reduce-scatter step (training only).
+
+    With a ``flat`` layout (``RunConfig.coalesce="flat"``), the gather
+    tick issues ONE ``all_gather`` of the pre-packed per-slot slab
+    (``seg_flat``) and the reduce tick ONE ``psum_scatter`` of the
+    coalesced gradient segment, regardless of tensor count; per-tensor
+    views come from the gathered slab via static offsets. Tensors the
+    layout cannot cover (replicated / EP) keep the per-tensor path.
     """
 
     pt: PackedTable
@@ -129,15 +139,24 @@ class TickEngine:
     g_rank: Any
     backward: bool = False
     rs_dtype: Any = None
+    flat: Any = None        # FlatLayout | None (coalesced collectives)
+    seg_flat: Any = None    # [V, local_size] pre-packed local slabs
+    grad_compress: str = "none"   # none | int8 (error-feedback reduce)
 
     # ------------------------------------------------------------------ #
     def stage_params(self, v, use_slot, gbuf):
         """Params of local slot v: gathered buffer or resident stack."""
         out = {}
+        if self.flat is not None and self.gatherable:
+            slab = jax.lax.dynamic_index_in_dim(
+                gbuf[_FLAT], jnp.clip(use_slot, 0, 1), 0, keepdims=False)
+            out.update(fsdp.unpack_flat(slab, self.flat))
         for n in self.specs:
             if n in self.gatherable:
-                out[n] = jax.lax.dynamic_index_in_dim(
-                    gbuf[n], jnp.clip(use_slot, 0, 1), 0, keepdims=False)
+                if self.flat is None:
+                    out[n] = jax.lax.dynamic_index_in_dim(
+                        gbuf[n], jnp.clip(use_slot, 0, 1), 0,
+                        keepdims=False)
             else:
                 out[n] = jax.lax.dynamic_index_in_dim(
                     self.seg_p[n], jnp.clip(v, 0, self.V - 1), 0,
@@ -146,10 +165,30 @@ class TickEngine:
 
     def init_gbuf(self):
         """Rotating two-slot buffer for blockwise FSDP gathers."""
+        if self.flat is not None:
+            if not self.gatherable:
+                return {}
+            return {_FLAT: jnp.zeros((2, self.flat.full_size), self.cdt)}
         return {
             n: jnp.zeros(
                 (2, *_gathered_shape(self.specs[n], self.dsize, self.ep)),
                 self.cdt)
+            for n in self.gatherable
+        }
+
+    def init_gerr(self):
+        """fp32 error-feedback buffers for the int8 reduce path.
+
+        int8 compression covers the gatherable (FSDP reduce-scatter) set —
+        the bulk of the traffic; replicated/EP tensors keep fp reduces.
+        """
+        if self.grad_compress != "int8" or not self.gatherable:
+            return None
+        if self.flat is not None:
+            return {_FLAT: jnp.zeros((self.V, self.flat.full_size),
+                                     jnp.float32)}
+        return {
+            n: jnp.zeros((self.V, *self.specs[n].shape), jnp.float32)
             for n in self.gatherable
         }
 
@@ -173,11 +212,24 @@ class TickEngine:
         return c
 
     def _gather_step(self, c, row):
-        """Step 2: blockwise FSDP gather into the rotating slot."""
+        """Step 2: blockwise FSDP gather into the rotating slot.
+
+        Flat layout: ONE all_gather of the slot's pre-packed slab; else
+        one all_gather per gatherable tensor.
+        """
         gv, gs = row["gather_v"], row["gather_slot"]
 
         def do_gather(gb):
             gb = dict(gb)
+            if self.flat is not None:
+                pv = jax.lax.dynamic_index_in_dim(
+                    self.seg_flat, jnp.clip(gv, 0, self.V - 1), 0,
+                    keepdims=False)
+                full = fsdp.all_gather_flat(pv, self.flat)
+                gb[_FLAT] = jax.lax.dynamic_update_index_in_dim(
+                    gb[_FLAT], full.astype(self.cdt), jnp.clip(gs, 0, 1),
+                    0)
+                return gb
             for n in self.gatherable:
                 pv = jax.lax.dynamic_index_in_dim(
                     self.seg_p[n], jnp.clip(gv, 0, self.V - 1), 0,
@@ -194,29 +246,68 @@ class TickEngine:
         return c
 
     def _reduce_step(self, c, row):
-        """Step 4: per-unit blockwise reduce-scatter of finished grads."""
+        """Step 4: per-unit blockwise reduce-scatter of finished grads.
+
+        Flat layout: ONE psum_scatter coalesces every gatherable tensor's
+        gradient; replicated/EP leftovers keep their per-tensor reduces.
+        ``grad_compress="int8"`` routes the gatherable set through the
+        error-feedback int8 path (``c["gerr"]`` carries the feedback).
+        """
         rv = row["reduce_v"]
         rs_dt = jnp.dtype(self.rs_dtype)
+        flat_set = set(self.gatherable) if self.flat is not None else set()
+        int8 = self.grad_compress == "int8" and bool(self.gatherable)
 
         def do_reduce(args):
-            full, shard = args
-            full, shard = dict(full), dict(shard)
+            full, shard = dict(args[0]), dict(args[1])
+            gerr = dict(args[2]) if int8 else None
+            rv_c = jnp.clip(rv, 0, self.V - 1)
+            if flat_set:
+                grads = {n: jax.lax.dynamic_index_in_dim(
+                    full[n], rv_c, 0, keepdims=False) for n in flat_set}
+                if int8:
+                    err_v = jax.lax.dynamic_index_in_dim(
+                        gerr[_FLAT], rv_c, 0, keepdims=False)
+                    red, new_err = fsdp.reduce_scatter_flat_int8(
+                        grads, err_v, self.flat)
+                    gerr[_FLAT] = jax.lax.dynamic_update_index_in_dim(
+                        gerr[_FLAT], new_err, rv_c, 0)
+                else:
+                    red = fsdp.reduce_scatter_flat(grads, self.flat, rs_dt)
+                for n, r in red.items():
+                    shard[n] = _dyn_add(shard[n], rv,
+                                        r.astype(jnp.float32))
+                    full[n] = jax.lax.dynamic_update_index_in_dim(
+                        full[n], jnp.zeros_like(grads[n]), rv_c, 0)
             for n in full:
-                g = jax.lax.dynamic_index_in_dim(
-                    full[n], jnp.clip(rv, 0, self.V - 1), 0,
-                    keepdims=False)
-                red = fsdp.reduce_scatter_grad(g.astype(rs_dt),
-                                               self.specs[n],
-                                               self.dsize, self.ep)
-                shard[n] = _dyn_add(shard[n], rv, red.astype(jnp.float32))
+                if n in flat_set:
+                    continue
+                g = jax.lax.dynamic_index_in_dim(full[n], rv_c, 0,
+                                                 keepdims=False)
+                if int8 and self.flat is None and n in self.gatherable:
+                    err_v = jax.lax.dynamic_index_in_dim(
+                        gerr[n], rv_c, 0, keepdims=False)
+                    red_t, new_err = fsdp.reduce_scatter_grad_int8(
+                        g, err_v, self.specs[n], self.dsize, self.ep)
+                    gerr[n] = jax.lax.dynamic_update_index_in_dim(
+                        gerr[n], new_err, rv_c, 0)
+                else:
+                    red_t = fsdp.reduce_scatter_grad(g.astype(rs_dt),
+                                                     self.specs[n],
+                                                     self.dsize, self.ep)
+                shard[n] = _dyn_add(shard[n], rv,
+                                    red_t.astype(jnp.float32))
                 full[n] = jax.lax.dynamic_update_index_in_dim(
-                    full[n], jnp.zeros_like(g), jnp.clip(rv, 0, self.V - 1),
-                    0)
-            return full, shard
+                    full[n], jnp.zeros_like(g), rv_c, 0)
+            out = (full, shard) + ((gerr,) if int8 else ())
+            return out
 
-        c["acc_full"], c["acc_shard"] = jax.lax.cond(
-            rv >= 0, do_reduce, lambda a: a,
-            (c["acc_full"], c["acc_shard"]))
+        operands = (c["acc_full"], c["acc_shard"]) + (
+            (c["gerr"],) if int8 else ())
+        res = jax.lax.cond(rv >= 0, do_reduce, lambda a: a, operands)
+        c["acc_full"], c["acc_shard"] = res[0], res[1]
+        if int8:
+            c["gerr"] = res[2]
         return c
 
     def _boundary(self, c):
@@ -306,17 +397,22 @@ def segment_train_scan(
     rope = _rope_for(cfg, rc, seq)
     dsize = rt.dsize
 
+    flat = rt.flat_layouts.get(seg.name)
     eng = TickEngine(
         pt=pt, Pe=Pe, G=G, V=V, specs=specs, gatherable=gatherable,
         seg_p=seg_p, dsize=dsize, ep=rt.ep, cdt=cdt,
         p_rank=p_rank, g_rank=g_rank, backward=True,
-        rs_dtype=rc.grad_rs_dtype)
+        rs_dtype=rc.grad_rs_dtype, flat=flat,
+        seg_flat=(fsdp.pack_flat_stack(seg_p, flat)
+                  if flat is not None else None),
+        grad_compress=rc.grad_compress)
     tok_slice = make_tok_slice(g_rank, Btot, mbs)
     stage_params = eng.stage_params
 
     # ---- carry ------------------------------------------------------------ #
     act = (mbs, seq, d)
     zeros_act = jnp.zeros(act, cdt)
+    gerr0 = eng.init_gerr()
     if carry_in is None:
         carry = dict(
             send_f=zeros_act, send_b=zeros_act,
@@ -329,6 +425,7 @@ def segment_train_scan(
             gbuf=eng.init_gbuf(),
             acc_full={n: jnp.zeros((V, *specs[n].shape), jnp.float32)
                       for n in specs if n not in ep_names},
+            **({"gerr": gerr0} if gerr0 is not None else {}),
             acc_shard={n: jnp.zeros(
                 (V, *_local_shape(specs[n], dsize, rt.ep)), jnp.float32)
                 for n in specs},
@@ -775,10 +872,13 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
     # (pt.n_mb / pt.U); the caller's Btot — which make_serve_step may
     # shrink below rc.microbatches on degenerate tiny batches — only
     # governs token slicing, cache addressing and the out_tok layout.
+    flat = rt.flat_layouts.get(seg_key)
     eng = TickEngine(
         pt=pt, Pe=Pe, G=G, V=V, specs=specs, gatherable=gatherable,
         seg_p=seg_p, dsize=rt.dsize, ep=rt.ep, cdt=cdt,
-        p_rank=p_rank, g_rank=g_rank, backward=False, rs_dtype=None)
+        p_rank=p_rank, g_rank=g_rank, backward=False, rs_dtype=None,
+        flat=flat, seg_flat=(fsdp.pack_flat_stack(seg_p, flat)
+                             if flat is not None else None))
     tok_slice = make_tok_slice(g_rank, Btot, mbs)
     stage_params = eng.stage_params
     cache_get, cache_put = make_cache_io(

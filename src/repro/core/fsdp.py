@@ -11,6 +11,34 @@ Parameter layout (DESIGN.md §4):
     "data" permanently and are never gathered.
   * the "pod" axis always replicates parameters (hybrid-sharded DP, Zhao
     et al.; §5.2 of the paper) — pods only all-reduce gradients.
+
+DESIGN — flat-segment coalescing (``RunConfig.coalesce="flat"``, default):
+
+The blockwise FSDP events of §3.3 assume ONE bandwidth-bound transfer per
+stage block, but a stage block is a dict of tensors — issuing one
+collective per tensor turns each gather/reduce tick into dozens of small
+latency-bound collectives. The flat-segment layout coalesces them:
+
+  * every gatherable tensor of a stage (data-divisible, non-EP) is packed
+    into one contiguous per-slot buffer. A tensor enters the pack with its
+    data-sharded dim ``ld`` moved to axis 0 and flattened, so tiling over
+    "data" on the flat axis is exactly the tensor's per-rank FSDP shard.
+  * the pack is *shard-major*: each rank's local slab is the entry-order
+    concatenation of its local shards (``FlatLayout.local_size`` long),
+    and the gathered segment is the rank-order concatenation of slabs.
+    ``FlatEntry.offset/size`` are therefore static LOCAL offsets; the
+    gathered view of tensor ``i`` is
+    ``seg.reshape(dsize, local_size)[:, off:off+size]`` reshaped back —
+    a zero-copy view for ``ld == 0`` tensors (one transpose otherwise).
+  * the tick engine then issues ONE ``lax.all_gather`` per gather tick and
+    ONE ``lax.psum_scatter`` per reduce tick, independent of tensor count.
+    Values are bit-identical to the per-tensor path: both collectives are
+    element-exact and the per-element cross-rank reduction order is
+    unchanged — only the element layout differs.
+  * tensors the layout cannot cover (replicated because non-divisible, or
+    EP-sharded) keep the per-tensor path: resident stacks for gathers and
+    ``psum``/local accumulation for reduces. ``coalesce="none"`` restores
+    the per-tensor path wholesale as an escape hatch.
 """
 
 from __future__ import annotations
@@ -22,7 +50,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import ParamSpec
+import numpy as np
+
+from repro.models.common import FlatEntry, FlatLayout, ParamSpec
 
 DATA, MODEL, POD = "data", "model", "pod"
 
@@ -130,6 +160,119 @@ def pipe_perm(pp: int, groups: int, direction: int):
             dst = base + (p + direction) % pp
             pairs.append((src, dst))
     return pairs
+
+
+# --------------------------------------------------------------------------- #
+# Flat-segment coalescing (see the DESIGN note in the module docstring)
+# --------------------------------------------------------------------------- #
+
+
+def build_flat_layout(specs: dict, gatherable, dsize: int, ep: bool
+                      ) -> FlatLayout | None:
+    """Static offsets for one stage segment's flat buffer (None if empty)."""
+    entries = []
+    off = 0
+    for n in sorted(gatherable):
+        sp = specs[n]
+        ld = local_dim(sp, dsize, ep)
+        assert ld is not None and not (sp.ep and ep), (
+            f"{n} is not flat-packable (replicated or EP)")
+        size = int(np.prod(sp.shape)) // dsize
+        entries.append(FlatEntry(name=n, shape=tuple(sp.shape), ld=ld,
+                                 offset=off, size=size))
+        off += size
+    if not entries:
+        return None
+    return FlatLayout(entries=tuple(entries), local_size=off, dsize=dsize)
+
+
+def _rest_shape(e: FlatEntry) -> tuple[int, ...]:
+    return tuple(s for i, s in enumerate(e.shape) if i != e.ld)
+
+
+def pack_flat_stack(seg_p: dict, fl: FlatLayout):
+    """[V, local_size] slab stack from the per-rank local param stacks.
+
+    ``seg_p[n]`` is the shard_map-local ``[V, *local_shape]`` stack (dim
+    ``ld`` already divided by dsize). Packed once per step — the gather
+    tick then just indexes a row.
+    """
+    parts = []
+    V = None
+    for e in fl.entries:
+        x = seg_p[e.name]
+        V = x.shape[0]
+        parts.append(jnp.moveaxis(x, e.ld + 1, 1).reshape(V, e.size))
+    return jnp.concatenate(parts, axis=1)
+
+
+def all_gather_flat(local_slab, fl: FlatLayout):
+    """ONE all-gather for the whole stage segment: [local] -> [full]."""
+    return jax.lax.all_gather(local_slab, DATA, axis=0, tiled=True)
+
+
+def unpack_flat(seg, fl: FlatLayout) -> dict:
+    """Per-tensor views of a gathered [full_size] segment (static offsets)."""
+    m = seg.reshape(fl.dsize, fl.local_size)
+    out = {}
+    for e in fl.entries:
+        rest = _rest_shape(e)
+        t = m[:, e.offset:e.offset + e.size].reshape(
+            (e.shape[e.ld],) + rest)
+        out[e.name] = jnp.moveaxis(t, 0, e.ld)
+    return out
+
+
+def unpack_flat_local(loc, fl: FlatLayout) -> dict:
+    """Per-tensor local shards of a [local_size] slab (post reduce-scatter)."""
+    out = {}
+    for e in fl.entries:
+        rest = _rest_shape(e)
+        t = loc[e.offset:e.offset + e.size].reshape(
+            (e.shape[e.ld] // fl.dsize,) + rest)
+        out[e.name] = jnp.moveaxis(t, 0, e.ld)
+    return out
+
+
+def _pack_full_flat(grads: dict, fl: FlatLayout, dtype):
+    """[full_size] shard-major flat buffer from full-size per-rank grads."""
+    parts = []
+    for e in fl.entries:
+        g = jnp.moveaxis(grads[e.name], e.ld, 0).astype(dtype)
+        parts.append(g.reshape(fl.dsize, e.size))
+    return jnp.concatenate(parts, axis=1).reshape(-1)
+
+
+def reduce_scatter_flat(grads: dict, fl: FlatLayout, rs_dtype) -> dict:
+    """ONE psum_scatter for the whole stage segment's gradients.
+
+    ``grads`` are full-size per-rank accumulations; returns each tensor's
+    reduced LOCAL shard (same values, bit-for-bit, as per-tensor
+    ``reduce_scatter_grad`` — only the wire layout is coalesced).
+    """
+    flat = _pack_full_flat(grads, fl, jnp.dtype(rs_dtype))
+    red = jax.lax.psum_scatter(flat, DATA, scatter_dimension=0, tiled=True)
+    return unpack_flat_local(red, fl)
+
+
+def reduce_scatter_flat_int8(grads: dict, err_flat, fl: FlatLayout):
+    """int8 flat reduce with error feedback over the whole segment.
+
+    Like :func:`reduce_scatter_grad_int8` but with ONE collective and one
+    pmax-shared scale for the entire flat segment (coarser than the
+    per-tensor scale — the error-feedback buffer absorbs the difference).
+    ``err_flat`` is the [full_size] fp32 feedback carried across reduce
+    ticks; returns (per-tensor local shards, new err_flat).
+    """
+    gf = _pack_full_flat(grads, fl, jnp.float32) + err_flat
+    local_scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, DATA)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    red = jax.lax.psum_scatter(
+        q.astype(jnp.int32), DATA, scatter_dimension=0, tiled=True
+    ).astype(jnp.float32) * scale
+    new_err = gf - q * scale
+    return unpack_flat_local(red, fl), new_err
 
 
 # --------------------------------------------------------------------------- #

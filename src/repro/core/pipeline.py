@@ -231,6 +231,19 @@ class Runtime:
             sname: sorted(n for n, sp_ in sps.items() if sp_.ep and self.ep)
             for sname, sps in self.stage_specs.items()
         }
+        # --- flat-segment coalescing (one collective per tick) ------------- #
+        if rc.coalesce not in ("flat", "none"):
+            raise ValueError(
+                f"unknown coalesce mode {rc.coalesce!r}; pick 'flat' (one "
+                "all-gather / reduce-scatter per stage segment per tick) "
+                "or 'none' (per-tensor collectives)")
+        self.flat_layouts: dict[str, object] = {
+            sname: (fsdp.build_flat_layout(
+                        self.stage_specs[sname], self.gatherable[sname],
+                        self.dsize, self.ep)
+                    if rc.coalesce == "flat" else None)
+            for sname in self.stage_specs
+        }
         # io params: only the vocab-dim of embed/head shards (per the
         # vocab-shard decision); everything else is replicated — io params
         # are consumed outside the gather machinery.

@@ -50,6 +50,7 @@ class PackedTable:
     V: int
     U: int             # unit size (xbuf/stash depth)
     n_mb: int
+    prefetch: int      # gather issue distance the arrays were packed for
     kind: np.ndarray   # [T, Pe] {0 nop, 1 F, 2 B, 3 W}
     mb: np.ndarray     # [T, Pe] microbatch index
     v: np.ndarray      # [T, Pe] local stage slot
@@ -148,7 +149,7 @@ def pack_table(tt: TickTable, prefetch: int = 0) -> PackedTable:
                 if stage > 0:
                     recv_b_u[t, p] = mb[t - 1, nxt_r]
     return PackedTable(
-        T=T, Pe=Pe, V=V, U=tt.unit, n_mb=tt.n_mb,
+        T=T, Pe=Pe, V=V, U=tt.unit, n_mb=tt.n_mb, prefetch=prefetch,
         kind=kind, mb=mb, v=v,
         gather_v=gather_v, gather_slot=gather_slot, use_slot=use_slot,
         reduce_v=reduce_v, recv_f_u=recv_f_u, recv_b_u=recv_b_u,
@@ -190,6 +191,10 @@ class PlanAnalysis:
     n_reduce: int
     gathers_per_rank: float
     comm_frac: float       # mean per-rank collective time / makespan
+    prefetch: int = 0      # gather issue distance the analysis assumed
+    coll_alpha: float = 0.0      # per-collective latency of the cost model
+    n_coll_gather: int = 1       # collectives per gather tick (1 = flat)
+    n_coll_reduce: int = 1
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -225,13 +230,18 @@ class SchedulePlan:
                    prefetch=prefetch)
 
     def with_prefetch(self, prefetch: int) -> "SchedulePlan":
-        """Same table, re-packed for a different gather-prefetch depth."""
+        """Same table, re-packed for a different gather-prefetch depth.
+
+        Analyses are NOT carried over: the simulation models prefetch
+        (prefetch=0 gathers block at use; ≥1 overlap), so cached numbers
+        would be stale for the new depth.
+        """
         if prefetch == self.prefetch:
             return self
         return SchedulePlan(
             name=self.name, params=self.params, table=self.table,
             packed=pack_table(self.table, prefetch=prefetch),
-            prefetch=prefetch, analyses=dict(self.analyses))
+            prefetch=prefetch)
 
     @property
     def has_w(self) -> bool:
@@ -242,10 +252,24 @@ class SchedulePlan:
 
     def analyze(self, cm: CostModel, preset: str = "abstract"
                 ) -> PlanAnalysis:
-        """Simulate this plan under ``cm``; cached per preset name."""
-        if preset not in self.analyses:
-            res = simulate(self.table, cm)
-            self.analyses[preset] = PlanAnalysis(
+        """Simulate this plan under ``cm``; cached per preset name.
+
+        Prefetch-aware: a plan packed with ``prefetch == 0`` gathers at
+        use time, so its collectives are simulated blocking
+        (``overlap_comm=False``); ``prefetch >= 1`` keeps the async
+        overlapped issue the executor actually performs.
+
+        The cache key includes the cost model's collective profile —
+        one preset name now spans several models (per-tick collective
+        counts differ between coalesce modes), so an A/B of the same
+        plan under both must not alias.
+        """
+        key = (preset, cm.n_coll_gather, cm.n_coll_reduce, cm.coll_alpha)
+        if key not in self.analyses:
+            cm_eff = (cm if self.prefetch > 0 else
+                      dataclasses.replace(cm, overlap_comm=False))
+            res = simulate(self.table, cm_eff)
+            self.analyses[key] = PlanAnalysis(
                 preset=preset,
                 makespan=res.makespan,
                 bubble_frac=res.bubble_frac,
@@ -255,8 +279,12 @@ class SchedulePlan:
                 gathers_per_rank=res.n_gather / self.table.P,
                 comm_frac=float(res.comm_busy.mean()
                                 / max(res.makespan, 1e-12)),
+                prefetch=self.prefetch,
+                coll_alpha=cm.coll_alpha,
+                n_coll_gather=cm.n_coll_gather,
+                n_coll_reduce=cm.n_coll_reduce,
             )
-        return self.analyses[preset]
+        return self.analyses[key]
 
 
 # --------------------------------------------------------------------------- #
@@ -264,6 +292,24 @@ class SchedulePlan:
 # --------------------------------------------------------------------------- #
 
 PRESETS = {"a800": A800, "tpu_v5e": TPU_V5E}
+
+#: Calibrated α–β collective constants per preset: (alpha, beta) with
+#: t_collective(n, bytes) = n·α + bytes·β.  α is the per-collective launch
+#: latency (the term a per-tensor gather tick pays #tensors times and the
+#: flat-segment tick pays once): published small-message latencies for the
+#: preset's DP interconnect (NCCL intra-node all-gather ≈ 8 µs on A800
+#: NVSwitch; ~1.2 µs per ICI hop on v5e).  β is the inverse *effective*
+#: collective bandwidth on the FSDP (data) axis: the simulator Hardware
+#: preset's intra-node/link peak at ~90% efficiency.
+#: ``benchmarks/comm_bench.py --calibrate`` re-derives both from those
+#: sources and fails on >=25% drift (so a Hardware-preset bandwidth edit
+#: cannot silently desync these literals), and reports the per-cell
+#: α-term share over the ``benchmarks/roofline.py`` byte-accounting grid
+#: (the terms the compiled-HLO structural scrape validates).
+COLLECTIVE_ALPHA_BETA: dict[str, tuple[float, float]] = {
+    "a800": (8.0e-06, 1.0 / 180e9),     # NVSwitch intra-node DP axis
+    "tpu_v5e": (1.2e-06, 1.0 / 45e9),   # 50 GB/s ICI at ~90% efficiency
+}
 
 
 def fused_cost_model(cm: CostModel) -> CostModel:
@@ -274,7 +320,8 @@ def fused_cost_model(cm: CostModel) -> CostModel:
 
 def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
                       seq: int = 1024, mbs: int = 1, dp: int = 1,
-                      mfu: float = 0.5) -> CostModel:
+                      mfu: float = 0.5, n_coll_gather: int = 1,
+                      n_coll_reduce: int | None = None) -> CostModel:
     """CostModel for a hardware preset and a (model × shape) workload.
 
     With a ModelConfig, per-task durations come from transformer napkin
@@ -282,6 +329,12 @@ def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
     blockwise FSDP gather bytes) via ``cost_model_for``; without one, the
     abstract unit-cost model (F=1, B=2, W=1) is returned so device-free
     callers still get a simulatable preset.
+
+    Collective ticks are costed α–β style with the calibrated
+    ``COLLECTIVE_ALPHA_BETA`` constants: ``n_coll_gather`` /
+    ``n_coll_reduce`` are the collectives issued per gather/reduce tick —
+    1 under the flat-segment layout (``coalesce="flat"``), the gatherable
+    tensor count under per-tensor collectives (``coalesce="none"``).
     """
     if preset not in PRESETS:
         raise ValueError(
@@ -290,6 +343,7 @@ def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
     if cfg is None:
         return CostModel()
     hw = PRESETS[preset]
+    alpha, beta = COLLECTIVE_ALPHA_BETA[preset]
     d = cfg.d_model
     L = max(cfg.n_layers, 1)
     layers_per_stage = max(L / (P * V), 1e-9)
@@ -299,7 +353,10 @@ def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
     return cost_model_for(
         hw, layer_flops_f=layer_flops, layers_per_stage=layers_per_stage,
         act_bytes=act_bytes, stage_param_bytes=stage_param_bytes,
-        dp=max(dp, 1), mfu=mfu)
+        dp=max(dp, 1), mfu=mfu, alpha=alpha, beta=beta,
+        n_coll_gather=max(n_coll_gather, 0),
+        n_coll_reduce=max(n_coll_reduce if n_coll_reduce is not None
+                          else n_coll_gather, 0))
 
 
 # --------------------------------------------------------------------------- #

@@ -27,13 +27,18 @@ class CostModel:
     t_b: float = 2.0          # input-grad (includes remat re-forward)
     t_w: float = 1.0          # weight-grad GEMMs
     t_p2p: float = 0.05       # stage-boundary activation transfer
-    t_gather: float = 0.5     # FSDP all-gather, one stage block
+    t_gather: float = 0.5     # FSDP all-gather, one stage block (α·n + β·B)
     t_reduce: float = 0.5     # grad reduce-scatter, one stage block
     overlap_comm: bool = True  # collectives overlap compute (async)
     # memory accounting (arbitrary units, per stage block)
     m_act: float = 1.0        # activation stash of one (mb, stage) F→B
     m_wstash: float = 0.5     # (x, dy) stash of one (mb, stage) B→W
     m_weight: float = 1.0     # one stage block of parameters (gathered)
+    # α–β collective metadata (already folded into t_gather/t_reduce; kept
+    # so analyses/describe() can report the latency-vs-bandwidth split)
+    coll_alpha: float = 0.0       # per-collective launch latency (s)
+    n_coll_gather: int = 1        # collectives issued per gather tick
+    n_coll_reduce: int = 1        # collectives issued per reduce tick
 
     def dur(self, kind: int) -> float:
         return {F: self.t_f, B: self.t_b, W: self.t_w}[kind]
@@ -219,19 +224,37 @@ def cost_model_for(
     mfu: float = 0.5,
     remat: bool = True,
     cross_node_dp: bool = False,
+    alpha: float = 0.0,        # per-collective launch latency (s)
+    beta: float | None = None,  # s/byte on the collective path (1/bw_eff)
+    n_coll_gather: int = 1,    # collectives per gather tick (1 = flat)
+    n_coll_reduce: int = 1,    # collectives per reduce tick
 ) -> CostModel:
-    """Napkin-math durations from hardware peaks at an assumed MFU."""
+    """Napkin-math durations from hardware peaks at an assumed MFU.
+
+    Collective ticks are costed α–β style: ``n_collectives × α`` (launch
+    latency — the term per-tensor collectives lose on) plus
+    ``bytes × β`` (bandwidth — identical either way). ``beta=None``
+    falls back to the preset's link/intra bandwidth.
+    """
     eff = hw.flops * mfu
     t_f = layers_per_stage * layer_flops_f / eff
     # B = input-grad (≈ fwd flops) + remat re-forward when enabled
     t_b = (layers_per_stage * layer_flops_f * (2 if remat else 1)) / eff
     t_w = layers_per_stage * layer_flops_f / eff
     bw = hw.link_bw if cross_node_dp or hw.intra_bw == 0 else hw.intra_bw
-    t_gather = stage_param_bytes * (dp - 1) / dp / bw
+    b = beta if beta is not None else 1.0 / bw
+    wire_bytes = stage_param_bytes * (dp - 1) / dp
+    # 0 collectives per tick = none issued at all (weight-resident serve)
+    t_gather = (alpha * n_coll_gather + wire_bytes * b
+                if n_coll_gather > 0 else 0.0)
+    t_reduce = (alpha * n_coll_reduce + wire_bytes * b
+                if n_coll_reduce > 0 else 0.0)
     return CostModel(
         t_f=t_f, t_b=t_b, t_w=t_w,
         t_p2p=act_bytes / hw.link_bw,
-        t_gather=t_gather, t_reduce=t_gather,
+        t_gather=t_gather, t_reduce=t_reduce,
         m_act=act_bytes, m_wstash=2 * act_bytes,
         m_weight=stage_param_bytes,
+        coll_alpha=alpha, n_coll_gather=n_coll_gather,
+        n_coll_reduce=n_coll_reduce,
     )

@@ -154,6 +154,11 @@ class RunConfig:
     grad_compress: str = "none"  # none | int8
     grad_rs_dtype: str = "float32"  # reduce-scatter wire dtype (bf16 halves
                                     # grad traffic; accum stays fp32)
+    coalesce: str = "flat"          # flat: one all-gather / reduce-scatter
+                                    # per stage segment per tick (flat
+                                    # buffers, §3.3 bandwidth-bound); none:
+                                    # one collective per tensor (escape
+                                    # hatch / debugging)
     serve_resident: bool = False    # serving: keep non-EP params gathered
                                     # (no per-step FSDP gathers)
     no_defer_extra: tuple = ()      # param-name substrings whose dW is
@@ -161,8 +166,10 @@ class RunConfig:
                                     # trades bubble-filler mass for stash
                                     # memory on huge projections)
     opt_moment_dtype: str = "float32"
-    gather_prefetch: int = 0        # issue stage gathers N ticks early
-                                    # (paper §3.3 prefetch; overlap lever)
+    gather_prefetch: int = 1        # issue stage gathers N ticks early
+                                    # (paper §3.3 prefetch; ≥1 lets the
+                                    # async all-gather overlap the prior
+                                    # block's compute; 0 = gather at use)
     attn_block_k: int = 512
     vocab_chunk: int = 8192
 
@@ -184,6 +191,42 @@ class ParamSpec:
     scale: float = 1.0           # init scale multiplier
     ep: bool = False             # expert-parallel: dim0 stays sharded over
                                  # "data" (never FSDP-gathered) in ep mode
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatEntry:
+    """One gatherable tensor's slice of a stage's flat segment.
+
+    The segment stores each tensor with its data-sharded dim moved to
+    axis 0 and flattened, laid out *shard-major*: the per-rank local
+    packs concatenate in entry order, and the gathered segment is the
+    rank-order concatenation of those locals. ``offset``/``size`` index
+    the LOCAL (per-shard) pack — the gathered view of tensor ``i`` is
+    ``seg.reshape(dsize, local_size)[:, offset:offset+size]``.
+    """
+
+    name: str
+    shape: tuple[int, ...]       # full (unsharded) tensor shape
+    ld: int                      # data-sharded dim (moved to axis 0)
+    offset: int                  # start in the local flat pack (elements)
+    size: int                    # local element count (= prod(shape)/dsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static offsets of one stage segment's flat parameter buffer."""
+
+    entries: tuple[FlatEntry, ...]
+    local_size: int              # per-shard flat length
+    dsize: int                   # data-axis size the layout was built for
+
+    @property
+    def full_size(self) -> int:
+        return self.local_size * self.dsize
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(e.name for e in self.entries)
 
 
 def init_param(key, spec: ParamSpec, dtype) -> jnp.ndarray:

@@ -844,6 +844,298 @@ def case_golden_parity(arch: str = "llama3.2-1b", write=None):
     print(f"CASE_OK golden_parity {arch}")
 
 
+def case_flat_parity(arch: str = "llama3.2-1b"):
+    """coalesce="flat" (one all-gather / one reduce-scatter per tick) must
+    be BIT-IDENTICAL to the per-tensor path: train grads + metrics and
+    served tokens, same params, same batch."""
+    from repro.core.pipeline import make_serve_step, init_serve_caches
+    mod = M.get_arch(arch)
+    cfg, rc0 = mod.reduced()
+    rc0 = dataclasses.replace(rc0, microbatches=4, unit=2)
+    geo = M.build_geometry(cfg, rc0)
+    data = max(1, int(N_DEV) // geo.model_ranks)
+    mesh = _mesh(data, geo.model_ranks)
+    gb = data * rc0.groups * rc0.microbatches
+    seq = 16
+    batch = _batch(cfg, gb, seq)
+
+    outs = {}
+    for mode in ("flat", "none"):
+        rc = dataclasses.replace(rc0, coalesce=mode)
+        rt = Runtime(cfg, rc, mesh)
+        if mode == "flat":
+            fl = rt.flat_layouts["main"]
+            assert fl is not None and len(fl.entries) > 1, (
+                "flat parity is vacuous: layout empty or single-tensor")
+        else:
+            assert rt.flat_layouts["main"] is None
+        params = rt.init_params(jax.random.PRNGKey(0))
+        step = make_train_step(rt, ShapeConfig("toy", seq, gb, "train"))
+        grads, metrics = step(params, batch)
+        outs[mode] = (jax.device_get(grads), jax.device_get(metrics))
+
+    flat_g = dict(jax.tree_util.tree_flatten_with_path(outs["flat"][0])[0])
+    none_g = jax.tree_util.tree_flatten_with_path(outs["none"][0])[0]
+    for kp, vn in none_g:
+        assert np.array_equal(np.asarray(vn), np.asarray(flat_g[kp])), (
+            f"flat grads differ at {jax.tree_util.keystr(kp)}")
+    for k in outs["none"][1]:
+        assert np.array_equal(np.asarray(outs["none"][1][k]),
+                              np.asarray(outs["flat"][1][k])), k
+    print(f"  train: {len(none_g)} grad tensors bit-identical")
+
+    # serve: prefill + 2 decode steps under both modes
+    toks_out = {}
+    for mode in ("flat", "none"):
+        rc = dataclasses.replace(rc0, microbatches=2, coalesce=mode)
+        rt = Runtime(cfg, rc, mesh)
+        gb_s = data * rc.groups * rc.microbatches
+        prompt, max_seq = 8, 16
+        shape_s = ShapeConfig("toy", max_seq, gb_s, "decode")
+        params = rt.init_params(jax.random.PRNGKey(0))
+        caches = jax.tree.map(
+            lambda s: jax.device_put(jnp.zeros(s.shape, s.dtype),
+                                     s.sharding),
+            init_serve_caches(rt, shape_s, max_seq=max_seq),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        toks = jax.random.randint(jax.random.PRNGKey(7), (gb_s, prompt),
+                                  0, cfg.vocab)
+        prefill = make_serve_step(rt, shape_s, prompt_len=prompt,
+                                  max_seq=max_seq)
+        tok, caches = prefill(params, caches, {"tokens": toks,
+                                               "pos": jnp.int32(0)})
+        seqs = [np.asarray(tok)]
+        decode = make_serve_step(rt, shape_s, prompt_len=1,
+                                 max_seq=max_seq)
+        cur = tok[:, None]
+        for i in range(2):
+            cur, caches = decode(params, caches,
+                                 {"tokens": cur,
+                                  "pos": jnp.int32(prompt + i)})
+            seqs.append(np.asarray(cur))
+            cur = cur[:, None]
+        toks_out[mode] = np.stack(seqs, 1)
+    assert np.array_equal(toks_out["flat"], toks_out["none"]), (
+        toks_out["flat"][:2], toks_out["none"][:2])
+    print(f"  serve: {toks_out['flat'].shape} tokens bit-identical")
+    print(f"CASE_OK flat_parity {arch}")
+
+
+CASES["flat_parity"] = case_flat_parity
+
+
+def case_flat_int8(arch: str = "llama3.2-1b"):
+    """grad_compress="int8" through the FLAT reduce (one int32
+    psum_scatter + segment-wide shared scale + error feedback): grads
+    must track the fp32 path closely and stay finite."""
+    mod = M.get_arch(arch)
+    cfg, rc0 = mod.reduced()
+    # microbatches=4, unit=2 -> 2 reduce units per slot: the second unit's
+    # quantization sees the first's error feedback re-injected.
+    rc0 = dataclasses.replace(rc0, microbatches=4, unit=2)
+    geo = M.build_geometry(cfg, rc0)
+    data = max(1, int(N_DEV) // geo.model_ranks)
+    mesh = _mesh(data, geo.model_ranks)
+    gb = data * rc0.groups * rc0.microbatches
+    seq = 16
+    batch = _batch(cfg, gb, seq)
+
+    grads = {}
+    for compress, mode in (("none", "flat"), ("int8", "flat"),
+                           ("int8", "none")):
+        rc = dataclasses.replace(rc0, grad_compress=compress,
+                                 coalesce=mode)
+        rt = Runtime(cfg, rc, mesh)
+        assert (rt.flat_layouts["main"] is not None) == (mode == "flat")
+        params = rt.init_params(jax.random.PRNGKey(0))
+        step = make_train_step(rt, ShapeConfig("toy", seq, gb, "train"))
+        g, m = step(params, batch)
+        grads[(compress, mode)] = jax.device_get(g)
+        assert np.isfinite(float(m["loss_sum"]))
+
+    flat_f = jax.tree_util.tree_flatten_with_path(
+        grads[("none", "flat")])[0]
+    gmax = max(np.abs(np.asarray(v, np.float32)).max()
+               for _, v in flat_f)
+    for key in (("int8", "flat"), ("int8", "none")):
+        flat_q = dict(jax.tree_util.tree_flatten_with_path(grads[key])[0])
+        worst = (0.0, None)
+        for kp, vf in flat_f:
+            vq = np.asarray(flat_q[kp], np.float32)
+            vf = np.asarray(vf, np.float32)
+            assert np.isfinite(vq).all(), kp
+            # int8 quantization error is bounded by the shared scale;
+            # normalize by the global grad magnitude, not per-tensor.
+            err = np.abs(vq - vf).max() / gmax
+            if err > worst[0]:
+                worst = (err, jax.tree_util.keystr(kp))
+        assert worst[0] < 0.02, f"int8 {key[1]} reduce too lossy: {worst}"
+        print(f"  int8({key[1]})-vs-fp32 worst err {worst[0]:.2e} "
+              f"(of global max |g|={gmax:.2e}) at {worst[1]}")
+    print(f"CASE_OK flat_int8 {arch}")
+
+
+CASES["flat_int8"] = case_flat_int8
+
+
+def case_flat_fallback(arch: str = "llama3.2-1b"):
+    """Mixed divisibility: tensors the flat layout cannot cover
+    (non-divisible -> replicated) must fall back to the per-tensor path,
+    bit-identically, including an ld != 0 tensor in the flat pack."""
+    from repro.core import fsdp as F
+    from repro.models.common import ParamSpec
+    from jax.sharding import PartitionSpec as P
+
+    D = 4
+    mesh = _mesh(D, 2)
+    specs = {
+        "a": ParamSpec((8, 16), fsdp_dim=0),    # divisible on dim 0
+        "b": ParamSpec((16, 12), fsdp_dim=1),   # divisible on dim 1 (ld=1)
+        "c": ParamSpec((6, 5), fsdp_dim=0),     # 6 % 4 != 0 -> replicated
+    }
+    gatherable = sorted(n for n in specs
+                        if F.local_dim(specs[n], D, False) is not None)
+    assert gatherable == ["a", "b"] and "c" not in gatherable
+    fl = F.build_flat_layout(specs, gatherable, D, False)
+    assert fl is not None and fl.full_size == 8 * 16 + 16 * 12
+    assert fl.entries[1].ld == 1  # the moveaxis path is exercised
+
+    V = 2
+    key = jax.random.PRNGKey(0)
+    full = {n: jax.random.normal(jax.random.fold_in(key, i),
+                                 (V, *specs[n].shape), jnp.float32)
+            for i, n in enumerate(sorted(specs))}
+
+    def shard_spec(n):
+        sp = specs[n]
+        dims = [None] * (1 + len(sp.shape))
+        if F.local_dim(sp, D, False) is not None:
+            dims[1 + sp.fsdp_dim] = "data"
+        return P(*dims)
+
+    in_specs = ({n: shard_spec(n) for n in specs},)
+
+    def body_gather(seg_p):
+        # per-tensor reference
+        ref = {}
+        for n in gatherable:
+            ld = F.local_dim(specs[n], D, False)
+            ref[n] = jax.lax.all_gather(seg_p[n][0], "data", axis=ld,
+                                        tiled=True)
+        # flat path: pack -> ONE all_gather -> unpack
+        slab = F.pack_flat_stack(seg_p, fl)
+        got = F.unpack_flat(F.all_gather_flat(slab[0], fl), fl)
+        return ref, got
+
+    out_specs = ({n: P() for n in gatherable}, {n: P() for n in gatherable})
+    fg = F.shard_map(body_gather, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)
+    ref, got = jax.jit(fg)(full)
+    for n in gatherable:
+        assert np.array_equal(np.asarray(ref[n]), np.asarray(got[n])), n
+        assert np.array_equal(np.asarray(got[n]),
+                              np.asarray(full[n][0])), n
+
+    def body_reduce(seg_p):
+        grads = {n: seg_p[n][0] if F.local_dim(specs[n], D, False) is None
+                 else jax.lax.all_gather(
+                     seg_p[n][0], "data",
+                     axis=F.local_dim(specs[n], D, False), tiled=True)
+                 for n in specs}
+        ref = {n: F.reduce_scatter_grad(grads[n], specs[n], D, False)
+               for n in specs}
+        got = F.reduce_scatter_flat(
+            {n: grads[n] for n in gatherable}, fl, jnp.float32)
+        got["c"] = F.reduce_scatter_grad(grads["c"], specs["c"], D, False)
+        return ref, got
+
+    def red_spec(n):
+        sp = specs[n]
+        dims = [None] * len(sp.shape)
+        if F.local_dim(sp, D, False) is not None:
+            dims[sp.fsdp_dim] = "data"
+        return P(*dims)
+
+    out_specs_r = ({n: red_spec(n) for n in specs},
+                   {n: red_spec(n) for n in specs})
+    fr = F.shard_map(body_reduce, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs_r, check_vma=False)
+    ref_r, got_r = jax.jit(fr)(full)
+    for n in specs:
+        assert np.array_equal(np.asarray(ref_r[n]),
+                              np.asarray(got_r[n])), n
+    print(f"  gather+reduce bit-identical; flat covers {gatherable}, "
+          f"'c' replicated fallback (ld=1 moveaxis path exercised)")
+
+    # engine-level: a data axis dividing nothing -> empty flat layout,
+    # the pipeline must run the gather-free path and still match the
+    # reference grads.
+    case_train_equiv(arch, data=3, model=2)
+    mod = M.get_arch(arch)
+    cfg, rc = mod.reduced()
+    rt = Runtime(cfg, dataclasses.replace(rc, microbatches=4, unit=2),
+                 _mesh(3, 2))
+    assert rt.flat_layouts["main"] is None and not rt.gatherable["main"]
+    print("  data=3: nothing divisible -> empty layout, grads still match")
+    print(f"CASE_OK flat_fallback {arch}")
+
+
+CASES["flat_fallback"] = case_flat_fallback
+
+
+def case_donation(arch: str = "llama3.2-1b"):
+    """Buffer-donation audit: the serve step donates its caches and the
+    opt step donates params + opt state — visible as input/output
+    aliasing in the lowered modules (no spurious full-size copies)."""
+    from repro.api import session
+
+    mod = M.get_arch(arch)
+    cfg, rc0 = mod.reduced()
+    geo = M.build_geometry(cfg, dataclasses.replace(rc0, microbatches=2))
+    data = max(1, int(N_DEV) // geo.model_ranks)
+
+    def n_donated(txt):
+        # donation lowers as an eager alias (tf.aliasing_output) or a
+        # deferred XLA decision (jax.buffer_donor) depending on shardings
+        return (txt.count("tf.aliasing_output")
+                + txt.count("jax.buffer_donor"))
+
+    sess = session(arch, mode="serve", data=data,
+                   global_batch=data * rc0.groups * 2, max_seq=16,
+                   overrides=dict(microbatches=2))
+    n_alias = n_donated(sess.lower().as_text())
+    n_caches = len(jax.tree_util.tree_leaves(
+        sess.init_caches(abstract=True)))
+    assert n_alias >= n_caches, (
+        f"serve step donates {n_alias} buffers < {n_caches} cache leaves")
+
+    tr = session(arch, data=data, seq_len=16,
+                 overrides=dict(microbatches=2))
+    params = tr.init_params(jax.random.PRNGKey(0))
+    opt = tr.init_opt_state(params)
+    g_shapes = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    lo = tr.opt_step_fn().lower(params, g_shapes, opt)
+    n_alias_o = n_donated(lo.as_text())
+    n_p = len(jax.tree_util.tree_leaves(params))
+    assert n_alias_o >= n_p, (
+        f"opt step donates {n_alias_o} buffers < {n_p} param leaves")
+
+    d = tr.describe()
+    assert d["donation"]["opt_step"] == ["params", "opt_state"]
+    assert d["donation"]["serve_step"] == ["caches"]
+    # and the update still actually runs + callers' rebind pattern works
+    grads, _ = tr.train_step(params, tr.stream().batch(0))
+    params, opt, om = tr.opt_step(params, grads, opt)
+    assert np.isfinite(float(om["grad_norm"]))
+    print(f"  serve aliases {n_alias}/{n_caches} cache leaves, "
+          f"opt aliases {n_alias_o} (>= {n_p} params)")
+    print(f"CASE_OK donation {arch}")
+
+
+CASES["donation"] = case_donation
+
+
 CASES["prefetch_equiv"] = case_prefetch_equiv
 CASES["int8_grads"] = case_int8_grads
 CASES["elastic_reshard"] = case_elastic_reshard

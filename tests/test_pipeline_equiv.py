@@ -109,6 +109,34 @@ def test_gather_prefetch_is_numerically_neutral():
 
 
 @pytest.mark.slow
+def test_flat_coalesce_bitwise_parity():
+    """coalesce="flat" (ONE all-gather / reduce-scatter per tick) must be
+    bit-identical to per-tensor collectives: train grads + serve tokens."""
+    _run("flat_parity", "llama3.2-1b")
+
+
+@pytest.mark.slow
+def test_flat_int8_error_feedback_reduce():
+    """grad_compress="int8" through the flat reduce: one int32
+    psum_scatter with a segment-wide shared scale + error feedback."""
+    _run("flat_int8", "llama3.2-1b")
+
+
+@pytest.mark.slow
+def test_flat_fallback_mixed_divisibility():
+    """Replicated (non-divisible) tensors fall back to per-tensor
+    collectives bit-identically, incl. an ld != 0 flat-pack member."""
+    _run("flat_fallback", "llama3.2-1b")
+
+
+@pytest.mark.slow
+def test_buffer_donation_audit():
+    """Serve step donates caches, opt step donates params + opt state —
+    input/output aliasing visible in the lowered modules."""
+    _run("donation", "llama3.2-1b")
+
+
+@pytest.mark.slow
 def test_int8_grad_reduction():
     _run("int8_grads", "llama3.2-1b")
 

@@ -89,10 +89,13 @@ def test_autogen_tables_are_full_depth():
 
 
 def test_plan_bundles_table_and_packed():
+    import dataclasses
+
     sp = SchedParams(P=4, V=2, n_mb=8, unit=4)
     plan = SchedulePlan.build("zeropp", sp)
     assert plan.packed.T == plan.table.T
     assert plan.packed.U == plan.table.unit
+    assert plan.packed.prefetch == 0
     assert plan.has_w
     # packed kind grid mirrors the table cells
     for t, r, task in plan.table.tasks():
@@ -102,8 +105,16 @@ def test_plan_bundles_table_and_packed():
     a1 = plan.analyze(CM, preset="abstract")
     a2 = plan.analyze(CM, preset="abstract")
     assert a1 is a2
-    assert a1.makespan == pytest.approx(simulate(plan.table, CM).makespan)
+    # prefetch=0 plans gather at use time: simulated blocking
+    cm_block = dataclasses.replace(CM, overlap_comm=False)
+    assert a1.makespan == pytest.approx(
+        simulate(plan.table, cm_block).makespan)
     assert a1.gathers_per_rank == a1.n_gather / plan.table.P
+    # prefetch>=1 overlaps the gathers: never slower than blocking
+    a_pf = plan.with_prefetch(1).analyze(CM, preset="abstract")
+    assert a_pf.prefetch == 1
+    assert a_pf.makespan <= a1.makespan + 1e-12
+    assert a_pf.makespan == pytest.approx(simulate(plan.table, CM).makespan)
 
 
 def test_plan_with_prefetch_repacks():
@@ -127,6 +138,35 @@ def test_preset_cost_models():
     fused = fused_cost_model(CM)
     assert fused.t_b == CM.t_b + CM.t_w and fused.t_w == 0.0
     assert fused.m_wstash == 0.0
+
+
+def test_preset_alpha_beta_collective_costs():
+    """Gather/reduce ticks are costed α·n_coll + β·bytes: per-tensor
+    collectives (coalesce='none') pay the launch latency #tensors times,
+    the flat layout once — and only the α term differs."""
+    from repro.core.plan import COLLECTIVE_ALPHA_BETA
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(name="t", n_layers=8, d_model=256, n_heads=4,
+                      n_kv_heads=4, d_ff=1024, vocab=1024)
+    kw = dict(P=4, V=2, seq=128, mbs=1, dp=8)
+    flat = preset_cost_model("a800", cfg, **kw, n_coll_gather=1)
+    per_t = preset_cost_model("a800", cfg, **kw, n_coll_gather=12)
+    alpha, beta = COLLECTIVE_ALPHA_BETA["a800"]
+    assert per_t.t_gather - flat.t_gather == pytest.approx(11 * alpha)
+    assert flat.n_coll_gather == 1 and per_t.n_coll_gather == 12
+    assert flat.coll_alpha == alpha
+    # the bandwidth term is unchanged by coalescing
+    assert flat.t_gather - alpha == pytest.approx(
+        per_t.t_gather - 12 * alpha)
+    # and the α term propagates into the simulated makespan ranking
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=4)
+    plan_f = SchedulePlan.build("zeropp", sp)
+    plan_n = SchedulePlan.build("zeropp", sp)
+    mf = plan_f.analyze(flat, preset="a800").makespan
+    mn = plan_n.analyze(per_t, preset="a800").makespan
+    assert mf < mn  # latency-bound per-tensor ticks cost real makespan
+    assert plan_n.analyze(per_t, preset="a800").n_coll_gather == 12
 
 
 # --------------------------------------------------------------------------- #
