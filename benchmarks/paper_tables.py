@@ -198,7 +198,7 @@ def table2(P=4, V=2, B=16, D=4, L=32):
     return rows
 
 
-def autogen_bench(P=4, V=2, B=8):
+def autogen_bench(P=4, V=2, B=8, U=4):
     """§4 heuristic vs greedy W-fill, plus the full plan selection."""
     from repro.core.plan import PlanAnalysis, select_plan
 
@@ -217,6 +217,24 @@ def autogen_bench(P=4, V=2, B=8):
     rows.append(("autogen/after", res.makespan_after * 1e6,
                  f"insertions={res.n_insertions}"))
     rows.append(("autogen/greedy", greedy.makespan * 1e6, ""))
+
+    # unit-gated §4: W postponement confined to each unit's live window,
+    # so stash depth stays U and peak memory drops vs full-depth autogen
+    # (the makespan/memory trade-off select_plan ranks on).
+    sim_full = simulate(res.table, cm)
+    gated = autogen(SchedParams(P=P, V=V, n_mb=B, unit=U), cm,
+                    unit_gated=True)
+    sim_g = simulate(gated.table, cm)
+    print(f"  gated (U={U}):     {sim_g.makespan:.4f}s "
+          f"({gated.n_insertions} insertions, "
+          f"mem {sim_g.peak_mem / 1e9:.2f}GB vs "
+          f"{sim_full.peak_mem / 1e9:.2f}GB full-depth, "
+          f"rs_exposed {sim_g.rs_exposed * 1e6:.1f}us)")
+    rows.append(("autogen_gated/makespan", sim_g.makespan * 1e6,
+                 f"U={U} insertions={gated.n_insertions}"))
+    rows.append(("autogen_gated/peak_mem_gb", sim_g.peak_mem / 1e9,
+                 f"full_depth_gb={sim_full.peak_mem / 1e9:.3f}"))
+    rows.append(("autogen/peak_mem_gb", sim_full.peak_mem / 1e9, ""))
 
     # the schedule="auto" selection over every registered schedule,
     # costed with the same 6.2B A800 model — what a session would pick

@@ -12,12 +12,19 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+
+# anchor the default artifact to the repo root: a CWD-relative default
+# scattered the JSON wherever the harness happened to run from, so the
+# cross-PR bench trajectory never actually accumulated in the repo.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default="BENCH_pr4.json",
+    ap.add_argument("--json",
+                    default=os.path.join(_REPO_ROOT, "BENCH_pr5.json"),
                     help="machine-readable rows artifact ('' to skip)")
     args = ap.parse_args()
 

@@ -27,12 +27,21 @@ sess = session(
 d = sess.describe()
 sched = d["schedule"]
 
-print(f"candidates (simulated makespan, {preset} preset):")
-for name, span in sorted(sched["auto"]["candidates"].items(),
-                         key=lambda kv: (isinstance(kv[1], str), kv[1])):
+print(f"candidates (simulated makespan / peak mem / stash depth, "
+      f"{preset} preset):")
+for name, c in sorted(
+        sched["auto"]["candidates"].items(),
+        key=lambda kv: (isinstance(kv[1], str),
+                        kv[1]["makespan"] if isinstance(kv[1], dict)
+                        else kv[1])):
     mark = " <== selected" if name == sched["auto"]["selected"] else ""
-    span_s = f"{span:.3e}" if not isinstance(span, str) else span
-    print(f"  {name:12s} {span_s}{mark}")
+    if isinstance(c, dict):
+        span_s = (f"{c['makespan']:.3e}  mem={c['peak_mem']:.2e}  "
+                  f"U={c['stash_depth']}  "
+                  f"rs_saved={c['rs_overlap_saved']:.1e}")
+    else:
+        span_s = c
+    print(f"  {name:14s} {span_s}{mark}")
 
 print(f"\nselected plan: {sched['name']}  "
       f"(P={d['geometry']['pp']} V={d['geometry']['vpp']} "

@@ -53,10 +53,14 @@ def session(arch: str, *, mode: str = "train", shape=None, overrides=None,
     """Build a validated Session. See SessionSpec for every knob.
 
     ``schedule="auto"`` (or ``overrides=dict(schedule="auto")``) runs the
-    §4 plan selection: every registered schedule plus the autogen
-    heuristic is simulated under ``cost_preset`` ("a800" | "tpu_v5e") and
-    the minimum-makespan plan is what the session executes; the winner
-    (and every candidate's simulated makespan) shows in ``describe()``.
+    §4 plan selection: every registered schedule plus both autogen
+    heuristics (full-depth ``autogen`` and unit-gated ``autogen_gated``)
+    is simulated under ``cost_preset`` ("a800" | "tpu_v5e") and the
+    minimum-makespan plan is what the session executes; pass
+    ``mem_budget=<bytes>`` to cap the simulated peak memory (candidates
+    over budget lose to any that fits — the real memory/makespan
+    trade-off). The winner and every candidate's simulated
+    makespan/peak-mem/stash-depth show in ``describe()``.
     """
     spec = SessionSpec(arch=arch, mode=mode, shape=shape,
                        overrides=dict(overrides or {}), **kw)
@@ -234,11 +238,13 @@ class Session:
             self.cfg.name, rc.pp, seg.vpp, rc.groups, rc.microbatches,
             rc.unit_size, rc.gather_prefetch, seq, mbs, dp,
             self.spec.pods or 1, preset, rc.coalesce,
+            self.spec.mem_budget,
         )
         return select_plan(
             rc.pp, seg.vpp, rc.microbatches, rc.unit_size,
             self._cost_model(seg.vpp), preset=preset,
-            prefetch=rc.gather_prefetch, cache_key=cache_key)
+            prefetch=rc.gather_prefetch, cache_key=cache_key,
+            mem_budget=self.spec.mem_budget)
 
     # ------------------------------------------------------------------ #
     # Parameters / optimizer
@@ -559,6 +565,17 @@ class Session:
             "reduces": ana.n_reduce,
             "comm_frac": ana.comm_frac,
             "prefetch": rc.gather_prefetch,
+            # unit-gated executor buffers: the stash depth this plan's
+            # tables actually claim (U for zeropp/autogen_gated, n_mb
+            # for full-depth schedules).
+            "stash_depth": plan.table.unit,
+            # reduce-scatter overlap accounting: exposed = critical-path
+            # reduce time; saved = the worst rank's reduce time hidden
+            # under the next unit's B/W compute.
+            "rs_overlap": {
+                "exposed_s": ana.rs_exposed,
+                "saved_s": ana.rs_overlap_saved,
+            },
             # α–β collective profile: per-tick counts under the session's
             # coalesce mode, with the calibrated preset constants.
             "collectives": {
@@ -573,9 +590,16 @@ class Session:
             sel = self.plan_selection
             sched["auto"] = {
                 "selected": sel.selected.name,
+                "mem_budget": sel.mem_budget,
+                # per-candidate memory/makespan trade-off: stash depth,
+                # simulated peak memory and reduce-overlap savings ride
+                # along with the makespan each candidate was ranked on.
                 "candidates": {
-                    n: (a.makespan if isinstance(a, PlanAnalysis) else
-                        str(a))
+                    n: ({"makespan": a.makespan,
+                         "peak_mem": a.peak_mem,
+                         "stash_depth": a.stash_depth,
+                         "rs_overlap_saved": a.rs_overlap_saved}
+                        if isinstance(a, PlanAnalysis) else str(a))
                     for n, a in sel.candidates.items()},
             }
         return {

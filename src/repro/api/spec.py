@@ -44,6 +44,12 @@ class SessionSpec:
     # for overrides["schedule"].
     schedule: str | None = None
     cost_preset: str = "a800"       # simulator preset: a800 | tpu_v5e
+    # schedule="auto" memory cap (simulated peak bytes under the preset
+    # cost model): candidates over budget lose to any that fits — the
+    # knob that makes the unit-gated autogen (O(U) activation memory)
+    # win over full-depth candidates when the whole batch can't stay
+    # live. None ranks purely on makespan.
+    mem_budget: float | None = None
     # collective coalescing: "flat" (default via RunConfig) packs each
     # stage's gatherable params into one flat buffer so every FSDP
     # gather/reduce tick issues ONE collective; "none" is the per-tensor
@@ -125,6 +131,17 @@ class SessionSpec:
             raise SessionError(
                 f"unknown cost_preset {self.cost_preset!r}; known "
                 f"presets: {', '.join(sorted(PRESETS))}")
+        if self.mem_budget is not None:
+            if self.mem_budget <= 0:
+                raise SessionError(
+                    f"mem_budget must be a positive simulated-peak-memory "
+                    f"cap (bytes under the {self.cost_preset!r} preset), "
+                    f"got {self.mem_budget}")
+            if sched != "auto":
+                raise SessionError(
+                    "mem_budget only steers the schedule='auto' "
+                    "selection; pass schedule='auto' (or drop "
+                    "mem_budget)")
 
         if isinstance(self.shape, str) and self.shape not in SHAPES:
             raise SessionError(

@@ -67,6 +67,21 @@ def analyze(
             min(B, U) * L * M_a / P,
             n_allgather(B=B, L=L, V=V, U=U, P=P),
         )
+    if method == "fs-autogen":
+        # full-depth §4 auto-generation: W postponement crosses unit
+        # boundaries, so the whole batch's activations/(x,dy) stashes
+        # stay live — the O(B) bound the unit-gated variant closes.
+        a = analyze("fs-zeropp", L=L, P=P, V=V, B=B, U=B, D=D, M_w=M_w,
+                    M_a=M_a)
+        return MethodAnalysis(0.0, a.weight_mem, B * L * M_a / P,
+                              a.n_param_comm)
+    if method == "fs-autogen-gated":
+        # unit-gated §4: insertions confined to each unit's live window,
+        # so memory matches fs-zeropp's O(U) allocation; bubbles land
+        # between zero (U >= 2P-1) and the zeropp bound, where inside
+        # the window the heuristic fills what greedy W-fill leaves.
+        return analyze("fs-zeropp", L=L, P=P, V=V, B=B, U=U, D=D,
+                       M_w=M_w, M_a=M_a)
     raise ValueError(method)
 
 

@@ -24,7 +24,16 @@ import dataclasses
 import numpy as np
 
 from repro.core.generators import SchedParams, attach_fsdp_events, generate
-from repro.core.schedules import B, F, NOP, W, Task, TickTable, slot_of
+from repro.core.schedules import (
+    B,
+    F,
+    NOP,
+    W,
+    Task,
+    TickTable,
+    slot_of,
+    unit_stash_violations,
+)
 from repro.core.simulator import CostModel, SimResult, simulate
 
 
@@ -36,11 +45,15 @@ def orders_from_table(tt: TickTable) -> list[list[Task]]:
 
 
 def retick(orders: list[list[Task]], P: int, V: int, n_mb: int,
-           unit: int, assume_f: bool = False) -> TickTable:
+           unit: int, assume_f: bool = False,
+           unit_gated: bool = False) -> TickTable:
     """Quantize per-rank orders into the densest valid tick table.
 
     assume_f: treat all F tasks as already done (encoder-backward tables,
     whose forwards ran in a previous segment scan).
+    unit_gated: additionally reject (RuntimeError) any quantization whose
+    B→W / stash distances exceed the unit-depth buffers — the legality
+    gate the gated §4 insertion loop leans on to discard trial moves.
     """
     S = P * V
     pos = [0] * P
@@ -80,6 +93,11 @@ def retick(orders: list[list[Task]], P: int, V: int, n_mb: int,
     if done < total:
         raise RuntimeError("retick failed: invalid order")
     tt = TickTable(P=P, V=V, n_mb=n_mb, unit=unit, grid=grid)
+    if unit_gated:
+        bad = unit_stash_violations(tt)
+        if bad:
+            raise RuntimeError(
+                f"retick: order illegal at unit depth {unit}: {bad[0]}")
     attach_fsdp_events(tt)
     return tt
 
@@ -97,14 +115,30 @@ class AutogenResult:
     makespans: list[float] = dataclasses.field(default_factory=list)
 
 
-def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
-            ) -> AutogenResult:
+def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000, *,
+            unit_gated: bool = False) -> AutogenResult:
     """Run the §4 loop starting from the postponed-W fast-propagation
-    schedule."""
-    base = generate("zeropp_postpone", sp) if False else _postponed(sp)
+    schedule.
+
+    unit_gated=False (the registered ``"autogen"`` schedule) postpones W
+    across the whole step, so the result needs full-depth (n_mb) stash
+    buffers. unit_gated=True (``"autogen_gated"``) postpones W only to the
+    tail of its own §3.1 scheduling unit and constrains every insertion to
+    bubbles inside that unit's live window, so stash depth stays ``sp.U``
+    and the paper's O(U) activation-memory bound survives; each trial is
+    re-quantized with ``retick(unit_gated=True)``, whose stash-legality
+    gate rejects any move that would stretch a B→W distance past the
+    unit-depth buffers. Gated insertions also scan candidates first-in-
+    first-out (lowest task index first) instead of most-postponed-first,
+    preserving the per-(rank, stage-slot) W execution order of the greedy
+    zeropp table — which keeps gradient accumulation order, and therefore
+    bits, identical to the baseline schedule.
+    """
+    U = sp.U if unit_gated else sp.n_mb
+    base = _postponed(sp, per_unit=unit_gated)
     orders = orders_from_table(base)
     P, V = sp.P, sp.V
-    tt = retick(orders, P, V, sp.n_mb, sp.U)
+    tt = retick(orders, P, V, sp.n_mb, sp.U, unit_gated=unit_gated)
     res = simulate(tt, cm)
     t0 = res.makespan
     log = [f"init makespan {t0:.3f}"]
@@ -143,10 +177,19 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
         for gap, i, gap_start in cands:
             # find a postponed W of stage slot v_star on r_star whose B is
             # done before the gap and which currently sits *after* i.
-            for j in range(len(order) - 1, i, -1):
+            # Gated mode scans forward (FIFO: the earliest such W moves
+            # first, keeping per-slot W order) and only into bubbles of
+            # the W's own unit (per-rank unit blocks stay contiguous, so
+            # unit-depth stash reuse and per-unit reduce batching hold);
+            # full-depth mode keeps the original most-postponed-first scan.
+            j_range = (range(i + 1, len(order)) if unit_gated
+                       else range(len(order) - 1, i, -1))
+            for j in j_range:
                 tsk = order[j]
                 if tsk.kind != W or slot_of(tsk.stage, P) != v_star:
                     continue
+                if unit_gated and order[i].mb // U != tsk.mb // U:
+                    continue  # bubble outside this W's unit live window
                 bkey = (B, tsk.mb, tsk.stage)
                 if bkey not in res.task_end or res.task_end[bkey] > gap_start:
                     continue
@@ -156,7 +199,8 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
                 trial_orders = [list(o) for o in orders]
                 trial_orders[r_star] = cand
                 try:
-                    trial_tt = retick(trial_orders, P, V, sp.n_mb, sp.U)
+                    trial_tt = retick(trial_orders, P, V, sp.n_mb, sp.U,
+                                      unit_gated=unit_gated)
                 except RuntimeError:
                     continue
                 trial_res = simulate(trial_tt, cm)
@@ -182,12 +226,29 @@ def autogen(sp: SchedParams, cm: CostModel, max_iters: int = 2000
                          makespans=history)
 
 
-def _postponed(sp: SchedParams) -> TickTable:
-    """F/B fast-propagation with all W postponed to the tail (§4 step 1)."""
+def _postponed(sp: SchedParams, per_unit: bool = False) -> TickTable:
+    """F/B fast-propagation with W postponed to the tail (§4 step 1).
+
+    per_unit=False: every W moves to the very end of its rank's order
+    (the paper's full-depth starting point). per_unit=True: each W only
+    moves to the tail of its own scheduling unit's block, so unit blocks
+    stay contiguous per rank and unit-depth stash reuse stays legal.
+    """
     tt = generate("zeropp", sp)
     orders = orders_from_table(tt)
+    U = sp.U
     for r in range(len(orders)):
-        fb = [t for t in orders[r] if t.kind != W]
-        ws = [t for t in orders[r] if t.kind == W]
-        orders[r] = fb + ws
-    return retick(orders, sp.P, sp.V, sp.n_mb, sp.U)
+        if per_unit:
+            n_units = -(-sp.n_mb // U)
+            blocks: list[Task] = []
+            for n in range(n_units):
+                blk = [t for t in orders[r] if t.mb // U == n]
+                blocks += [t for t in blk if t.kind != W]
+                blocks += [t for t in blk if t.kind == W]
+            orders[r] = blocks
+        else:
+            fb = [t for t in orders[r] if t.kind != W]
+            ws = [t for t in orders[r] if t.kind == W]
+            orders[r] = fb + ws
+    return retick(orders, sp.P, sp.V, sp.n_mb, sp.U,
+                  unit_gated=per_unit)

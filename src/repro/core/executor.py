@@ -108,6 +108,38 @@ def make_tok_slice(g_rank, Btot: int, mbs: int) -> Callable:
 _FLAT = "__flat__"  # gbuf key of the coalesced flat segment
 
 
+def validate_unit_stash_packed(pt: PackedTable) -> None:
+    """Reject packed tables whose task spacing exceeds the U-deep buffers.
+
+    The engine's ``fstash``/``wx``/``wdy``/``xbuf``/``bbuf`` carries are
+    ``pt.U`` deep and indexed by ``mb % U``, so micro-batch ``u + U``
+    overwrites ``u``'s slot; a table where a postponed W (or a late B)
+    outlives its slot would silently replay the *wrong* micro-batch's
+    stash. ``pack_table`` already gates TickTables; this re-checks the
+    packed arrays at the engine boundary — with the SAME window rules
+    (``schedules.stash_window_violations``) — so an injected PackedTable
+    can never scan with an illegal stash depth. (Cheap: one pass over
+    the [T, Pe] grids at trace time.)
+    """
+    from repro.core.schedules import stash_window_violations
+
+    U, n_mb = pt.U, pt.n_mb
+    if not (0 < U < n_mb):
+        return
+    tick: dict[tuple, int] = {}
+    for t in range(pt.T):
+        for r in range(pt.Pe):
+            k = int(pt.kind[t, r])
+            if k:
+                s = int(pt.v[t, r]) * pt.Pe + r
+                tick[(k, int(pt.mb[t, r]), s)] = t
+    bad = stash_window_violations(tick, U, n_mb, pt.Pe * pt.V)
+    if bad:
+        raise ValueError(
+            f"packed table illegal at unit depth U={U}: "
+            f"{len(bad)} stash violation(s), first: {bad[0]}")
+
+
 @dataclasses.dataclass
 class TickEngine:
     """Scans one PackedTable with the shared gather/reduce/wire plumbing.
@@ -142,6 +174,12 @@ class TickEngine:
     flat: Any = None        # FlatLayout | None (coalesced collectives)
     seg_flat: Any = None    # [V, local_size] pre-packed local slabs
     grad_compress: str = "none"   # none | int8 (error-feedback reduce)
+
+    def __post_init__(self):
+        # Unit-gated tables (stash depth U < n_mb) are only runnable when
+        # every stash/wire slot is read before its mb+U overwrite lands.
+        if self.backward:
+            validate_unit_stash_packed(self.pt)
 
     # ------------------------------------------------------------------ #
     def stage_params(self, v, use_slot, gbuf):
@@ -252,6 +290,17 @@ class TickEngine:
         gradient; replicated/EP leftovers keep their per-tensor reduces.
         ``grad_compress="int8"`` routes the gatherable set through the
         error-feedback int8 path (``c["gerr"]`` carries the feedback).
+
+        Overlap safety: the plan places each reduce at its unit's last-W
+        tick, and the scattered shard is only consumed after the scan (by
+        the optimizer step), never by a later tick — so XLA is free to
+        run the collective asynchronously under the next unit's B/W
+        compute. The simulator models exactly this window (a tail
+        reduce-scatter overlapping the following unit; see
+        ``core/simulator.py``), and it is sound even if a next-unit B
+        accumulates into ``acc_full`` before this tick's scatter drains
+        it: reduce-scatter is linear and every contribution passes
+        through exactly one scatter, so the per-shard sum is unchanged.
         """
         rv = row["reduce_v"]
         rs_dt = jnp.dtype(self.rs_dtype)

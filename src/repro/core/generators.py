@@ -301,12 +301,30 @@ def _gen_autogen(sp: SchedParams) -> TickTable:
 
     W postponement crosses unit boundaries, so the table keeps the whole
     batch live (unit = n_mb) — unit-depth stash buffers would be
-    overwritten before the postponed W tasks replay them.
+    overwritten before the postponed W tasks replay them. The
+    ``"autogen_gated"`` sibling below keeps the §3.1 unit gating instead.
     """
     from repro.core.autogen import autogen
     from repro.core.simulator import CostModel
 
     return autogen(dataclasses.replace(sp, unit=sp.n_mb), CostModel()).table
+
+
+@register_schedule("autogen_gated")
+def _gen_autogen_gated(sp: SchedParams) -> TickTable:
+    """Unit-gated §4 auto-generation under the abstract unit-cost model.
+
+    Same bubble-filling loop as ``"autogen"``, but W passes are postponed
+    only inside their own scheduling unit's live window and every
+    insertion is checked against the unit-depth stash (B→W distance ≤ U),
+    so the table keeps ``unit = sp.U`` and the paper's O(U) activation-
+    memory bound — the trade the full-depth variant forfeits. With
+    ``unit >= n_mb`` this degenerates to the full-depth search space.
+    """
+    from repro.core.autogen import autogen
+    from repro.core.simulator import CostModel
+
+    return autogen(sp, CostModel(), unit_gated=True).table
 
 
 # --------------------------------------------------------------------------- #

@@ -10,10 +10,13 @@ core/executor.py). ``SchedulePlan`` makes that structural: it bundles
   * per-preset ``PlanAnalysis`` (simulated makespan, bubble fraction,
     peak memory, collective counts).
 
-``select_plan`` runs the §4 selection: every registered schedule (plus the
-§4 autogen heuristic) is built for the same (P, V, B, U), simulated under
+``select_plan`` runs the §4 selection: every registered schedule (plus
+both §4 autogen heuristics — full-depth ``autogen`` and the unit-gated
+``autogen_gated``) is built for the same (P, V, B, U), simulated under
 a hardware cost preset (A800 = paper testbed, TPU v5e = our target), and
-the minimum-makespan plan wins. Selections are cached per
+the minimum-makespan plan wins — optionally under a ``mem_budget`` peak-
+memory cap, which is what makes the gated/full choice a real
+memory/makespan trade-off. Selections are cached per
 (arch × shape × mesh) key so repeated sessions pay once.
 """
 
@@ -76,6 +79,17 @@ class PackedTable:
 
 
 def pack_table(tt: TickTable, prefetch: int = 0) -> PackedTable:
+    # unit-gated stash legality: packed arrays drive U-deep executor
+    # buffers, so a W-bearing table claiming unit < n_mb must fit the
+    # stash-reuse window (B→W distance ≤ unit depth) before it can scan.
+    if 0 < tt.unit < tt.n_mb:
+        from repro.core.schedules import unit_stash_violations
+
+        bad = unit_stash_violations(tt)
+        if bad:
+            raise ValueError(
+                f"cannot pack table at unit depth {tt.unit}: "
+                f"{len(bad)} stash violation(s), first: {bad[0]}")
     arr = to_arrays(tt)
     T, Pe = arr["kind"].shape
     V = tt.V
@@ -172,11 +186,14 @@ def strip_fwd(tt: TickTable) -> TickTable:
 
 # Schedules whose tables gate micro-batches into §3.1 scheduling units —
 # their buffers only need unit depth. Everything else keeps the whole
-# batch live (unit = n_mb); notably the §4 "autogen" schedule postpones
-# W tasks across unit boundaries, which is incompatible with unit-depth
-# stash reuse, so it always runs full-depth. Custom unit-gated schedules
-# register here.
-UNIT_GATED_SCHEDULES = {"zeropp"}
+# batch live (unit = n_mb); notably the full-depth §4 "autogen" schedule
+# postpones W tasks across unit boundaries, which is incompatible with
+# unit-depth stash reuse. Its "autogen_gated" sibling constrains the §4
+# insertion loop to each unit's live window (B→W distance ≤ U, enforced
+# by the stash-legality gate in retick/pack_table), so it keeps the
+# requested unit depth and the O(U) activation bound. Custom unit-gated
+# schedules register here.
+UNIT_GATED_SCHEDULES = {"zeropp", "autogen_gated"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,6 +212,11 @@ class PlanAnalysis:
     coll_alpha: float = 0.0      # per-collective latency of the cost model
     n_coll_gather: int = 1       # collectives per gather tick (1 = flat)
     n_coll_reduce: int = 1
+    stash_depth: int = 0         # unit depth the executor buffers need
+    #                              (U for unit-gated tables, n_mb else)
+    rs_exposed: float = 0.0      # reduce-scatter time on the critical path
+    rs_overlap_saved: float = 0.0  # worst rank's reduce time hidden under
+    #                                the next unit's B/W compute
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -269,6 +291,16 @@ class SchedulePlan:
             cm_eff = (cm if self.prefetch > 0 else
                       dataclasses.replace(cm, overlap_comm=False))
             res = simulate(self.table, cm_eff)
+            # reduce-scatter overlap accounting: the worst rank's total
+            # reduce time is what fully-serial charging would add to it;
+            # whatever the simulator did not expose on the critical path
+            # overlapped the next unit's B/W compute.
+            if self.table.reduce is not None and cm_eff.t_reduce > 0:
+                rs_total = float(
+                    (self.table.reduce >= 0).sum(axis=0).max()
+                    * cm_eff.t_reduce)
+            else:
+                rs_total = 0.0
             self.analyses[key] = PlanAnalysis(
                 preset=preset,
                 makespan=res.makespan,
@@ -283,6 +315,9 @@ class SchedulePlan:
                 coll_alpha=cm.coll_alpha,
                 n_coll_gather=cm.n_coll_gather,
                 n_coll_reduce=cm.n_coll_reduce,
+                stash_depth=self.table.unit,
+                rs_exposed=res.rs_exposed,
+                rs_overlap_saved=max(0.0, rs_total - res.rs_exposed),
             )
         return self.analyses[key]
 
@@ -373,6 +408,7 @@ class PlanSelection:
     preset: str
     candidates: dict    # name -> PlanAnalysis | "failed: ..." str
     key: tuple | None = None
+    mem_budget: float | None = None   # peak-mem cap the ranking honoured
 
     def ranking(self) -> list[tuple[str, float]]:
         ok = [(n, a.makespan) for n, a in self.candidates.items()
@@ -401,14 +437,24 @@ def candidate_schedules() -> list[str]:
 def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
                 preset: str = "abstract", prefetch: int = 0,
                 candidates: list[str] | None = None,
-                cache_key: tuple | None = None) -> PlanSelection:
+                cache_key: tuple | None = None,
+                mem_budget: float | None = None) -> PlanSelection:
     """Build + simulate every candidate schedule; the minimum simulated
     makespan wins (ties keep the earlier candidate). Unit-gated schedules
-    (UNIT_GATED_SCHEDULES, i.e. zeropp) use the requested unit; all
-    others — including autogen, whose postponed W passes cross unit
-    boundaries and therefore need full-depth stash buffers — keep the
-    whole batch live (unit = n_mb). Fused-backward candidates are costed
-    with W folded into B so total work is identical across candidates."""
+    (UNIT_GATED_SCHEDULES: zeropp and the gated §4 heuristic
+    ``autogen_gated``) use the requested unit; all others — including
+    full-depth autogen, whose postponed W passes cross unit boundaries
+    and therefore need full-depth stash buffers — keep the whole batch
+    live (unit = n_mb). Fused-backward candidates are costed with W
+    folded into B so total work is identical across candidates.
+
+    ``mem_budget`` (same units as the cost model's memory terms — bytes
+    under the hardware presets) makes the ranking a real memory/makespan
+    trade-off: candidates whose simulated peak memory exceeds the budget
+    are ranked only among themselves if *nothing* fits (min peak memory
+    wins then), exactly how the paper picks "the best U that still fits
+    in HBM" — this is what lets the unit-gated autogen beat its
+    full-depth sibling when the whole batch does not fit."""
     if cache_key is not None and cache_key in _PLAN_CACHE:
         return _PLAN_CACHE[cache_key]
 
@@ -416,20 +462,23 @@ def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
         else candidate_schedules()
     cm_fused = fused_cost_model(cm)
     results: dict = {}
-    best: tuple[SchedulePlan, PlanAnalysis] | None = None
+    fits: tuple[SchedulePlan, PlanAnalysis] | None = None   # within budget
+    slim: tuple[SchedulePlan, PlanAnalysis] | None = None   # min peak_mem
     for name in names:
         sp = SchedParams(
             P=P, V=V, n_mb=n_mb,
             unit=(unit if name in UNIT_GATED_SCHEDULES else n_mb),
             split_bw=True)
         try:
-            if name == "autogen":
+            if name in ("autogen", "autogen_gated"):
                 # §4 heuristic profiles with the *preset* cost model, not
                 # the abstract default the registry builder would use.
                 from repro.core.autogen import autogen
 
-                plan = SchedulePlan.from_table(
-                    name, sp, autogen(sp, cm).table, prefetch=prefetch)
+                tt = autogen(sp, cm,
+                             unit_gated=(name == "autogen_gated")).table
+                plan = SchedulePlan.from_table(name, sp, tt,
+                                               prefetch=prefetch)
             else:
                 plan = SchedulePlan.build(name, sp, prefetch=prefetch)
         except Exception as e:  # noqa: BLE001 — skip broken candidates
@@ -437,14 +486,19 @@ def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
             continue
         ana = plan.analyze(cm if plan.has_w else cm_fused, preset=preset)
         results[name] = ana
-        if best is None or ana.makespan < best[1].makespan - 1e-12:
-            best = (plan, ana)
+        if mem_budget is None or ana.peak_mem <= mem_budget:
+            if fits is None or ana.makespan < fits[1].makespan - 1e-12:
+                fits = (plan, ana)
+        if slim is None or ana.peak_mem < slim[1].peak_mem - 1e-12:
+            slim = (plan, ana)
+    best = fits or slim
     if best is None:
         raise RuntimeError(
             f"no schedule candidate could be built for P={P} V={V} "
             f"n_mb={n_mb} unit={unit}: {results}")
     sel = PlanSelection(selected=best[0], analysis=best[1], preset=preset,
-                        candidates=results, key=cache_key)
+                        candidates=results, key=cache_key,
+                        mem_budget=mem_budget)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = sel
     return sel

@@ -95,6 +95,16 @@ class TickTable:
             if k == W:
                 assert start[(B, u, s)] <= t, f"W needs B u{u} s{s}"
 
+        # unit-depth stash legality: a split-backward table claiming
+        # ``unit < n_mb`` must actually be runnable on U-deep buffers
+        # (fused baselines may carry a nominal unit label; they are
+        # executed full-depth, so only W-bearing tables are gated here).
+        if has_w and 0 < self.unit < self.n_mb:
+            bad = unit_stash_violations(self)
+            assert not bad, (
+                f"table claims unit depth {self.unit} but violates the "
+                f"stash-reuse window ({len(bad)} violation(s)): {bad[0]}")
+
     # ------------------------------------------------------------------ #
     def render(self, max_ticks: int | None = None) -> str:
         """ASCII timeline (ranks × ticks)."""
@@ -140,6 +150,69 @@ class TickTable:
             span += hi - lo + 1
             idle += (hi - lo + 1) - len(ticks)
         return idle / max(span, 1)
+
+
+def unit_stash_violations(tt: "TickTable") -> list[str]:
+    """Unit-depth buffer legality: the reasons a table with ``unit < n_mb``
+    could NOT run on U-deep stash/wire buffers.
+
+    The executor (core/executor.py) holds every per-micro-batch buffer at
+    unit depth, indexed by ``mb % U``: ``fstash``/``wx``/``wdy`` (the F→B
+    activation and B→W (x, dy) stashes) and ``xbuf``/``bbuf`` (the wire
+    landing buffers). Micro-batch ``u + U`` therefore *overwrites* micro-
+    batch ``u``'s slot, so every reader of slot ``u % U`` must run before
+    the overwrite lands:
+
+      * ``W(u, s)`` before ``B(u+U, s)``   — the B→W (x, dy) stash; this
+        is the "B→W distance exceeds the unit-depth stash" check the §4
+        postponed-W tables used to violate;
+      * ``B(u, s)`` before ``F(u+U, s)``   — the F→B activation stash;
+      * ``F(u, s)`` no later than ``F(u+U, s-1)`` — the fwd wire buffer
+        (the overwriting activation lands one tick after its producer);
+      * ``B(u, s)`` no later than ``B(u+U, s+1)`` — the bwd wire buffer.
+
+    Pairwise-nearest checks suffice: together with the task dependencies
+    they order all same-slot occupants transitively. Returns a list of
+    human-readable violations (empty = legal at depth ``tt.unit``).
+
+    The same window rules gate packed tables at the engine boundary
+    (``core/executor.py:validate_unit_stash_packed``) through
+    ``stash_window_violations`` below, so the two layers cannot drift.
+    """
+    tick = {(task.kind, task.mb, task.stage): t
+            for t, _, task in tt.tasks()}
+    return stash_window_violations(tick, tt.unit, tt.n_mb, tt.P * tt.V)
+
+
+def stash_window_violations(tick: dict, U: int, n_mb: int, S: int,
+                            ) -> list[str]:
+    """The shared stash-window rule set over a (kind, mb, stage) → tick
+    map (see ``unit_stash_violations`` for the derivation)."""
+    if U <= 0 or U >= n_mb:
+        return []
+    out: list[str] = []
+
+    def _chk(a, b, strict, what):
+        ta, tb = tick.get(a), tick.get(b)
+        if ta is None or tb is None:
+            return
+        if (ta >= tb) if strict else (ta > tb):
+            out.append(
+                f"{what}: {KIND_NAMES[a[0]]}(u{a[1]},s{a[2]})@t{ta} vs "
+                f"{KIND_NAMES[b[0]]}(u{b[1]},s{b[2]})@t{tb} "
+                f"(unit depth {U})")
+
+    for u in range(n_mb - U):
+        for s in range(S):
+            _chk((W, u, s), (B, u + U, s), True, "B->W stash overwrite")
+            _chk((B, u, s), (F, u + U, s), True, "F->B stash overwrite")
+            if s > 0:
+                _chk((F, u, s), (F, u + U, s - 1), False,
+                     "fwd wire overwrite")
+            if s < S - 1:
+                _chk((B, u, s), (B, u + U, s + 1), False,
+                     "bwd wire overwrite")
+    return out
 
 
 def stage_of(rank: int, v: int, P: int) -> int:

@@ -56,29 +56,43 @@ class SimResult:
     task_start: dict          # (kind, mb, stage) -> start time
     task_end: dict
     comm_busy: np.ndarray     # [P]
+    rs_exposed: float = 0.0   # reduce-scatter time visible in the makespan
+    #                           (tail + any serial reduce charges); the
+    #                           hidden remainder overlapped B/W compute
 
     def throughput(self, samples_per_step: float) -> float:
         return samples_per_step / self.makespan
 
 
-def simulate(tt: TickTable, cm: CostModel) -> SimResult:
+def simulate(tt: TickTable, cm: CostModel, *,
+             _skip_mem: bool = False) -> SimResult:
     """List-scheduled execution: each rank runs its tasks in table order,
     starting each as soon as (a) the rank is free and (b) dependencies
-    (+ p2p) and any required parameter gather have completed."""
+    (+ p2p) and any required parameter gather have completed.
+
+    Reduce-scatters are issued when the task they are attached to (the
+    unit's last weight-grad) finishes. With ``overlap_comm`` they ride an
+    async per-rank reduce channel: a unit's tail reduce-scatter overlaps
+    the next unit's B/W compute and only its *exposed* part — whatever
+    outlives the last compute on the timeline — reaches the makespan
+    (``rs_exposed``). Without overlap (blocking gathers, prefetch-0
+    plans) each reduce charges its full α–β time serially on the rank.
+    """
     P, V, U = tt.P, tt.V, tt.unit
     S = P * V
     orders: list[list] = [[] for _ in range(P)]
-    gather_req: dict[tuple, int] = {}
     for t, r, task in tt.tasks():
         g = tt.gather[t, r] if tt.gather is not None else -1
-        orders[r].append((task, g))
+        red = tt.reduce is not None and tt.reduce[t, r] >= 0
+        orders[r].append((task, g, red))
 
     end: dict[tuple, float] = {}
     start: dict[tuple, float] = {}
     rank_free = np.zeros(P)
-    comm_free = np.zeros(P)   # per-rank collective channel
+    comm_free = np.zeros(P)   # per-rank gather channel
+    red_free = np.zeros(P)    # per-rank reduce-scatter channel
     comm_busy = np.zeros(P)
-    gather_done: dict[tuple, float] = {}  # (rank, idx) -> completion
+    reduce_end_max = 0.0
     n_gather = 0
 
     # iterate in rounds until all scheduled (tasks unlock across ranks)
@@ -91,7 +105,7 @@ def simulate(tt: TickTable, cm: CostModel) -> SimResult:
         progressed = False
         for r in range(P):
             while idx[r] < len(orders[r]):
-                task, g = orders[r][idx[r]]
+                task, g, red = orders[r][idx[r]]
                 key = (task.kind, task.mb, task.stage)
                 # dependency readiness
                 deps = []
@@ -128,6 +142,18 @@ def simulate(tt: TickTable, cm: CostModel) -> SimResult:
                 start[key] = s0
                 end[key] = e0
                 rank_free[r] = e0
+                # reduce-scatter attached to this tick (unit's last W):
+                # issued at task end; async channel when overlapped,
+                # serial rank time when blocking.
+                if red and cm.t_reduce > 0:
+                    if cm.overlap_comm:
+                        r_end = max(e0, red_free[r]) + cm.t_reduce
+                        red_free[r] = r_end
+                    else:
+                        r_end = e0 + cm.t_reduce
+                        rank_free[r] = r_end
+                    reduce_end_max = max(reduce_end_max, r_end)
+                comm_busy[r] += cm.t_reduce if red else 0.0
                 idx[r] += 1
                 done_ct += 1
                 progressed = True
@@ -135,18 +161,29 @@ def simulate(tt: TickTable, cm: CostModel) -> SimResult:
             # stuck: deadlock in table (shouldn't happen on valid tables)
             raise RuntimeError("simulator deadlock — invalid schedule order")
 
-    makespan = float(max(end.values()))
+    task_makespan = float(max(end.values()))
+    makespan = max(task_makespan, reduce_end_max)
     busy = np.zeros(P)
     for (k, u, s), e in end.items():
         busy[s % P] += cm.dur(k)
 
     n_reduce = int((tt.reduce >= 0).sum()) if tt.reduce is not None else 0
-    for r in range(P):
-        comm_busy[r] += cm.t_reduce * (
-            int((tt.reduce[:, r] >= 0).sum()) if tt.reduce is not None else 0
-        )
 
-    peak, peak_rank = _memory_trace(tt, cm, start, end)
+    # exposed reduce-scatter time: what the reduces actually add to the
+    # critical path (tail exposure under overlap; the serial charges are
+    # already folded into the task timeline when blocking, so compare
+    # against a reduce-free replay of the same table — timeline only,
+    # the replay's memory trace would be discarded).
+    rs_exposed = makespan - task_makespan
+    if not cm.overlap_comm and n_reduce and cm.t_reduce > 0:
+        rs_exposed = makespan - simulate(
+            tt, dataclasses.replace(cm, t_reduce=0.0),
+            _skip_mem=True).makespan
+
+    if _skip_mem:
+        peak, peak_rank = 0.0, np.zeros(P)
+    else:
+        peak, peak_rank = _memory_trace(tt, cm, start, end)
     return SimResult(
         makespan=makespan,
         busy=busy,
@@ -158,6 +195,7 @@ def simulate(tt: TickTable, cm: CostModel) -> SimResult:
         task_start=start,
         task_end=end,
         comm_busy=comm_busy,
+        rs_exposed=float(max(rs_exposed, 0.0)),
     )
 
 

@@ -170,9 +170,17 @@ def run_reduced_cell(arch: str, schedule: str | None, budget_s: float,
     print(f"plan: {d['schedule']['name']} "
           f"(preset={d['schedule']['preset']}, "
           f"bubble={d['schedule']['bubble_ratio']:.3f}, "
-          f"makespan={d['schedule']['makespan']:.3e})")
+          f"makespan={d['schedule']['makespan']:.3e}, "
+          f"stash_depth={d['schedule']['stash_depth']}, "
+          f"rs_saved={d['schedule']['rs_overlap']['saved_s']:.2e}s)")
     if "auto" in d["schedule"]:
-        print(f"auto candidates: {d['schedule']['auto']['candidates']}")
+        print("auto candidates (makespan / peak_mem / stash depth):")
+        for n, c in d["schedule"]["auto"]["candidates"].items():
+            if isinstance(c, dict):
+                print(f"  {n:14s} {c['makespan']:.3e}  "
+                      f"mem={c['peak_mem']:.2e}  U={c['stash_depth']}")
+            else:
+                print(f"  {n:14s} {c}")
 
     t0 = time.time()
     lowered = sess.lower()

@@ -145,7 +145,9 @@ class RunConfig:
     groups: int = 1              # pipeline groups sharing the model axis
     microbatches: int = 8        # B: micro-batches per pipeline per step
     unit: int = 0                # U: scheduling-unit size (0 -> B)
-    schedule: str = "zeropp"     # zeropp|gpipe|1f1b|interleaved|bfs
+    schedule: str = "zeropp"     # zeropp|gpipe|1f1b|interleaved|bfs|
+                                 # autogen|autogen_gated (§4; _gated keeps
+                                 # unit-depth stash buffers)
     fsdp: bool = True
     moe_mode: str = "gathered"   # gathered | ep
     remat: bool = True

@@ -292,12 +292,21 @@ class ServeEngine:
                         pending.append((r, off + c))
 
     def _decode_tick(self) -> None:
-        """One batched decode step over every active slot."""
+        """One batched decode step over every active slot.
+
+        Finished requests are skipped defensively: a request that
+        completed between the ``active`` snapshot and the emit (or whose
+        slot was released out-of-band) must not receive another token or
+        advance a slot that may already belong to a new request.
+        """
         n = self.pool.n_slots
         active = self.pool.active()
         toks = np.zeros((n, 1), np.int32)
         for s in active:
-            toks[s.index, 0] = self._by_slot[s.index].tokens[-1]
+            req = self._by_slot.get(s.index)
+            if req is None or req.done.is_set():
+                continue
+            toks[s.index, 0] = req.tokens[-1]
         batch = {"tokens": toks, "pos": self.pool.pos_vector(),
                  "slot_mask": self.pool.active_mask()}
         out, self.caches = self._step_batched(batch)
@@ -306,10 +315,18 @@ class ServeEngine:
         self.stats.occupancy = self.pool.occupancy
         out_np = np.asarray(out)
         for s in active:
+            req = self._by_slot.get(s.index)
+            if req is None or req.done.is_set():
+                continue
             s.pos += 1
-            self._emit(self._by_slot[s.index], int(out_np[s.index]))
+            self._emit(req, int(out_np[s.index]))
 
     def _emit(self, req: Request, tok: int) -> None:
+        if req.done.is_set() or req.slot is None:
+            # late emit on a finished request: its slot may already hold
+            # a different in-flight request — reading (or finishing)
+            # through self.pool.slots[req.slot] would corrupt that one.
+            return
         req.tokens.append(tok)
         req._stream.put(tok)
         self.stats.generated_tokens += 1
@@ -319,8 +336,13 @@ class ServeEngine:
             self._finish(req)
 
     def _finish(self, req: Request) -> None:
-        self._by_slot.pop(req.slot, None)
-        self.pool.release(req.slot)
+        if req.slot is not None:
+            self._by_slot.pop(req.slot, None)
+            self.pool.release(req.slot)
+            # the slot is free for reallocation from here on: drop the
+            # request's pointer so no late _emit/_decode_tick can read a
+            # reallocated slot's state through it.
+            req.slot = None
         self.stats.finished_requests += 1
         req.done.set()
         req._stream.put(_DONE)
@@ -338,5 +360,6 @@ class ServeEngine:
 def _fail_request(req: Request, e: BaseException) -> None:
     """Tear down one request's waiters with ``e``."""
     req.error = e
+    req.slot = None   # engine is dead: never dereference pool state again
     req.done.set()
     req._stream.put(_DONE)

@@ -24,9 +24,16 @@ from repro.serving.slots import SlotPool
 _ids = itertools.count()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request plus its in-flight state."""
+    """One generation request plus its in-flight state.
+
+    ``eq=False``: requests compare (and hash) by identity. The generated
+    ``__eq__`` would compare the numpy ``prompt`` field element-wise and
+    ``req in queue`` / ``queue.remove(req)`` would raise "truth value of
+    an array is ambiguous" as soon as two requests are queued — a request
+    handle is a unique in-flight object, never a value.
+    """
 
     prompt: np.ndarray              # int32 [prompt_len]
     max_gen: int = 16               # generated-token budget (incl. first)

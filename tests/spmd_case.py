@@ -924,6 +924,72 @@ def case_flat_parity(arch: str = "llama3.2-1b"):
 CASES["flat_parity"] = case_flat_parity
 
 
+def case_gated_autogen_parity(arch: str = "llama3.2-1b"):
+    """ISSUE-5 acceptance: the unit-gated §4 schedule must (a) actually
+    claim unit-depth stash buffers (U < n_mb), (b) produce BIT-IDENTICAL
+    gradients + metrics to the baseline zeropp schedule on the smoke
+    config (unit blocks stay contiguous and per-slot W order is FIFO, so
+    every accumulation and reduce-scatter batch is order-identical), and
+    (c) simulate strictly below full-depth autogen on peak memory."""
+    from repro.core.autogen import autogen
+    from repro.core.generators import SchedParams
+    from repro.core.simulator import CostModel, simulate
+
+    mod = M.get_arch(arch)
+    cfg, rc0 = mod.reduced()
+    rc0 = dataclasses.replace(rc0, microbatches=4, unit=2)
+    geo = M.build_geometry(cfg, rc0)
+    data = max(1, int(N_DEV) // geo.model_ranks)
+    mesh = _mesh(data, geo.model_ranks)
+    gb = data * rc0.groups * rc0.microbatches
+    seq = 16
+    batch = _batch(cfg, gb, seq)
+
+    outs = {}
+    for sched in ("zeropp", "autogen_gated"):
+        rc = dataclasses.replace(rc0, schedule=sched)
+        rt = Runtime(cfg, rc, mesh)
+        pt = rt.tables["main"]
+        assert pt.U == rc0.unit_size, (sched, pt.U)  # unit-depth stash
+        params = rt.init_params(jax.random.PRNGKey(0))
+        step = make_train_step(rt, ShapeConfig("toy", seq, gb, "train"))
+        grads, metrics = step(params, batch)
+        outs[sched] = (jax.device_get(grads), jax.device_get(metrics))
+
+    base_g = dict(jax.tree_util.tree_flatten_with_path(
+        outs["zeropp"][0])[0])
+    gated_g = jax.tree_util.tree_flatten_with_path(
+        outs["autogen_gated"][0])[0]
+    n_bad = 0
+    for kp, vg in gated_g:
+        if not np.array_equal(np.asarray(vg), np.asarray(base_g[kp])):
+            n_bad += 1
+            err = np.abs(np.asarray(vg, np.float64)
+                         - np.asarray(base_g[kp], np.float64)).max()
+            print(f"  MISMATCH {jax.tree_util.keystr(kp)}: {err:.3e}")
+    assert n_bad == 0, f"{n_bad}/{len(gated_g)} grads differ from zeropp"
+    for k in outs["zeropp"][1]:
+        assert np.array_equal(np.asarray(outs["zeropp"][1][k]),
+                              np.asarray(outs["autogen_gated"][1][k])), k
+    print(f"  {len(gated_g)} grad tensors bit-identical to zeropp")
+
+    # simulated peak activation memory: gated strictly below full-depth
+    sp = SchedParams(P=rc0.pp, V=rc0.vpp, n_mb=rc0.microbatches,
+                     unit=rc0.unit)
+    cm = CostModel()
+    sim_g = simulate(autogen(sp, cm, unit_gated=True).table, cm)
+    sim_f = simulate(autogen(
+        dataclasses.replace(sp, unit=sp.n_mb), cm).table, cm)
+    assert sim_g.peak_mem < sim_f.peak_mem, (sim_g.peak_mem,
+                                             sim_f.peak_mem)
+    print(f"  simulated peak mem: gated {sim_g.peak_mem:.2f} < "
+          f"full-depth {sim_f.peak_mem:.2f}")
+    print(f"CASE_OK gated_autogen_parity {arch}")
+
+
+CASES["gated_autogen_parity"] = case_gated_autogen_parity
+
+
 def case_flat_int8(arch: str = "llama3.2-1b"):
     """grad_compress="int8" through the FLAT reduce (one int32
     psum_scatter + segment-wide shared scale + error feedback): grads

@@ -151,6 +151,37 @@ def test_opt_config_rejects_unknown_keys():
         sess.opt_config()
 
 
+def test_mem_budget_steers_auto_selection():
+    """mem_budget is validated (auto-only, positive) and the selection
+    honours it: the winner's simulated peak memory fits the cap, and
+    describe() reports the per-candidate memory/makespan trade-off."""
+    with pytest.raises(SessionError, match="schedule='auto'"):
+        session("llama3.2-1b", mem_budget=1e9)
+    with pytest.raises(SessionError, match="positive"):
+        session("llama3.2-1b", schedule="auto", mem_budget=0)
+
+    sess = session("llama3.2-1b", schedule="auto",
+                   overrides=dict(microbatches=4, unit=2))
+    cands = {n: a for n, a in sess.plan_selection.candidates.items()
+             if not isinstance(a, str)}
+    assert "autogen_gated" in cands
+    assert cands["autogen_gated"].stash_depth == 2
+    assert cands["autogen"].stash_depth == 4
+    # cap below the biggest candidate: the winner must fit
+    mems = sorted(a.peak_mem for a in cands.values())
+    budget = (mems[0] + mems[-1]) / 2
+    sess_b = session("llama3.2-1b", schedule="auto", mem_budget=budget,
+                     overrides=dict(microbatches=4, unit=2))
+    assert sess_b.plan_selection.analysis.peak_mem <= budget
+    assert sess_b.plan_selection is not sess.plan_selection  # own cache
+    d = sess_b.describe()
+    assert d["schedule"]["auto"]["mem_budget"] == budget
+    c = d["schedule"]["auto"]["candidates"]["autogen_gated"]
+    assert set(c) == {"makespan", "peak_mem", "stash_depth",
+                      "rs_overlap_saved"}
+    assert "rs_overlap" in d["schedule"] and "stash_depth" in d["schedule"]
+
+
 # --------------------------------------------------------------------------- #
 # schedule="auto" (device-free selection + describe)
 # --------------------------------------------------------------------------- #

@@ -46,11 +46,21 @@ def test_train_equivalence(arch):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("schedule", ["bfs", "gpipe", "1f1b", "autogen"])
+@pytest.mark.parametrize("schedule", ["bfs", "gpipe", "1f1b", "autogen",
+                                      "autogen_gated"])
 def test_baseline_schedules_equivalence(schedule):
-    """Every baseline (and the §4 autogen table) runs through the same
+    """Every baseline (and both §4 autogen tables) runs through the same
     tick engine, exactly."""
     _run("train_equiv", "llama3.2-1b", f"schedule={schedule}")
+
+
+@pytest.mark.slow
+def test_gated_autogen_bitwise_parity_and_memory():
+    """ISSUE-5 acceptance: "autogen_gated" keeps unit-depth stash buffers,
+    its gradients are bit-identical to the zeropp baseline on the smoke
+    config, and its simulated peak memory is strictly below full-depth
+    autogen."""
+    _run("gated_autogen_parity", "llama3.2-1b")
 
 
 @pytest.mark.slow

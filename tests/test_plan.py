@@ -84,6 +84,122 @@ def test_autogen_tables_are_full_depth():
 
 
 # --------------------------------------------------------------------------- #
+# ISSUE-5: unit-gated autogen + stash legality + RS-overlap simulation
+# --------------------------------------------------------------------------- #
+
+
+@propcase(n_cases=8)
+def test_gated_autogen_keeps_unit_depth_and_validates(draw):
+    """"autogen_gated" keeps stash depth U (< n_mb), its insertions are
+    monotone like the full-depth loop, and the table passes the
+    unit-stash legality check in TickTable.validate()."""
+    from repro.core.schedules import unit_stash_violations
+
+    P = draw.choice([2, 3, 4])
+    V = draw.choice([1, 2])
+    n_units = draw.ints(2, 3)
+    U = draw.choice([1, 2]) * P
+    res = autogen(SchedParams(P=P, V=V, n_mb=U * n_units, unit=U), CM,
+                  unit_gated=True)
+    assert res.table.unit == U < res.table.n_mb
+    assert unit_stash_violations(res.table) == []
+    res.table.validate()
+    for a, b in zip(res.makespans, res.makespans[1:]):
+        assert b < a + 1e-12, res.makespans
+    # packs onto unit-depth executor buffers without tripping the gate
+    assert pack_table(res.table).U == U
+
+
+def test_stash_legality_rejects_full_depth_table_at_unit_depth():
+    """The B→W-distance gate: a full-depth §4 table mislabeled as
+    unit-gated must be rejected by validate(), pack_table() and the
+    engine-boundary check."""
+    import dataclasses as _dc
+
+    from repro.core.executor import validate_unit_stash_packed
+    from repro.core.schedules import unit_stash_violations
+
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=8)
+    tt = autogen(sp, CM).table      # full-depth postponed W
+    good = pack_table(tt)           # legal at its claimed (full) depth
+    tt.unit = 2                     # mislabel: claim unit-depth stash
+    assert unit_stash_violations(tt)
+    with pytest.raises(AssertionError, match="stash-reuse"):
+        tt.validate()
+    with pytest.raises(ValueError, match="stash violation"):
+        pack_table(tt)
+    bad = _dc.replace(good, U=2)
+    with pytest.raises(ValueError, match="unit depth"):
+        validate_unit_stash_packed(bad)
+
+
+def test_gated_autogen_peak_mem_strictly_below_full_depth():
+    """Acceptance bar: with U < n_mb, the gated table's simulated peak
+    activation memory is strictly below full-depth autogen's (the O(U)
+    vs O(B) bound), at a makespan cost select_plan can trade off."""
+    import dataclasses as _dc
+
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=2)
+    gated = simulate(autogen(sp, CM, unit_gated=True).table, CM)
+    full = simulate(autogen(_dc.replace(sp, unit=8), CM).table, CM)
+    assert gated.peak_mem < full.peak_mem
+
+
+def test_simulator_reduce_scatter_overlap():
+    """Overlapped reduce-scatters only expose what outlives the last
+    compute (a unit's tail reduce hides under the next unit's B/W);
+    blocking mode charges every reduce serially."""
+    import dataclasses as _dc
+
+    sp = SchedParams(P=4, V=2, n_mb=8, unit=4)
+    tt = generate("zeropp", sp)
+    n_red_worst = int((tt.reduce >= 0).sum(axis=0).max())
+    assert n_red_worst > 1
+    ov = simulate(tt, CM)
+    bl = simulate(tt, _dc.replace(CM, overlap_comm=False))
+    free = simulate(tt, _dc.replace(CM, t_reduce=0.0))
+    # overlap: some reduce time is hidden under later compute
+    assert ov.rs_exposed < n_red_worst * CM.t_reduce
+    assert ov.makespan - free.makespan == pytest.approx(ov.rs_exposed)
+    # blocking: reduces cost at least the overlap exposure, usually more
+    assert bl.makespan >= ov.makespan - 1e-12
+    assert bl.rs_exposed >= ov.rs_exposed - 1e-12
+    # and the analysis layer reports the split per candidate
+    plan = SchedulePlan.from_table("zeropp", sp, tt, prefetch=1)
+    ana = plan.analyze(CM, preset="abstract")
+    assert ana.stash_depth == 4
+    assert ana.rs_exposed == pytest.approx(ov.rs_exposed)
+    assert ana.rs_overlap_saved == pytest.approx(
+        n_red_worst * CM.t_reduce - ov.rs_exposed)
+
+
+def test_select_plan_ranks_gated_vs_full_on_memory_budget():
+    """The memory/makespan trade-off: an unconstrained selection may pick
+    a full-depth plan, but a budget below full-depth peak memory forces
+    the unit-depth candidates — and autogen_gated is one of them."""
+    sel = select_plan(4, 2, 8, 2, CM, preset="abstract",
+                      candidates=["autogen", "autogen_gated", "zeropp"])
+    a_full = sel.candidates["autogen"]
+    a_gate = sel.candidates["autogen_gated"]
+    assert isinstance(a_gate, PlanAnalysis)
+    assert a_gate.stash_depth == 2 and a_full.stash_depth == 8
+    assert a_gate.peak_mem < a_full.peak_mem
+    # budget between the two peaks: only unit-depth candidates fit
+    budget = (a_gate.peak_mem + a_full.peak_mem) / 2
+    sel_b = select_plan(4, 2, 8, 2, CM, preset="abstract",
+                        candidates=["autogen", "autogen_gated", "zeropp"],
+                        mem_budget=budget)
+    assert sel_b.analysis.peak_mem <= budget
+    assert sel_b.selected.name in ("autogen_gated", "zeropp")
+    assert sel_b.mem_budget == budget
+    # a budget nothing meets falls back to the min-memory candidate
+    sel_min = select_plan(4, 2, 8, 2, CM, preset="abstract",
+                          candidates=["autogen", "autogen_gated"],
+                          mem_budget=1e-9)
+    assert sel_min.selected.name == "autogen_gated"
+
+
+# --------------------------------------------------------------------------- #
 # SchedulePlan object
 # --------------------------------------------------------------------------- #
 

@@ -136,6 +136,32 @@ def test_table2_closed_forms():
     assert z.n_param_comm < f1.n_param_comm / 5
 
 
+def test_autogen_closed_forms_match_simulated_ordering():
+    """Table-2-style closed forms for the §4 family: gated act memory is
+    the O(U) fs-zeropp bound, full-depth is O(B) — and the simulator's
+    watermark agrees with the ordering (and the gated bound)."""
+    L, P, V, B_, U, D = 8, 4, 2, 8, 2, 1
+    full = analysis.analyze("fs-autogen", L=L, P=P, V=V, B=B_, U=U, D=D)
+    gated = analysis.analyze("fs-autogen-gated", L=L, P=P, V=V, B=B_,
+                             U=U, D=D)
+    assert gated.act_mem == analysis.analyze(
+        "fs-zeropp", L=L, P=P, V=V, B=B_, U=U, D=D).act_mem
+    assert gated.act_mem < full.act_mem
+    assert full.act_mem == B_ * L / P
+
+    sp = SchedParams(P=P, V=V, n_mb=B_, unit=U)
+    import dataclasses as _dc
+    sim_g = simulate(autogen(sp, CM, unit_gated=True).table, CM)
+    sim_f = simulate(autogen(_dc.replace(sp, unit=B_), CM).table, CM)
+    assert sim_g.peak_mem < sim_f.peak_mem
+    # simulated watermark obeys the gated closed-form bound (act+stash
+    # units per stage block, plus the 2-block gather buffer)
+    bound = analysis.zeropp_max_alloc(
+        L=P * V, P=P, D=1, V=V, B=B_, U=U,
+        M_w=CM.m_weight, M_a=CM.m_act + CM.m_wstash)
+    assert sim_g.peak_mem <= bound + 2 * CM.m_weight + 1e-9
+
+
 @propcase(n_cases=8)
 def test_simulator_invariants(draw):
     P = draw.choice([2, 4])

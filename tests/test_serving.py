@@ -130,6 +130,157 @@ def test_scheduler_policy_validation():
         SchedulerPolicy(max_prefills_per_tick=0)
 
 
+def test_scheduler_remove_with_multiple_queued():
+    """ISSUE-5 regression: Request carries a numpy prompt, so the
+    dataclass-generated __eq__ made ``req in queue`` raise "truth value
+    of an array is ambiguous" whenever >= 2 requests were queued;
+    requests now compare by identity (eq=False)."""
+    from repro.serving import RequestScheduler
+
+    sched = RequestScheduler()
+    r1, r2, r3 = _req(), _req(), _req()
+    for r in (r1, r2, r3):
+        sched.submit(r)
+    # crashed before the fix: r2 != r1 compares the numpy prompts
+    assert sched.remove(r2) is True
+    assert sched.n_queued == 2
+    assert sched.remove(r2) is False          # already gone
+    # an equal-valued but distinct request is NOT the queued one
+    assert sched.remove(_req()) is False
+    assert sched.n_queued == 2
+    assert [r.id for r in sched.drain()] == [r1.id, r3.id]
+
+
+def test_request_identity_semantics():
+    """eq=False: equality and hashing are by identity, so requests with
+    identical field values stay distinguishable in queues/dicts."""
+    a, b = _req(), _req()
+    assert a != b and a == a
+    assert len({a, b}) == 2
+
+
+# --------------------------------------------------------------------------- #
+# ServeEngine failure paths + finished-request guards (fake session,
+# no devices: the step fn is a numpy stub)
+# --------------------------------------------------------------------------- #
+
+
+class _FakeSession:
+    """Duck-typed stand-in for a serve Session: a deterministic numpy
+    step (token = 100*slot + per-slot call count) and no jax anywhere."""
+
+    def __init__(self, n_slots=2, max_seq=8):
+        import types
+
+        self.spec = types.SimpleNamespace(mode="serve", prefill_chunk=None)
+        self.cfg = types.SimpleNamespace(encdec=None)
+        seg = types.SimpleNamespace(kinds=("attn",))
+        self.geo = types.SimpleNamespace(segments=[seg])
+        self.max_slots = n_slots
+        self._seq = max_seq
+        self.calls = np.zeros(n_slots, np.int64)
+
+    def _max_seq(self):
+        return self._seq
+
+    def check_slot_sharding(self):
+        pass
+
+    def init_caches(self, abstract=False):
+        return {}
+
+    def reset_slot_caches(self, caches, mask):
+        return caches
+
+    def serve_step_batched(self, params, caches, batch):
+        mask = batch.get("slot_mask")
+        active = (np.ones(self.max_slots, bool) if mask is None
+                  else np.asarray(mask))
+        self.calls[active] += 1
+        return 100 * np.arange(self.max_slots) + self.calls, caches
+
+
+def _engine(n_slots=2, max_seq=8, **kw):
+    from repro.serving import ServeEngine
+
+    return ServeEngine(_FakeSession(n_slots, max_seq), params=None, **kw)
+
+
+def test_engine_close_with_queued_requests_fails_all_waiters():
+    """close() on an undriven engine must unblock every queued waiter
+    with the close error instead of leaving them hanging."""
+    eng = _engine(n_slots=2)
+    reqs = [eng.submit([1, 2, 3], max_gen=2) for _ in range(3)]
+    assert eng.scheduler.n_queued == 3
+    eng.close()
+    for r in reqs:
+        with pytest.raises(RuntimeError, match="outstanding"):
+            r.result(timeout=5)
+    assert eng.scheduler.n_queued == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit([1])
+
+
+def test_engine_remove_after_failed_submit():
+    """A submit that races an engine failure must pull the request back
+    out of the queue (scheduler.remove — the numpy-__eq__ crash site,
+    exercised here with a queued neighbour) and fail it loudly."""
+    eng = _engine(n_slots=2)
+    eng.submit([1, 2])              # a queued neighbour forces the
+    #                                 req-vs-other __eq__ comparison
+    # engine dies between the enqueue and submit()'s post-enqueue check
+    orig_submit = eng.scheduler.submit
+
+    def dying_submit(req):
+        orig_submit(req)
+        eng._failure = RuntimeError("driver died mid-submit")
+        return req
+
+    eng.scheduler.submit = dying_submit
+    with pytest.raises(RuntimeError, match="engine stopped"):
+        eng.submit([3, 4])
+    assert eng.scheduler.n_queued == 1     # the failed one was removed
+    # and a submit against the now-failed engine refuses up front
+    eng.scheduler.submit = orig_submit
+    with pytest.raises(RuntimeError, match="engine failed"):
+        eng.submit([5, 6])
+    assert eng.scheduler.n_queued == 1
+
+
+def test_engine_finish_clears_slot_and_guards_late_emit():
+    """ISSUE-5 regression: _finish used to release the slot but leave
+    req.slot pointing at it, so a late _emit on the finished request read
+    (and could finish!) a reallocated slot's state. The slot pointer is
+    now cleared and _emit/_decode_tick skip finished requests."""
+    eng = _engine(n_slots=1)
+    r1 = eng.submit([1, 2], max_gen=1)     # finishes at prefill
+    eng.step()
+    assert r1.done.is_set() and r1.slot is None
+    assert len(r1.tokens) == 1
+
+    r2 = eng.submit([5], max_gen=4)        # reallocates slot 0
+    eng.step()
+    assert r2.slot == 0 and not r2.done.is_set()
+    pos_before = eng.pool.slots[0].pos
+    toks_before = list(r2.tokens)
+
+    # late emit on the finished request: must be a no-op (before the fix
+    # it dereferenced pool.slots[r1.slot] == r2's slot and could finish
+    # r2's slot through r1)
+    gen_before = eng.stats.generated_tokens
+    eng._emit(r1, 999)
+    assert len(r1.tokens) == 1 and 999 not in r1.tokens
+    assert eng.stats.generated_tokens == gen_before
+    assert eng.pool.slots[0].pos == pos_before
+    assert eng.pool.slots[0].request_id == r2.id
+    assert list(r2.tokens) == toks_before
+
+    eng.run_until_idle()
+    assert r2.done.is_set() and r2.slot is None
+    assert len(r2.tokens) == 4
+    assert eng.stats.finished_requests == 2
+
+
 # --------------------------------------------------------------------------- #
 # Spec plumbing (no devices)
 # --------------------------------------------------------------------------- #
