@@ -323,26 +323,70 @@ class Session:
     def _max_seq(self) -> int:
         return self.spec.max_seq or self.shape_cfg.seq_len
 
-    def serve_step_fn(self, prompt_len: int):
-        key = ("serve", prompt_len)
+    # ---- paged-KV geometry ------------------------------------------- #
+
+    @property
+    def paged(self) -> bool:
+        """True when the serve caches are paged (spec.page_size set)."""
+        return self.spec.page_size is not None
+
+    @property
+    def page_size(self) -> int:
+        return self.spec.page_size or 0
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Worst-case pages one request can span (max_seq / page_size)."""
+        return self._max_seq() // self.spec.page_size
+
+    @property
+    def n_pages(self) -> int:
+        """Total page count (spec.max_pages, else the contiguous-cache
+        footprint max_slots × max_seq/page_size — same bytes, but pages
+        only *fill* with tokens actually written)."""
+        if self.spec.max_pages is not None:
+            return self.spec.max_pages
+        return self.max_slots * self.pages_per_slot
+
+    def serve_step_fn(self, prompt_len: int, want_logits: bool = False):
+        key = ("serve", prompt_len, want_logits)
         if key not in self._steps:
             self._steps[key] = make_serve_step(
                 self.rt, self.shape_cfg, prompt_len=prompt_len,
-                max_seq=self._max_seq())
+                max_seq=self._max_seq(), page_size=self.page_size,
+                want_logits=want_logits)
         return self._steps[key]
 
     def init_caches(self, abstract: bool = False):
+        if self.paged and self.cfg.encdec is not None:
+            raise SessionError(
+                "paged KV serving does not cover encoder-decoder "
+                "sessions (enc_memory has no page layout) — drop "
+                "page_size")
         return init_serve_caches(self.rt, self.shape_cfg,
                                  max_seq=self._max_seq(),
-                                 abstract=abstract)
+                                 abstract=abstract,
+                                 page_size=self.page_size,
+                                 n_pages=self.n_pages if self.paged
+                                 else 0)
 
     def serve_prefill(self, params, caches, batch):
         """Run the prompt through the pipeline; returns (tokens, caches)."""
+        if self.paged:
+            raise SessionError(
+                "paged sessions serve through the slotted path "
+                "(serve_step_batched / serve_engine); the scalar-pos "
+                "serve_prefill has no page tables")
         prompt = batch["tokens"].shape[1]
         return self.serve_step_fn(prompt)(params, caches, batch)
 
     def serve_decode(self, params, caches, batch):
         """One cached decode step; returns (tokens, caches)."""
+        if self.paged:
+            raise SessionError(
+                "paged sessions serve through the slotted path "
+                "(serve_step_batched / serve_engine); the scalar-pos "
+                "serve_decode has no page tables")
         return self.serve_step_fn(1)(params, caches, batch)
 
     # ---- slot-aware (continuous-batching) serving -------------------- #
@@ -352,16 +396,21 @@ class Session:
         """Serving slot count == the serve-mode global batch."""
         return self.shape_cfg.global_batch
 
-    def serve_step_batched(self, params, caches, batch):
+    def serve_step_batched(self, params, caches, batch,
+                           want_logits: bool = False):
         """One slot-aware step (prefill chunk s>=1 or decode s==1).
 
         Unlike :meth:`serve_prefill`/:meth:`serve_decode`, ``batch`` is
         per-slot: ``pos`` is an int32 ``[max_slots]`` vector (each slot's
         first absolute position) and the optional ``slot_mask`` bool
         ``[max_slots]`` gates cache writes so a prefill into one slot
-        cannot clobber a neighbouring in-flight request. Returns
-        ``(tokens[max_slots], caches)``; rows outside ``slot_mask`` carry
-        garbage samples the caller ignores.
+        cannot clobber a neighbouring in-flight request. Paged sessions
+        additionally carry ``page_tables`` (int32
+        ``[max_slots, pages_per_slot]`` shard-local page ids). Returns
+        ``(tokens[max_slots], caches)`` — or, with ``want_logits``,
+        ``(tokens, logits[max_slots, vocab], caches)`` for the host-side
+        sampling layer. Rows outside ``slot_mask`` carry garbage samples
+        the caller ignores.
         """
         pos = batch.get("pos")
         if getattr(pos, "ndim", 0) != 1:
@@ -370,9 +419,14 @@ class Session:
                 f"[{self.max_slots}] int32 vector (got "
                 f"{getattr(pos, 'shape', None)}); use serve_prefill/"
                 "serve_decode for the scalar-pos path")
+        if self.paged and batch.get("page_tables") is None:
+            raise SessionError(
+                "paged sessions need batch['page_tables'] (int32 "
+                f"[{self.max_slots}, {self.pages_per_slot}] shard-local "
+                "page ids; see PagedSlotPool.page_table_matrix)")
         self.check_slot_sharding()
         s = batch["tokens"].shape[1]
-        return self.serve_step_fn(s)(params, caches, batch)
+        return self.serve_step_fn(s, want_logits)(params, caches, batch)
 
     def check_slot_sharding(self) -> None:
         """The slotted (per-slot pos) path needs a batch-sharded cache
@@ -414,6 +468,27 @@ class Session:
             self._steps["slot_reset"] = jax.jit(reset_slot_caches,
                                                 donate_argnums=(0,))
         return self._steps["slot_reset"](caches, slot_mask)
+
+    def reset_pages(self, caches, page_mask):
+        """Zero the pages flagged in ``page_mask`` [n_pages] (paged
+        analogue of :meth:`reset_slot_caches`: a request's *fresh* pages
+        must read as zeros; shared prefix pages keep their contents)."""
+        if "page_reset" not in self._steps:
+            from repro.core.pipeline import reset_pages
+            self._steps["page_reset"] = jax.jit(reset_pages,
+                                                donate_argnums=(0,))
+        return self._steps["page_reset"](caches, page_mask)
+
+    def copy_pages(self, caches, src, dst):
+        """Copy page ``src[i]`` -> ``dst[i]`` (int32 [w] global ids) in
+        every paged leaf — cross-partition prefix reuse. Callers keep
+        ``w`` fixed (pad by repeating the first pair) so this compiles
+        once."""
+        if "page_copy" not in self._steps:
+            from repro.core.pipeline import copy_pages
+            self._steps["page_copy"] = jax.jit(copy_pages,
+                                               donate_argnums=(0,))
+        return self._steps["page_copy"](caches, src, dst)
 
     def serve_engine(self, params, **kw):
         """A continuous-batching :class:`repro.serving.ServeEngine` over
@@ -613,6 +688,8 @@ class Session:
                 "opt_step": ["params", "opt_state"],
                 "serve_step": ["caches"],
                 "reset_slot_caches": ["caches"],
+                "reset_pages": ["caches"],
+                "copy_pages": ["caches"],
                 "train_step": [],
             },
             "geometry": {

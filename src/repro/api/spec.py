@@ -72,6 +72,13 @@ class SessionSpec:
     prefill_chunk: int | None = None  # split prompts into chunks of this
     #                                   width (bounds the number of
     #                                   distinct prefill compilations)
+    page_size: int | None = None    # paged KV cache: tokens per page
+    #                                 (None -> contiguous per-slot rows)
+    max_pages: int | None = None    # paged KV cache: total page count
+    #                                 (None -> max_slots * max_seq/page)
+    prefix_sharing: str = "on"      # radix prefix sharing across
+    #                                 requests ("off": escape hatch —
+    #                                 pages stay private per request)
     mesh: Any = None                # pre-built jax Mesh (advanced)
 
     def __post_init__(self):
@@ -181,6 +188,38 @@ class SessionSpec:
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise SessionError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.prefix_sharing not in ("on", "off"):
+            raise SessionError(
+                f"prefix_sharing must be 'on' or 'off', got "
+                f"{self.prefix_sharing!r}")
+        if self.page_size is not None:
+            if self.mode != "serve":
+                raise SessionError(
+                    "page_size is a serving knob (the paged-KV page "
+                    f"width); this session is mode={self.mode!r}")
+            if self.page_size < 1:
+                raise SessionError(
+                    f"page_size must be >= 1, got {self.page_size}")
+            if self.max_seq is not None \
+                    and self.max_seq % self.page_size != 0:
+                raise SessionError(
+                    f"page_size ({self.page_size}) must divide max_seq "
+                    f"({self.max_seq}) so page tables have a fixed "
+                    "width")
+        if self.max_pages is not None:
+            if self.page_size is None:
+                raise SessionError(
+                    "max_pages needs page_size=<tokens per page> (it "
+                    "sizes the paged KV cache)")
+            if self.max_pages < 1:
+                raise SessionError(
+                    f"max_pages must be >= 1, got {self.max_pages}")
+            shards = (self.pods or 1) * (self.data or 1)
+            if self.max_pages % shards != 0:
+                raise SessionError(
+                    f"max_pages ({self.max_pages}) must divide evenly "
+                    f"over the pods×data axes ({shards}): the page axis "
+                    "shards exactly like the slot batch axis")
         return self
 
     # ------------------------------------------------------------------ #

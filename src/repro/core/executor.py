@@ -838,16 +838,22 @@ def train_body(params, batch, *, rt, shape_cfg, mbs, vloc,
 
 
 def make_cache_io(cfg, rc, seg, *, seq_shard: bool, g_rank, Btot: int,
-                  mbs: int):
-    """(cache_get, cache_put) hooks for one segment's layer-cache tree."""
+                  mbs: int, paged: bool = False):
+    """(cache_get, cache_put) hooks for one segment's layer-cache tree.
+
+    ``paged``: leaves are page pools ([V, n_loc, page_size, ...] locally)
+    shared by every row — hand the stage the whole pool; the attention
+    path scatters/gathers through each row's page table instead of this
+    hook slicing per-micro-batch rows.
+    """
 
     def cache_get(tree, j, v, u):
         out = {}
         for n in M.layer_cache_spec(cfg, rc, seg.kinds[j], 1, 1):
             a = tree[f"L{j}.{n}"]
             av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
-            if seq_shard:
-                out[n] = av  # batch == full local batch (1)
+            if paged or seq_shard:
+                out[n] = av  # whole pool / full local batch
             else:
                 start = (g_rank * Btot + u) * mbs
                 out[n] = jax.lax.dynamic_slice_in_dim(av, start, mbs, 0)
@@ -857,7 +863,7 @@ def make_cache_io(cfg, rc, seg, *, seq_shard: bool, g_rank, Btot: int,
         for n, val in cd.items():
             a = tree[f"L{j}.{n}"]
             av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
-            if seq_shard:
+            if paged or seq_shard:
                 av = val.astype(a.dtype)
             else:
                 start = (g_rank * Btot + u) * mbs
@@ -871,7 +877,8 @@ def make_cache_io(cfg, rc, seg, *, seq_shard: bool, g_rank, Btot: int,
 
 
 def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
-               Btot, vloc, prompt_len, max_seq, seq_shard):
+               Btot, vloc, prompt_len, max_seq, seq_shard,
+               page_size=0, want_logits=False):
     cfg, rc = rt.cfg, rt.rc
     from repro.core import vocab as Vb
 
@@ -886,6 +893,7 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
     tokens = batch["tokens"]
     pos = batch.get("pos", jnp.zeros((), jnp.int32))
     slot_mask = batch.get("slot_mask")
+    page_tables = batch.get("page_tables")
     # pos may be a [gb] per-slot vector (continuous batching): every slot
     # sits at its own absolute position and only the rows flagged in
     # slot_mask commit cache writes. Sliced per micro-batch below.
@@ -895,6 +903,9 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
             "per-slot pos vectors need a batch-sharded cache; this shape "
             "fell back to the sequence-sharded (500k) cache layout — use "
             "a global_batch divisible by the data axis")
+    if page_tables is not None and not (per_slot and page_size > 0):
+        raise ValueError(
+            "page_tables require a per-slot pos vector and page_size > 0")
 
     seg = rt.segs["dec"] if cfg.encdec is not None else rt.segs["main"]
     seg_key = "dec" if cfg.encdec is not None else "main"
@@ -913,7 +924,8 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
     ctx = blocks.LayerCtx(
         cfg=cfg, rc=rc, rope=rope, causal=True,
         ep_axis=DATA if rt.ep else None,
-        kv_seq_shard=seq_shard, kv_shards=rt.dsize)
+        kv_seq_shard=seq_shard, kv_shards=rt.dsize,
+        page_size=page_size)
     if cfg.encdec is not None:
         ctx.enc_memory = None  # set per micro-batch below
 
@@ -932,7 +944,7 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
     stage_params = eng.stage_params
     cache_get, cache_put = make_cache_io(
         cfg, rc, seg, seq_shard=seq_shard, g_rank=g_rank, Btot=Btot,
-        mbs=mbs)
+        mbs=mbs, paged=page_tables is not None)
 
     act = (mbs, s, d)
     carry = dict(
@@ -943,6 +955,13 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         caches=dict(cache_tree),
         out_tok=jnp.zeros((G * Btot, mbs), jnp.int32),
     )
+    if want_logits:
+        # per-u drain logits land here; vloc path: every data rank
+        # computes its vocab slice for ALL data ranks' rows (the
+        # all_gather inside serve_logits), hence the D·mbs row block.
+        lrows = (rt.dsize if vloc else 1) * mbs
+        carry["out_logits"] = jnp.zeros(
+            (G * Btot, lrows, vloc or cfg.vocab), jnp.float32)
 
     def f_branch(c, row):
         u, v = row["mb"], row["v"]
@@ -967,6 +986,8 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         pos_u = tok_slice(pos, u) if per_slot else pos
         ctx.slot_mask = (tok_slice(slot_mask, u)
                          if slot_mask is not None else None)
+        ctx.page_tables = (tok_slice(page_tables, u)
+                           if page_tables is not None else None)
         ch = [cache_get(c["caches"], j, v, u)
               for j in range(len(seg.kinds))]
         y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos_u)
@@ -977,6 +998,23 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         c["send_f"] = y
 
         is_drain = (p_rank == Pe - 1) & (v == V - 1)
+
+        if want_logits:
+            def sample_l(bufs):
+                ot, ol = bufs
+                h_last = y[:, -1]
+                idx = g_rank * Btot + (u % Btot)
+                tok = Vb.greedy_sample(cfg, rc, io_p, h_last, vloc)
+                ot = jax.lax.dynamic_update_index_in_dim(ot, tok, idx, 0)
+                lg = Vb.serve_logits(cfg, rc, io_p, h_last, vloc)
+                ol = jax.lax.dynamic_update_index_in_dim(
+                    ol, lg.astype(ol.dtype), idx, 0)
+                return ot, ol
+
+            c["out_tok"], c["out_logits"] = jax.lax.cond(
+                is_drain, sample_l, lambda bufs: bufs,
+                (c["out_tok"], c["out_logits"]))
+            return c
 
         def sample(ot):
             h_last = y[:, -1]
@@ -1000,4 +1038,18 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         MODEL)
     caches_out = dict(caches)
     caches_out[seg_key] = carry["caches"]
+    if want_logits:
+        ol = carry["out_logits"]  # [G·Btot, (D·)mbs, vloc|vocab]
+        if vloc:
+            # reorder to [D, b_loc, vloc] -> [D·b_loc, vloc]: global row
+            # r of the gb batch is data-rank r // b_loc's local row
+            # r % b_loc, and each u-block holds all D ranks' mbs rows.
+            D = rt.dsize
+            ol = ol.reshape(G * Btot, D, mbs, vloc)
+            ol = ol.transpose(1, 0, 2, 3).reshape(D * G * Btot * mbs, vloc)
+        else:
+            ol = ol.reshape(G * Btot * mbs, cfg.vocab)
+        ol = jax.lax.psum(
+            jnp.where((p_rank == Pe - 1), ol, jnp.zeros_like(ol)), MODEL)
+        return out_tok, ol, caches_out
     return out_tok, caches_out

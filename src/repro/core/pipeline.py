@@ -473,12 +473,24 @@ def _cache_specs_for(rt: Runtime, seg, b_loc: int, max_seq: int,
     return out
 
 
-def serve_cache_pspecs(rt: Runtime, shape_cfg):
-    """PartitionSpecs for the serving cache tree."""
+def serve_cache_pspecs(rt: Runtime, shape_cfg, paged: bool = False):
+    """PartitionSpecs for the serving cache tree.
+
+    Paged caches reuse the batch-shardable layout verbatim: a
+    ``[M·V, n_pages, page_size, ...]`` leaf has the same rank as the
+    contiguous ``[M·V, gb, max_seq, ...]`` one and shards its page axis
+    exactly like the batch axis (each pods×data shard owns a block of
+    pages, gathered locally through per-row page tables).
+    """
     gb = shape_cfg.global_batch
     batch_shardable = gb % (rt.pods * rt.dsize) == 0 and gb >= (
         rt.pods * rt.dsize)
     seq_shard = not batch_shardable
+    if paged and seq_shard:
+        raise ValueError(
+            "paged KV caches need the batch-shardable cache layout; "
+            f"global_batch={gb} fell back to sequence sharding — use a "
+            "slot count divisible by the pods×data axes")
     bspec = ((POD, DATA) if rt.multi_pod else DATA) if batch_shardable \
         else None
     tree = {}
@@ -500,14 +512,21 @@ def serve_cache_pspecs(rt: Runtime, shape_cfg):
     return tree, seq_shard, bspec
 
 
-def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True):
-    """Cache tree: {seg: {"L{j}.{name}": [M·V, b_loc, ...]}}."""
+def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True,
+                      *, page_size: int = 0, n_pages: int = 0):
+    """Cache tree: {seg: {"L{j}.{name}": [M·V, b_loc, ...]}}.
+
+    With ``page_size > 0`` the attention leaves come out paged —
+    ``[M·V, n_pages, page_size, ...]`` — and rows address them through
+    the per-request page tables the serve step is handed each tick.
+    """
     from jax.sharding import NamedSharding
 
     cfg, rc = rt.cfg, rt.rc
     gb = shape_cfg.global_batch
     max_seq = max_seq or shape_cfg.seq_len
-    pspecs, seq_shard, bspec = serve_cache_pspecs(rt, shape_cfg)
+    pspecs, seq_shard, bspec = serve_cache_pspecs(
+        rt, shape_cfg, paged=page_size > 0)
     tree = {}
     for seg in rt.geo.segments:
         if seg.name == "enc":
@@ -517,6 +536,16 @@ def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True):
         for j, kind in enumerate(seg.kinds):
             cs = M.layer_cache_spec(cfg, rc, kind, gb, max_seq)
             for n, s in cs.items():
+                if page_size and n in ("k", "v", "ckv"):
+                    s = jax.ShapeDtypeStruct(
+                        (n_pages, page_size) + s.shape[2:], s.dtype)
+                elif page_size:
+                    raise ValueError(
+                        f"paged serving covers attention caches only; "
+                        f"layer kind {kind!r} keeps per-slot state "
+                        f"({n!r}) that has no page layout — set "
+                        "prefix_sharing='off' / page_size=0 for this "
+                        "architecture")
                 shape = (rt.G * rt.Pe * V,) + s.shape
                 sh = NamedSharding(rt.mesh, pspecs[seg.name][f"L{j}.{n}"])
                 slots[f"L{j}.{n}"] = (
@@ -559,6 +588,45 @@ def reset_slot_caches(caches, slot_mask):
     return out
 
 
+def reset_pages(caches, page_mask):
+    """Zero the pages flagged in ``page_mask`` [n_pages] of every paged
+    leaf ([M·V, n_pages, page_size, ...]; page axis 1).
+
+    The paged analogue of ``reset_slot_caches``: freshly allocated pages
+    must read as zeros (the contiguous path zeroes whole slot rows on
+    admission, and greedy parity leans on identical gathered bytes) —
+    shared prefix pages keep their contents, so the mask carries only a
+    request's *fresh* pages.
+    """
+    return {
+        key: {
+            n: jnp.where(
+                page_mask.reshape((1, -1) + (1,) * (a.ndim - 2)),
+                jnp.zeros((), a.dtype), a)
+            for n, a in sub.items()
+        }
+        for key, sub in caches.items()
+    }
+
+
+def copy_pages(caches, src, dst):
+    """Copy page ``src[i]`` -> ``dst[i]`` (int32 [w] *global* page ids)
+    in every paged leaf.
+
+    Cross-partition prefix reuse: the radix found the pages in another
+    pods×data shard's block, so the bytes move on device (XLA lowers the
+    axis-1 gather/scatter across the page sharding) instead of being
+    recomputed by a prefill. ``dst`` entries must be distinct except as
+    exact repeats of the same (src, dst) pair — fixed-width callers pad
+    by repeating their first real pair, so duplicate writes carry
+    identical values.
+    """
+    return {
+        key: {n: a.at[:, dst].set(a[:, src]) for n, a in sub.items()}
+        for key, sub in caches.items()
+    }
+
+
 def serve_tiling(rt: Runtime, gb: int, seq_shard: bool):
     """(b_loc, Btot, mbs): how the serve step tiles a local batch into
     (groups × micro-batches × mbs). Shared by ``make_serve_step`` and
@@ -576,28 +644,46 @@ def serve_tiling(rt: Runtime, gb: int, seq_shard: bool):
 
 
 def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
-                    max_seq: int | None = None):
-    """Returns jit(step)(params, caches, batch) -> (tokens_out, caches).
+                    max_seq: int | None = None, page_size: int = 0,
+                    want_logits: bool = False):
+    """Returns jit(step)(params, caches, batch) -> (tokens_out, caches)
+    — or (tokens_out, logits, caches) with ``want_logits``.
 
     prompt_len == 1  → decode step (batch["pos"] gives the position).
     prompt_len > 1   → prefill: runs the prompt through the pipeline,
                        filling caches, and samples the first token.
+    page_size > 0    → paged caches: batch carries "page_tables"
+                       (int32 [gb, max_seq // page_size] shard-local
+                       page ids) and the attention leaves are page
+                       pools instead of per-slot rows.
+    want_logits      → additionally return the drain rank's full
+                       next-token logits [gb, vocab] (float32) so the
+                       engine can sample host-side; the in-graph greedy
+                       token stream is unchanged.
     """
     cfg, rc = rt.cfg, rt.rc
     from repro.core import vocab as Vb
 
     gb = shape_cfg.global_batch
     max_seq = max_seq or shape_cfg.seq_len
-    pspecs, seq_shard, bspec = serve_cache_pspecs(rt, shape_cfg)
+    pspecs, seq_shard, bspec = serve_cache_pspecs(
+        rt, shape_cfg, paged=page_size > 0)
     b_loc, Btot, mbs = serve_tiling(rt, gb, seq_shard)
     vloc = Vb.vocab_shard(cfg.vocab, rt.dsize)
     batch_spec = P(bspec) if bspec else P()
+    if want_logits and seq_shard:
+        raise NotImplementedError(
+            "logits return needs the batch-shardable serve layout")
+    if want_logits and rt.multi_pod:
+        raise NotImplementedError(
+            "logits return is not wired for multi-pod meshes")
 
     mesh = rt.mesh
 
     def step(params, caches, batch):
         # scalar pos is replicated; a per-slot [gb] pos vector (and the
-        # slot_mask that rides with it) shards with the batch rows.
+        # slot_mask / page_tables that ride with it) shards with the
+        # batch rows.
         bsp = {k: (P() if k == "pos" and not getattr(batch[k], "ndim", 0)
                    else batch_spec) for k in batch}
         in_specs = (
@@ -606,12 +692,20 @@ def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
                 k: v for k, v in pspecs.items() if k != "enc_memory"},
             bsp,
         )
-        out_specs = (P(bspec) if bspec else P(),
-                     in_specs[1])
+        tok_spec = P(bspec) if bspec else P()
+        if want_logits:
+            # vocab-sharded head: every data rank computes its vocab
+            # slice for ALL rows -> [gb, vloc] local, vocab axis sharded.
+            # replicated head: each rank holds its own rows' full vocab.
+            logit_spec = P(None, DATA) if vloc else P(bspec)
+            out_specs = (tok_spec, logit_spec, in_specs[1])
+        else:
+            out_specs = (tok_spec, in_specs[1])
         fn = fsdp.shard_map(
             partial(_serve_body, rt=rt, shape_cfg=shape_cfg, mbs=mbs,
                     Btot=Btot, vloc=vloc, prompt_len=prompt_len,
-                    max_seq=max_seq, seq_shard=seq_shard),
+                    max_seq=max_seq, seq_shard=seq_shard,
+                    page_size=page_size, want_logits=want_logits),
             mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )

@@ -250,6 +250,24 @@ def loss_and_dy(cfg, rc, io_p, h, labels, denom: float, vloc: int | None,
     return loss, dh.astype(h.dtype), grads
 
 
+def serve_logits(cfg, rc, io_p, h, vloc: int | None):
+    """Full next-token logits from final hiddens h [b, d] (float32).
+
+    Replicated head: [b, vocab] for this rank's own rows. Sharded head:
+    every data-rank gathers all rows and computes its vocab slice →
+    [D·b, vloc] (globally [D·b, vocab] with the vocab axis on "data").
+    Feeds the host-side sampling layer; greedy decoding never calls this.
+    """
+    hn, _ = _final_norm_fwd(cfg, io_p, h)
+    tied = cfg.tie_embeddings
+    w = io_p["embed.table"] if tied else io_p["head.w"]
+    wl = (w.T if tied else w).astype(jnp.float32)
+    if vloc is None:
+        return hn @ wl
+    hn_all = jax.lax.all_gather(hn, DATA, axis=0, tiled=True)
+    return hn_all @ wl
+
+
 def greedy_sample(cfg, rc, io_p, h, vloc: int | None):
     """Greedy next token from final hiddens h [b, d] (sharded head)."""
     hn, _ = _final_norm_fwd(cfg, io_p, h)

@@ -98,6 +98,24 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split prompts into chunks of this width "
                          "(bounds distinct prefill compilations)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV cache: tokens per page (shared "
+                         "prompt prefixes prefill once; default: "
+                         "contiguous per-slot rows)")
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="paged KV cache: total page count (default: "
+                         "the contiguous footprint slots*max_seq/page)")
+    ap.add_argument("--prefix-sharing", default="on",
+                    choices=("on", "off"),
+                    help="radix prefix sharing across requests "
+                         "(off: pages stay private per request)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, in-graph)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed base: request i "
+                         "draws from seed+i (restart-deterministic)")
     ap.add_argument("--schedule", default=None,
                     help="registered schedule name or 'auto' (§4 plan "
                          "selection; serving itself runs the fwd-only "
@@ -128,11 +146,14 @@ def main():
     if max_seq < need:
         raise SystemExit(f"--max-seq {max_seq} too small for the "
                          f"workload (needs >= {need})")
+    if args.page_size:
+        max_seq = -(-max_seq // args.page_size) * args.page_size
 
     sess = session(
         args.arch, mode="serve", data=args.data, max_slots=args.slots,
         max_seq=max_seq, schedule=args.schedule, cost_preset=args.preset,
-        prefill_chunk=args.prefill_chunk,
+        prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+        max_pages=args.max_pages, prefix_sharing=args.prefix_sharing,
         overrides=dict(microbatches=2),
     )
     d = sess.describe()["schedule"]
@@ -150,8 +171,12 @@ def main():
     eng = sess.serve_engine(params)
     t0 = time.time()
     with eng:
-        handles = [eng.submit(toks, max_gen=g, stop=stop)
-                   for toks, g, stop in work]
+        handles = [
+            eng.submit(toks, max_gen=g, stop=stop,
+                       temperature=args.temperature, top_p=args.top_p,
+                       seed=(None if args.seed is None
+                             else args.seed + i))
+            for i, (toks, g, stop) in enumerate(work)]
         results = [h.result(timeout=600) for h in handles]
     dt = time.time() - t0
     for i, ((toks, g, _), res) in enumerate(zip(work, results)):
@@ -163,6 +188,14 @@ def main():
           f"({total / max(dt, 1e-9):.1f} tok/s, "
           f"{st.prefill_steps} prefill + {st.decode_steps} decode steps, "
           f"slot occupancy {st.occupancy:.2f})")
+    if sess.paged:
+        prompt_total = sum(len(t) for t, _, _ in work)
+        print(f"paged: pages_in_use={st.pages_in_use} "
+              f"peak={st.peak_pages_in_use}/{sess.n_pages} "
+              f"prefix_hits={st.prefix_hits} "
+              f"prefix_hit_tokens={st.prefix_hit_tokens} "
+              f"prefilled {st.prefill_tokens}/{prompt_total} prompt "
+              f"tokens, evictions={st.evictions}")
     print("SERVE_OK")
 
 

@@ -46,6 +46,10 @@ class LayerCtx:
     slot_mask: Any = None            # [b] bool: rows allowed to write their
     #                                  cache slot (continuous batching);
     #                                  None = every row writes
+    page_tables: Any = None          # [b, pages_per_req] int32 local page
+    #                                  ids (paged KV cache); None = the
+    #                                  contiguous per-row cache layout
+    page_size: int = 0               # tokens per page when paged
 
 
 # --------------------------------------------------------------------------- #
@@ -670,6 +674,51 @@ def _slot_scatter(ctx, cache_arr, new, pos):
     return jax.vmap(upd)(cache_arr, new, pos, mask)
 
 
+def _paged_gather(ctx, pool, width=None):
+    """Assemble each row's K/V window from the shared page pool.
+
+    pool: [n_pages_loc, ps, ...]; ctx.page_tables: [b, ppr] local page
+    ids. Returns [b, ppr*ps, ...] — same shape and same values at every
+    causally-visible position as the contiguous per-row cache, so the
+    attention that follows is bitwise identical to the slotted path.
+    Sentinel table entries (unreserved tail) drag in arbitrary live
+    pages; every such position sits beyond the row's causal offset and
+    is masked to exact -inf before the softmax.
+    """
+    pt = jnp.clip(ctx.page_tables, 0, pool.shape[0] - 1)
+    g = jnp.take(pool, pt, axis=0)            # [b, ppr, ps, ...]
+    g = g.reshape((pt.shape[0], -1) + pool.shape[2:])
+    if width is not None and g.shape[1] != width:
+        g = g[:, :width]
+    return g
+
+
+def _paged_scatter(ctx, pool, new, pos):
+    """Write ``new`` [b, s, ...] into the page pool at each row's
+    absolute positions ``pos + [0, s)``, routed through its page table.
+    Masked-off rows (``ctx.slot_mask``) are redirected out of bounds and
+    dropped — the paged analogue of :func:`_slot_scatter`'s read-back.
+    Rows never share writable pages (shared prefix pages are read-only
+    by construction and prefill resumes past them), so the flat indices
+    are collision-free.
+    """
+    b, s = new.shape[:2]
+    ps = ctx.page_size
+    n_loc = pool.shape[0]
+    t = pos[:, None] + jnp.arange(s, dtype=pos.dtype)[None]   # [b, s]
+    page = jnp.take_along_axis(ctx.page_tables, t // ps, axis=1)
+    mask = ctx.slot_mask
+    if mask is None:
+        mask = jnp.ones((b,), bool)
+    page = jnp.where(mask[:, None], page, n_loc)  # OOB -> dropped
+    flat = page * ps + t % ps
+    pool_flat = pool.reshape((n_loc * ps,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat.reshape(-1)].set(
+        new.reshape((b * s,) + new.shape[2:]).astype(pool.dtype),
+        mode="drop")
+    return pool_flat.reshape(pool.shape)
+
+
 def _slot_state(ctx, old, new):
     """Per-row select for positionless (recurrent) caches: masked-off rows
     keep their previous state. No-op without a slot mask (legacy path)."""
@@ -701,7 +750,18 @@ def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
     cos, sin = _rope_slice(ctx, cfg.head_dim, pos, s)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    if getattr(pos, "ndim", 0):
+    if ctx.page_tables is not None:
+        # paged KV: scatter this step's K/V through the page tables,
+        # gather each row's full window back for attention. The pool
+        # (not a per-row window) is the cache state.
+        kp = _paged_scatter(ctx, cache["k"], k, pos)
+        vp = _paged_scatter(ctx, cache["v"], v, pos)
+        kc = _paged_gather(ctx, kp)
+        vc = _paged_gather(ctx, vp)
+        o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
+                          block_k=ctx.rc.attn_block_k)
+        cache = {"k": kp, "v": vp}
+    elif getattr(pos, "ndim", 0):
         kc = _slot_scatter(ctx, cache["k"], k, pos)
         vc = _slot_scatter(ctx, cache["v"], v, pos)
         o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
@@ -757,12 +817,16 @@ def mla_cached(ctx, params, pfx, x, cache, pos):
           * params[f"{pfx}.qnorm.scale"]).astype(x.dtype)
     q = jnp.einsum("bsr,rhe->bshe", cq, params[f"{pfx}.wuq"])
     ckv = jnp.einsum("bsd,dc->bsc", x, params[f"{pfx}.wdkv"])
-    if getattr(pos, "ndim", 0):  # per-slot positions (slotted serving)
+    if ctx.page_tables is not None:  # paged latent cache
+        cache_new = _paged_scatter(ctx, cache["ckv"], ckv, pos)
+        full = _paged_gather(ctx, cache_new)
+    elif getattr(pos, "ndim", 0):  # per-slot positions (slotted serving)
         cache_new = _slot_scatter(ctx, cache["ckv"], ckv, pos)
+        full = cache_new
     else:
         cache_new = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
-    full = cache_new
+        full = cache_new
     c_kv, k_rope = full[..., : m.kv_lora], full[..., m.kv_lora:]
     cf = c_kv.astype(jnp.float32)
     c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + 1e-6)

@@ -14,23 +14,41 @@ schedule search does for training. This package supplies that batching:
 * :class:`ServeEngine` — the driver: ``submit()`` enqueues a request
   from any thread, ``stream()`` yields its tokens as they are decoded,
   and a background (or manually ticked) loop runs batched prefill/decode
-  steps through ``Session.serve_step_batched``.
+  steps through ``Session.serve_step_batched``;
+* :class:`PagePool` / :class:`PagedSlotPool` / :class:`RadixIndex` — the
+  paged KV cache (``page_size=`` on the spec): fixed-size ref-counted
+  pages behind per-request page tables, with a token-prefix radix trie
+  sharing prompt-prefix pages across requests (COW on divergence, LRU
+  eviction of unreferenced prefixes);
+* :mod:`repro.serving.sampling` — temperature / top-p decoding with
+  per-request seeded generators, fed by the serve step's optional
+  full-logits return.
 
 Correctness bar: engine output for N staggered requests is
 token-identical to N independent single-request ``serve_prefill``/
-``serve_decode`` runs (see tests/test_serving.py).
+``serve_decode`` runs, and paged greedy decoding is token-identical to
+the contiguous path (see tests/test_serving.py, tests/spmd_case.py).
 """
 
 from repro.serving.engine import EngineStats, ServeEngine
+from repro.serving.paging import PageAllocation, PagePool, PagedSlotPool
+from repro.serving.radix import RadixIndex
+from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import Request, RequestScheduler, SchedulerPolicy
 from repro.serving.slots import SlotPool, SlotView
 
 __all__ = [
     "EngineStats",
+    "PageAllocation",
+    "PagePool",
+    "PagedSlotPool",
+    "RadixIndex",
     "Request",
     "RequestScheduler",
+    "SamplingParams",
     "SchedulerPolicy",
     "ServeEngine",
     "SlotPool",
     "SlotView",
+    "sample_token",
 ]

@@ -22,6 +22,16 @@ Because every cache position a request reads was written by that same
 request (prefill covers [0, prompt) and each decode writes its position
 before attending), a reclaimed slot never leaks state between requests —
 engine output is token-identical to independent sequential serving.
+
+Paged sessions (``page_size=`` on the spec) swap the :class:`SlotPool`
+for a :class:`PagedSlotPool`: requests carry page tables instead of
+whole cache rows, the radix index shares prompt-prefix pages across
+requests (prefill resumes at the first uncached token), and each tick
+first zeroes the newly allocated pages, then runs the admitted
+requests' cross-partition page copies in admission order, then
+prefills. Greedy output stays token-identical to the contiguous path.
+Sampled requests (``temperature > 0``) pull the drain rank's full
+logits and draw host-side with a per-request seeded generator.
 """
 
 from __future__ import annotations
@@ -32,6 +42,8 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.serving.paging import PagedSlotPool
+from repro.serving.sampling import sample_token
 from repro.serving.scheduler import (
     Request,
     RequestScheduler,
@@ -54,6 +66,14 @@ class EngineStats:
     generated_tokens: int = 0
     finished_requests: int = 0
     occupancy: float = 0.0          # mean busy-slot fraction per decode
+    rejected_requests: int = 0      # failed at admission (impossible fit)
+    prefill_tokens: int = 0         # prompt tokens actually computed
+    # paged-KV counters (zero on contiguous pools)
+    prefix_hits: int = 0            # admissions that reused prefix pages
+    prefix_hit_tokens: int = 0      # prompt tokens skipped via the radix
+    evictions: int = 0              # prefix pages LRU-evicted
+    pages_in_use: int = 0           # live pages right now
+    peak_pages_in_use: int = 0      # high-water mark
 
 
 class ServeEngine:
@@ -73,7 +93,24 @@ class ServeEngine:
                 "serve_decode")
         self.session = session
         self.params = params
-        self.pool = SlotPool(session.max_slots, session._max_seq())
+        self._paged = bool(session.paged)
+        if self._paged:
+            seg_ = session.geo.segments[-1]
+            if any(k.split(":")[0] not in _CHUNKABLE_MIXES
+                   for k in seg_.kinds):
+                raise NotImplementedError(
+                    "paged KV covers position-indexed (attention-family) "
+                    f"caches; segment kinds {seg_.kinds} keep per-slot "
+                    "recurrent state — drop page_size for this "
+                    "architecture")
+            shards = (session.spec.pods or 1) * session.data_size
+            self.pool: SlotPool | PagedSlotPool = PagedSlotPool(
+                session.max_slots, session._max_seq(),
+                page_size=session.page_size, n_pages=session.n_pages,
+                shards=shards, groups=session.rt.G,
+                sharing=session.spec.prefix_sharing == "on")
+        else:
+            self.pool = SlotPool(session.max_slots, session._max_seq())
         self.scheduler = RequestScheduler(policy)
         self.prefill_chunk = (prefill_chunk
                               if prefill_chunk is not None
@@ -102,15 +139,23 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
 
     def submit(self, prompt, *, max_gen: int = 16,
-               stop: Sequence[int] = ()) -> Request:
-        """Enqueue a generation request; returns its handle immediately."""
+               stop: Sequence[int] = (), temperature: float = 0.0,
+               top_p: float = 1.0, seed: int | None = None) -> Request:
+        """Enqueue a generation request; returns its handle immediately.
+
+        ``temperature == 0`` (default) decodes greedily in-graph;
+        ``temperature > 0`` samples host-side from the full logits, with
+        ``top_p`` nucleus truncation and an optional per-request ``seed``
+        that pins the sampled stream across engine restarts.
+        """
         if self._closed:
             raise RuntimeError("engine closed; no further submissions")
         if self._failure is not None:
             raise RuntimeError("engine failed; no further submissions") \
                 from self._failure
         req = Request(prompt=np.asarray(prompt, np.int32),
-                      max_gen=max_gen, stop=stop)
+                      max_gen=max_gen, stop=stop, temperature=temperature,
+                      top_p=top_p, seed=seed)
         self.pool.validate_prompt(req.prompt_len)  # reject before queuing
         self.scheduler.submit(req)
         if self._failure is not None or self._closed:
@@ -159,19 +204,35 @@ class ServeEngine:
         """One engine tick. Returns True if any work ran."""
         with self._lock:
             try:
-                admitted = self.scheduler.admit(self.pool)
+                admitted, rejected = self.scheduler.admit(self.pool)
+                for req, err in rejected:
+                    # an impossible request fails alone; its queue
+                    # neighbours were already admitted past it.
+                    self.stats.rejected_requests += 1
+                    _fail_request(req, err)
                 if admitted:
-                    reset = self.pool.mask_for(
-                        [r.slot for r in admitted])
-                    self.caches = self.session.reset_slot_caches(
-                        self.caches, reset)
+                    if self._paged:
+                        self._apply_page_plans(admitted)
+                    else:
+                        reset = self.pool.mask_for(
+                            [r.slot for r in admitted])
+                        self.caches = self.session.reset_slot_caches(
+                            self.caches, reset)
                     for req in admitted:
                         self._by_slot[req.slot] = req
                     self._prefill_admitted(admitted)
                 active = self.pool.active()
                 if active:
                     self._decode_tick()
-                return bool(admitted or active)
+                if self._paged:
+                    self.stats.prefix_hits = self.pool.prefix_hits
+                    self.stats.prefix_hit_tokens = \
+                        self.pool.prefix_hit_tokens
+                    self.stats.evictions = self.pool.evictions
+                    self.stats.pages_in_use = self.pool.pages_in_use
+                    self.stats.peak_pages_in_use = \
+                        self.pool.pool.peak_in_use
+                return bool(admitted or rejected or active)
             except BaseException as e:  # noqa: BLE001 — fail all waiters
                 self._fail(e)
                 raise
@@ -238,18 +299,53 @@ class ServeEngine:
     # Tick internals
     # ------------------------------------------------------------------ #
 
-    def _step_batched(self, batch):
+    def _step_batched(self, batch, want_logits: bool = False):
         """One slot-aware step; asserts the output covers every slot
         (a compacted output would silently misalign slot indexing)."""
-        out, caches = self.session.serve_step_batched(
-            self.params, self.caches, batch)
+        if self._paged:
+            batch = dict(batch,
+                         page_tables=self.pool.page_table_matrix())
+        if want_logits:
+            out, logits, caches = self.session.serve_step_batched(
+                self.params, self.caches, batch, want_logits=True)
+        else:
+            out, caches = self.session.serve_step_batched(
+                self.params, self.caches, batch)
+            logits = None
         if out.shape[0] != self.pool.n_slots:
             raise RuntimeError(
                 f"serve step returned {out.shape[0]} tokens for "
                 f"{self.pool.n_slots} slots — the step tiling does not "
                 "cover the slot pool (check_slot_sharding should have "
                 "caught this)")
-        return out, caches
+        return out, logits, caches
+
+    def _apply_page_plans(self, reqs: list[Request]) -> None:
+        """Device work for the admitted requests' page plans: zero every
+        fresh page (the paged analogue of the slot-row reset — copy
+        destinations get overwritten right after), then run each
+        request's cross-partition page copies *in admission order*: a
+        later request's copy source may itself be an earlier request's
+        just-registered destination."""
+        fresh = np.zeros(self.session.n_pages, bool)
+        for req in reqs:
+            al = self.pool.slots[req.slot].alloc
+            for gid in al.fresh:
+                fresh[gid] = True
+        if fresh.any():
+            self.caches = self.session.reset_pages(self.caches, fresh)
+        w = self.pool.pages_per_req  # fixed width: one compile
+        for req in reqs:
+            al = self.pool.slots[req.slot].alloc
+            if not al.copies:
+                continue
+            # pad by repeating the first pair — duplicate writes then
+            # carry identical values, so the scatter stays well-defined
+            src = np.full(w, al.copies[0][0], np.int32)
+            dst = np.full(w, al.copies[0][1], np.int32)
+            for i, (s_, d_) in enumerate(al.copies):
+                src[i], dst[i] = s_, d_
+            self.caches = self.session.copy_pages(self.caches, src, dst)
 
     def _prefill_admitted(self, reqs: list[Request]) -> None:
         """Prefill the admitted requests' prompts into their slots.
@@ -258,10 +354,18 @@ class ServeEngine:
         pos/mask vectors are already per-row), so K same-length prompts
         — or K chunk-aligned long prompts under ``prefill_chunk`` — cost
         one step, not K. A request's first token is sampled by the step
-        that covers its prompt's last position.
+        that covers its prompt's last position. Paged requests whose
+        prompt prefix came out of the radix start at their first
+        uncached token instead of 0.
         """
         n = self.pool.n_slots
-        pending = [(r, 0) for r in reqs]  # (request, chunk offset)
+
+        def start_off(r):
+            if self._paged:
+                return self.pool.slots[r.slot].alloc.start_pos
+            return 0
+
+        pending = [(r, start_off(r)) for r in reqs]
         while pending:
             by_width: dict[int, list] = {}
             for r, off in pending:
@@ -273,23 +377,43 @@ class ServeEngine:
                 toks = np.zeros((n, c), np.int32)
                 pos = self.pool.pos_vector()
                 mask = np.zeros(n, bool)
+                want = False
                 for r, off in group:
                     toks[r.slot] = r.prompt[off:off + c]
                     pos[r.slot] = off
                     mask[r.slot] = True
-                out, self.caches = self._step_batched(
-                    {"tokens": toks, "pos": pos, "slot_mask": mask})
+                    if off + c >= r.prompt_len and not r.sampling.greedy:
+                        want = True  # first token sampled this step
+                out, logits, self.caches = self._step_batched(
+                    {"tokens": toks, "pos": pos, "slot_mask": mask},
+                    want)
                 self.stats.prefill_steps += 1
-                out_np = None
+                self.stats.prefill_tokens += c * len(group)
+                out_np = logits_np = None
                 for r, off in group:
                     if off + c >= r.prompt_len:
                         self.pool.slots[r.slot].pos = r.prompt_len
+                        if self._paged:
+                            # fully-prompt-covered pages turn shareable
+                            self.pool.note_prefilled(r.slot, r.prompt)
                         if out_np is None:
                             out_np = np.asarray(out)
-                        # greedy sample from the prompt's last position
-                        self._emit(r, int(out_np[r.slot]))
+                        if logits_np is None and logits is not None:
+                            logits_np = np.asarray(logits)
+                        self._emit(r, self._pick_token(
+                            r, out_np, logits, logits_np))
                     else:
                         pending.append((r, off + c))
+
+    def _pick_token(self, req: Request, out_np, logits,
+                    logits_np) -> int:
+        """The next token for ``req``: the in-graph greedy argmax, or a
+        host-side draw from its row of the returned logits."""
+        if req.sampling.greedy:
+            return int(out_np[req.slot])
+        if logits_np is None:
+            logits_np = np.asarray(logits)
+        return sample_token(logits_np[req.slot], req.sampling, req._rng)
 
     def _decode_tick(self) -> None:
         """One batched decode step over every active slot.
@@ -302,24 +426,29 @@ class ServeEngine:
         n = self.pool.n_slots
         active = self.pool.active()
         toks = np.zeros((n, 1), np.int32)
+        want = False
         for s in active:
             req = self._by_slot.get(s.index)
             if req is None or req.done.is_set():
                 continue
             toks[s.index, 0] = req.tokens[-1]
+            if not req.sampling.greedy:
+                want = True
         batch = {"tokens": toks, "pos": self.pool.pos_vector(),
                  "slot_mask": self.pool.active_mask()}
-        out, self.caches = self._step_batched(batch)
+        out, logits, self.caches = self._step_batched(batch, want)
         self.pool.observe_tick()
         self.stats.decode_steps += 1
         self.stats.occupancy = self.pool.occupancy
         out_np = np.asarray(out)
+        logits_np = np.asarray(logits) if logits is not None else None
         for s in active:
             req = self._by_slot.get(s.index)
             if req is None or req.done.is_set():
                 continue
             s.pos += 1
-            self._emit(req, int(out_np[s.index]))
+            self._emit(req, self._pick_token(req, out_np, logits,
+                                             logits_np))
 
     def _emit(self, req: Request, tok: int) -> None:
         if req.done.is_set() or req.slot is None:

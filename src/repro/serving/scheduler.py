@@ -38,6 +38,12 @@ class Request:
     prompt: np.ndarray              # int32 [prompt_len]
     max_gen: int = 16               # generated-token budget (incl. first)
     stop: Sequence[int] = ()        # stop-token ids (emitted, then done)
+    # non-greedy decoding (repro.serving.sampling): temperature 0 keeps
+    # the in-graph greedy argmax; a seed pins the sampled stream across
+    # engine restarts.
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int | None = None
     id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     # in-flight state (engine-owned)
@@ -50,12 +56,18 @@ class Request:
         default_factory=queue.SimpleQueue)
 
     def __post_init__(self):
+        from repro.serving.sampling import SamplingParams, make_rng
+
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
         if self.max_gen < 1:
             raise ValueError(f"max_gen must be >= 1, got {self.max_gen}")
         self.stop = tuple(int(t) for t in self.stop)
+        self.sampling = SamplingParams(temperature=self.temperature,
+                                       top_p=self.top_p, seed=self.seed)
+        self._rng = None if self.sampling.greedy \
+            else make_rng(self.sampling)
 
     @property
     def prompt_len(self) -> int:
@@ -120,25 +132,39 @@ class RequestScheduler:
             out, self._queue = self._queue, []
             return out
 
-    def admit(self, pool: SlotPool) -> list[Request]:
+    def admit(self, pool: SlotPool,
+              ) -> tuple[list[Request], list[tuple[Request, Exception]]]:
         """Move queued requests into free slots (FIFO), per the policy.
 
-        Returns the admitted requests with ``req.slot`` assigned; the
-        engine still has to reset + prefill those slots.
+        Returns ``(admitted, rejected)``: admitted requests have
+        ``req.slot`` assigned (the engine still resets + prefills them);
+        rejected ones raised a ``ValueError`` from the pool — an
+        impossible request (e.g. an over-long prompt that slipped past
+        submit-time validation, or a page span no partition can ever
+        hold). Rejection must not tear down the tick: the engine fails
+        that single request and admission of its queue neighbours
+        continues — an exception escaping here would kill the daemon
+        driver and strand every in-flight request.
         """
         admitted: list[Request] = []
+        rejected: list[tuple[Request, Exception]] = []
         with self._lock:
             if self.policy.mode == "static" and pool.n_active > 0:
-                return admitted
+                return admitted, rejected
             limit = (self.policy.max_prefills_per_tick
                      if self.policy.mode == "continuous"
                      else pool.n_slots)
             while self._queue and len(admitted) < limit:
-                s = pool.alloc(self._queue[0].id,
-                               self._queue[0].prompt_len)
+                req = self._queue[0]
+                try:
+                    s = pool.try_admit(req)
+                except ValueError as e:
+                    self._queue.pop(0)
+                    rejected.append((req, e))
+                    continue
                 if s is None:
                     break
-                req = self._queue.pop(0)
+                self._queue.pop(0)
                 req.slot = s.index
                 admitted.append(req)
-        return admitted
+        return admitted, rejected

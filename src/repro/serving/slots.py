@@ -63,6 +63,13 @@ class SlotPool:
                 return s
         return None
 
+    def try_admit(self, req) -> SlotView | None:
+        """Admission entry point shared with the paged pool: claim a
+        slot for ``req`` (None when full; ValueError when the request
+        can never fit — the scheduler rejects it without dequeuing its
+        neighbours)."""
+        return self.alloc(req.id, req.prompt_len)
+
     def release(self, index: int) -> None:
         s = self.slots[index]
         s.request_id = None

@@ -79,19 +79,19 @@ def test_scheduler_fifo_admission_respects_policy():
     reqs = [_req() for _ in range(5)]
     for r in reqs:
         sched.submit(r)
-    first = sched.admit(pool)
+    first, _ = sched.admit(pool)
     # FIFO order, capped by the interleave policy
     assert [r.id for r in first] == [reqs[0].id, reqs[1].id]
     assert [r.slot for r in first] == [0, 1]
-    second = sched.admit(pool)
+    second, _ = sched.admit(pool)
     assert [r.id for r in second] == [reqs[2].id, reqs[3].id]
     # pool is now full: admission stalls until a slot frees up
-    assert sched.admit(pool) == [] and sched.n_queued == 1
+    assert sched.admit(pool) == ([], []) and sched.n_queued == 1
     pool.release(first[0].slot)
-    refill = sched.admit(pool)
+    refill, _ = sched.admit(pool)
     assert [r.id for r in refill] == [reqs[4].id]
     assert refill[0].slot == first[0].slot  # reclaimed slot refilled
-    assert sched.admit(pool) == [] and sched.n_queued == 0
+    assert sched.admit(pool) == ([], []) and sched.n_queued == 0
 
 
 def test_scheduler_static_mode_waits_for_idle_pool():
@@ -101,13 +101,14 @@ def test_scheduler_static_mode_waits_for_idle_pool():
     pool = SlotPool(2, max_seq=16)
     for _ in range(4):
         sched.submit(_req())
-    batch1 = sched.admit(pool)
+    batch1, _ = sched.admit(pool)
     assert len(batch1) == 2        # fills the whole pool at once
-    assert sched.admit(pool) == []  # pool busy -> no admission at all
+    assert sched.admit(pool) == ([], [])  # pool busy -> no admission
     pool.release(0)
-    assert sched.admit(pool) == []  # still one active slot
+    assert sched.admit(pool) == ([], [])  # still one active slot
     pool.release(1)
-    assert len(sched.admit(pool)) == 2
+    admitted, _ = sched.admit(pool)
+    assert len(admitted) == 2
 
 
 def test_request_validation():
@@ -159,6 +160,263 @@ def test_request_identity_semantics():
     assert len({a, b}) == 2
 
 
+def test_scheduler_admission_continues_past_poisoned_request():
+    """ISSUE-6 regression: a request the pool can never hold (ValueError
+    from try_admit) must fail alone — popped into the rejected list with
+    its error — while admission of its queue neighbours continues. Before
+    the (admitted, rejected) split the exception escaped admit() and took
+    down the whole tick."""
+    from repro.serving import RequestScheduler, SlotPool
+
+    sched = RequestScheduler()
+    pool = SlotPool(4, max_seq=8)
+    good1, poison, good2 = _req(n=4), _req(n=9), _req(n=4)
+    for r in (good1, poison, good2):
+        sched.submit(r)
+    admitted, rejected = sched.admit(pool)
+    assert [r.id for r in admitted] == [good1.id, good2.id]
+    assert len(rejected) == 1
+    bad, err = rejected[0]
+    assert bad is poison and isinstance(err, ValueError)
+    assert "max_seq" in str(err)
+    assert sched.n_queued == 0          # nothing left stranded
+    assert poison.slot is None
+
+
+# --------------------------------------------------------------------------- #
+# Paged KV cache: PagePool / RadixIndex / PagedSlotPool (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def test_page_pool_refcount_lifecycle():
+    from repro.serving import PagePool
+
+    pool = PagePool(8, page_size=4, shards=2)
+    assert (pool.partitions, pool.n_loc, pool.dev_pages) == (2, 4, 4)
+    assert pool.partition_of(5) == 1 and pool.local_id(5) == 1
+    a = pool.alloc(0, 2)
+    assert a == [0, 1]                     # lowest-id-first, partition 0
+    assert pool.pages_in_use == 2 and pool.refcount(0) == 1
+    pool.ref(0)
+    assert pool.unref(0) is False          # still held
+    assert pool.unref(0) is True           # went free
+    assert pool.alloc(0, 1) == [0]         # lowest free id reused
+    assert pool.alloc(0, 3) is None        # partition 0 short (2 free)
+    assert pool.alloc(1, 4) == [4, 5, 6, 7]
+    with pytest.raises(ValueError, match="free"):
+        pool.ref(3)                        # never allocated
+    pool.unref(1)
+    with pytest.raises(ValueError, match="already free"):
+        pool.unref(1)
+    # groups subdivide each shard; group_of cycles per partition
+    g = PagePool(8, page_size=4, shards=2, groups=2)
+    assert g.n_loc == 2
+    assert [g.group_of(p) for p in range(4)] == [0, 1, 0, 1]
+    with pytest.raises(ValueError, match="partitions"):
+        PagePool(6, page_size=4, shards=2, groups=2)
+
+
+def _preq(tokens, max_gen=4, **kw):
+    from repro.serving import Request
+
+    return Request(prompt=np.asarray(tokens, np.int32), max_gen=max_gen,
+                   **kw)
+
+
+def test_paged_prefix_share_and_cow_divergence():
+    """Two prompts sharing two full pages then diverging: the second
+    request refs the shared pages and gets *private* fresh pages for its
+    divergent tail (copy-on-write by construction — shared pages are
+    only ever full prompt pages, never written after insert)."""
+    from repro.serving import PagedSlotPool
+
+    pool = PagedSlotPool(2, max_seq=16, page_size=4, n_pages=8)
+    a = pool.try_admit(_preq(np.arange(9)))         # pages 0..8 tokens
+    assert a is not None
+    al_a = a.alloc
+    assert (al_a.start_pos, al_a.n_shared) == (0, 0)
+    assert al_a.fresh == al_a.pages                 # all 4 newly allocated
+    pool.note_prefilled(a.index, np.arange(9, dtype=np.int32))
+
+    # same first 8 tokens, divergent 9th: exactly 2 full pages shared
+    b = pool.try_admit(_preq(list(range(8)) + [99]))
+    al_b = b.alloc
+    assert (al_b.start_pos, al_b.n_shared) == (8, 2)
+    assert al_b.copies == []                        # same partition: refs
+    assert al_b.pages[:2] == al_a.pages[:2]
+    assert al_b.table[:2].tolist() == al_a.table[:2].tolist()
+    # the divergent tail is private fresh pages, disjoint from A's
+    assert set(al_b.pages[2:]) == set(al_b.fresh)
+    assert not set(al_b.fresh) & set(al_a.pages)
+    for gid in al_a.pages[:2]:
+        assert pool.pool.refcount(gid) == 3         # A + B + radix
+    assert (pool.prefix_hits, pool.prefix_hit_tokens) == (1, 8)
+
+    pool.release(a.index)
+    pool.release(b.index)
+    for gid in al_a.pages[:2]:
+        assert pool.pool.refcount(gid) == 1         # radix keeps them warm
+    assert pool.pages_in_use == 2                   # everything else freed
+
+
+def test_radix_lru_eviction_respects_refcounts():
+    """evict() only drops pages whose sole reference is the trie's, and
+    only leaf-first (a prefix chain never gets a hole); among droppable
+    leaves the least-recently-used goes first."""
+    from repro.serving import PagePool, RadixIndex
+
+    pool = PagePool(8, page_size=2)
+    radix = RadixIndex(2, pool)
+    prompt = np.arange(6, dtype=np.int32)           # 3 full pages
+    pages = pool.alloc(0, 3)
+    assert radix.insert(prompt, 3, 0, pages) == 3
+    pool.ref(pages[1])                   # an in-flight request's hold
+    for gid in pages:
+        pool.unref(gid)                  # the admitting request finished
+    # refcounts now: [1 (trie), 2 (trie+holder), 1 (trie)]
+    assert radix.evict(0, 3) == 1        # only the leaf was droppable:
+    #                                      pages[1] is pinned, pages[0]
+    #                                      sits above a cached descendant
+    assert radix.evictions == 1
+    assert pool.refcount(pages[1]) == 2 and pool.refcount(pages[0]) == 1
+    pool.unref(pages[1])                 # holder done -> chain evictable
+    assert radix.evict(0, 2) == 2
+    assert pool.pages_in_use == 0 and radix.n_nodes == 0
+
+    # LRU order among droppable leaves: the untouched branch goes first
+    pa, pb = pool.alloc(0, 1), pool.alloc(0, 1)
+    radix.insert(np.array([1, 2], np.int32), 1, 0, pa)
+    radix.insert(np.array([3, 4], np.int32), 1, 0, pb)
+    pool.unref(pa[0])
+    pool.unref(pb[0])
+    assert radix.match(np.array([1, 2], np.int32), 1)   # touch A
+    assert radix.evict(0, 1) == 1
+    assert radix.match(np.array([1, 2], np.int32), 1)   # A survived
+    assert not radix.match(np.array([3, 4], np.int32), 1)
+
+
+def test_paged_admission_evicts_under_pressure_and_defers():
+    """A short free list defers admission (None, like a full SlotPool)
+    while live requests pin their pages; once only the trie holds them,
+    the next admission LRU-evicts exactly the shortfall."""
+    from repro.serving import PagedSlotPool
+
+    pool = PagedSlotPool(2, max_seq=16, page_size=4, n_pages=4)
+    a = pool.try_admit(_preq(np.arange(13), max_gen=8))  # all 4 pages
+    assert a is not None and pool.pages_in_use == 4
+    assert pool.try_admit(_preq(50 + np.arange(9))) is None  # pinned
+    assert pool.pages_in_use == 4                   # rollback left no refs
+    pool.note_prefilled(a.index, np.arange(13, dtype=np.int32))
+    pool.release(a.index)
+    assert pool.pages_in_use == 3                   # 3 prompt pages cached
+    b = pool.try_admit(_preq(50 + np.arange(9)))    # needs 4 fresh
+    assert b is not None
+    assert pool.radix.evictions == 3                # evicted the shortfall
+    assert pool.pages_in_use == 4
+
+
+def test_paged_pending_key_defers_co_admitted_twin():
+    """A same-prefix request admitted while its twin is still mid-prefill
+    would re-prefill the shared pages; it defers one tick and then hits
+    the radix."""
+    from repro.serving import PagedSlotPool
+
+    pool = PagedSlotPool(2, max_seq=16, page_size=4, n_pages=8)
+    prompt = np.arange(9, dtype=np.int32)
+    a = pool.try_admit(_preq(prompt))
+    assert pool.try_admit(_preq(prompt)) is None    # twin: wait a tick
+    pool.note_prefilled(a.index, prompt)
+    b = pool.try_admit(_preq(prompt))
+    assert b is not None and b.alloc.n_shared == 2
+    assert b.alloc.start_pos == 8
+
+
+def test_paged_sharing_off_keeps_pages_private():
+    from repro.serving import PagedSlotPool
+
+    pool = PagedSlotPool(2, max_seq=16, page_size=4, n_pages=8,
+                         sharing=False)
+    assert pool.radix is None
+    prompt = np.arange(9, dtype=np.int32)
+    a = pool.try_admit(_preq(prompt))
+    pool.note_prefilled(a.index, prompt)
+    b = pool.try_admit(_preq(prompt))               # identical prompt
+    assert b.alloc.n_shared == 0 and b.alloc.start_pos == 0
+    assert not set(b.alloc.pages) & set(a.alloc.pages)
+    assert (pool.prefix_hits, pool.evictions) == (0, 0)
+
+
+def test_paged_sharing_respects_fsdp_group_boundaries():
+    """Cache leaves are sharded over the stage axis, so a page written by
+    one FSDP group's rows does not exist in another group's replica: a
+    prefix cached only in group-0 partitions is NOT a hit for a group-1
+    slot (full re-prefill), while the same layout with plain data shards
+    (one group) turns it into a device page-copy."""
+    from repro.serving import PagedSlotPool
+
+    prompt = np.arange(7, dtype=np.int32)           # 1 full page
+    for shards, groups, shared, copies in ((1, 2, 0, 0), (2, 1, 1, 1)):
+        pool = PagedSlotPool(4, max_seq=8, page_size=4, n_pages=8,
+                             shards=shards, groups=groups)
+        # fill partition 0 (slots 0-1) so the third request must land in
+        # partition 1 — the other group (or the other data shard)
+        a = pool.try_admit(_preq(prompt, max_gen=1))
+        pool.note_prefilled(a.index, prompt)
+        b = pool.try_admit(_preq(prompt, max_gen=1))
+        assert {a.index, b.index} == {0, 1}
+        assert b.alloc.n_shared == 1                # in-partition share
+        c = pool.try_admit(_preq(prompt, max_gen=1))
+        assert pool.partition_of_slot(c.index) == 1
+        assert c.alloc.n_shared == shared
+        assert len(c.alloc.copies) == copies
+        if copies:
+            src, dst = c.alloc.copies[0]
+            assert pool.pool.partition_of(src) == 0
+            assert pool.pool.partition_of(dst) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Sampling (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def test_sampling_params_validation():
+    from repro.serving import SamplingParams
+
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.7, top_p=0.9).greedy
+
+
+def test_sample_token_determinism_and_top_p():
+    from repro.serving import SamplingParams, sample_token
+    from repro.serving.sampling import make_rng
+
+    rng0 = np.random.default_rng(3)
+    logits = rng0.normal(size=32).astype(np.float32)
+    params = SamplingParams(temperature=0.8, top_p=0.9, seed=17)
+    draw = [sample_token(logits, params, make_rng(params))
+            for _ in range(3)]
+    assert draw[0] == draw[1] == draw[2]    # same seed, fresh rng: pinned
+    # the generator advances once per token: a sequence is reproducible
+    r1, r2 = make_rng(params), make_rng(params)
+    seq1 = [sample_token(logits, params, r1) for _ in range(8)]
+    seq2 = [sample_token(logits, params, r2) for _ in range(8)]
+    assert seq1 == seq2
+    # a tiny nucleus collapses to the argmax regardless of seed
+    tight = SamplingParams(temperature=1.0, top_p=1e-9, seed=None)
+    assert sample_token(logits, tight, make_rng(tight)) \
+        == int(np.argmax(logits))
+    # greedy ignores the rng entirely
+    assert sample_token(logits, SamplingParams(), None) \
+        == int(np.argmax(logits))
+
+
 # --------------------------------------------------------------------------- #
 # ServeEngine failure paths + finished-request guards (fake session,
 # no devices: the step fn is a numpy stub)
@@ -167,7 +425,11 @@ def test_request_identity_semantics():
 
 class _FakeSession:
     """Duck-typed stand-in for a serve Session: a deterministic numpy
-    step (token = 100*slot + per-slot call count) and no jax anywhere."""
+    step (token = 100*slot + per-slot call count) and no jax anywhere.
+    ``want_logits`` returns a deterministic per-(slot, call) logit row so
+    host-side sampling is reproducible across fresh engines."""
+
+    vocab = 13
 
     def __init__(self, n_slots=2, max_seq=8):
         import types
@@ -177,6 +439,7 @@ class _FakeSession:
         seg = types.SimpleNamespace(kinds=("attn",))
         self.geo = types.SimpleNamespace(segments=[seg])
         self.max_slots = n_slots
+        self.paged = False
         self._seq = max_seq
         self.calls = np.zeros(n_slots, np.int64)
 
@@ -192,12 +455,19 @@ class _FakeSession:
     def reset_slot_caches(self, caches, mask):
         return caches
 
-    def serve_step_batched(self, params, caches, batch):
+    def serve_step_batched(self, params, caches, batch,
+                           want_logits=False):
         mask = batch.get("slot_mask")
         active = (np.ones(self.max_slots, bool) if mask is None
                   else np.asarray(mask))
         self.calls[active] += 1
-        return 100 * np.arange(self.max_slots) + self.calls, caches
+        out = 100 * np.arange(self.max_slots) + self.calls
+        if want_logits:
+            phase = (np.arange(self.max_slots)[:, None] * 13
+                     + self.calls[:, None] * 7
+                     + np.arange(self.vocab)[None, :] * 0.7)
+            return out, np.sin(phase).astype(np.float32), caches
+        return out, caches
 
 
 def _engine(n_slots=2, max_seq=8, **kw):
@@ -281,6 +551,57 @@ def test_engine_finish_clears_slot_and_guards_late_emit():
     assert eng.stats.finished_requests == 2
 
 
+def test_engine_poisoned_request_fails_alone():
+    """ISSUE-6 satellite: an admission-impossible request (slipped past
+    submit-time validation) is failed with its ValueError while its queue
+    neighbours are admitted and served normally — the tick, the daemon
+    driver and every other request survive."""
+    from repro.serving import Request
+
+    eng = _engine(n_slots=2, max_seq=8)
+    good1 = eng.submit([1, 2, 3], max_gen=2)
+    # bypass submit()'s validate_prompt: a 9-token prompt can never fit
+    # an 8-position cache
+    poison = Request(prompt=np.arange(1, 10, dtype=np.int32), max_gen=2)
+    eng.scheduler.submit(poison)
+    good2 = eng.submit([4, 5], max_gen=2)
+    eng.run_until_idle()
+    assert eng.stats.rejected_requests == 1
+    assert poison.done.is_set() and poison.slot is None
+    with pytest.raises(ValueError, match="max_seq"):
+        poison.result(timeout=5)
+    assert len(good1.result(timeout=5)) == 2   # neighbours unharmed
+    assert len(good2.result(timeout=5)) == 2
+    assert eng.stats.finished_requests == 2
+    assert eng._failure is None                # engine still healthy
+
+
+def test_engine_sampling_deterministic_across_restarts():
+    """Same (prompt, temperature, top_p, seed) -> same sampled tokens on
+    a fresh engine: the per-request generator advances once per emitted
+    token, so slot placement and batch composition cannot perturb it."""
+    def run():
+        eng = _engine(n_slots=2, max_seq=8)
+        sampled = eng.submit([1, 2], max_gen=4, temperature=0.8,
+                             top_p=0.9, seed=7)
+        greedy = eng.submit([3, 4], max_gen=3)
+        eng.run_until_idle()
+        return sampled.result(timeout=5), greedy.result(timeout=5)
+
+    s1, g1 = run()
+    s2, g2 = run()
+    assert s1 == s2                       # restart-deterministic sampling
+    assert g1 == g2 and len(s1) == 4
+    assert all(0 <= t < _FakeSession.vocab for t in s1)
+
+    # a different seed draws a different stream (same everything else)
+    eng = _engine(n_slots=2, max_seq=8)
+    other = eng.submit([1, 2], max_gen=4, temperature=0.8, top_p=0.9,
+                       seed=8)
+    eng.run_until_idle()
+    assert other.result(timeout=5) != s1
+
+
 # --------------------------------------------------------------------------- #
 # Spec plumbing (no devices)
 # --------------------------------------------------------------------------- #
@@ -304,6 +625,35 @@ def test_spec_serving_knobs_validate():
     assert sess.shape_cfg.global_batch == 4
 
 
+def test_spec_paged_knobs_validate():
+    from repro.api import SessionError, session
+
+    with pytest.raises(SessionError, match="serving knob"):
+        session("llama3.2-1b", mode="train", page_size=4)
+    with pytest.raises(SessionError, match="page_size must be"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                page_size=0)
+    with pytest.raises(SessionError, match="divide max_seq"):
+        session("llama3.2-1b", mode="serve", max_seq=18, max_slots=4,
+                page_size=4)
+    with pytest.raises(SessionError, match="needs page_size"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                max_pages=16)
+    with pytest.raises(SessionError, match="pods×data"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                page_size=4, max_pages=7, data=2)
+    with pytest.raises(SessionError, match="prefix_sharing"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                page_size=4, prefix_sharing="maybe")
+    sess = session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                   page_size=4)
+    assert sess.paged and sess.page_size == 4
+    assert sess.pages_per_slot == 4
+    assert sess.n_pages == 16           # default: contiguous footprint
+    plain = session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4)
+    assert not plain.paged and plain.page_size == 0
+
+
 # --------------------------------------------------------------------------- #
 # SPMD cases (subprocess, fake devices)
 # --------------------------------------------------------------------------- #
@@ -322,3 +672,13 @@ def test_train_serve_handoff_roundtrip():
     """mode='serve' sessions boot from a train checkpoint with
     cache-aware relayout; tokens equal a direct param transplant."""
     _run("serve_handoff", "llama3.2-1b")
+
+
+@pytest.mark.slow
+def test_paged_equals_contiguous_serving():
+    """ISSUE-6 correctness bar: greedy paged decoding is token-identical
+    to the contiguous path on the staggered 8-request workload (with
+    peak pages strictly below the contiguous footprint), shared prompts
+    prefill once via the radix, and prefix_sharing='off' still matches
+    with zero hits."""
+    _run("serving_paged_equiv", "llama3.2-1b")
