@@ -31,6 +31,7 @@ from repro.core.pipeline import (
     init_serve_caches,
     make_serve_step,
     make_train_step,
+    serve_cache_pspecs,
 )
 from repro.core.plan import (
     UNIT_GATED_SCHEDULES,
@@ -489,6 +490,21 @@ class Session:
             self._steps["page_copy"] = jax.jit(copy_pages,
                                                donate_argnums=(0,))
         return self._steps["page_copy"](caches, src, dst)
+
+    def sampling_unsupported_reason(self) -> str | None:
+        """None when the serve step can return full next-token logits
+        (the host-side sampling layer's input); otherwise why it cannot.
+        The engine checks this once and rejects ``temperature > 0``
+        submissions up front, so the ``make_serve_step`` layout guards
+        never fire mid-tick against an already-admitted request."""
+        if self.rt.multi_pod:
+            return "logits return is not wired for multi-pod meshes"
+        _, seq_shard, _ = serve_cache_pspecs(self.rt, self.shape_cfg)
+        if seq_shard:
+            return ("the sequence-sharded serve layout cannot return "
+                    "per-slot logits (needs a slot count divisible by "
+                    "the pods×data axes)")
+        return None
 
     def serve_engine(self, params, **kw):
         """A continuous-batching :class:`repro.serving.ServeEngine` over

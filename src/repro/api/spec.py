@@ -220,6 +220,35 @@ class SessionSpec:
                     f"max_pages ({self.max_pages}) must divide evenly "
                     f"over the pods×data axes ({shards}): the page axis "
                     "shards exactly like the slot batch axis")
+        if self.page_size is not None:
+            # the page arena and the slot rows partition over pods×data
+            # × FSDP groups (cache leaves shard over the stage axis, so
+            # a page exists only in the group replica that wrote it) —
+            # catch a bad count here with the full partition count, not
+            # deep in PagePool at engine construction.
+            try:
+                groups = self.resolve_configs()[2].groups
+            except Exception:   # resolution errors surface on their own
+                groups = None
+            if groups is not None and groups > 1:
+                shards = (self.pods or 1) * (self.data or 1)
+                parts = shards * groups
+                if self.max_pages is not None \
+                        and self.max_pages % parts != 0:
+                    raise SessionError(
+                        f"max_pages ({self.max_pages}) must divide "
+                        f"evenly over the {parts} cache partitions "
+                        f"(pods×data ({shards}) × FSDP groups "
+                        f"({groups})): a page lives only in the stage "
+                        "replica of the group that wrote it — round "
+                        f"max_pages to a multiple of {parts}")
+                if self.max_slots is not None \
+                        and self.max_slots % parts != 0:
+                    raise SessionError(
+                        f"max_slots ({self.max_slots}) must divide "
+                        f"evenly over the {parts} cache partitions "
+                        f"(pods×data ({shards}) × FSDP groups "
+                        f"({groups})) for the paged serve path")
         return self
 
     # ------------------------------------------------------------------ #

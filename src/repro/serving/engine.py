@@ -124,6 +124,12 @@ class ServeEngine:
                 f"kinds {seg.kinds} include recurrent state that does "
                 "not carry across prefill chunks")
         session.check_slot_sharding()  # fail before allocating caches
+        # host-side sampling needs the serve step's full-logits return,
+        # which some layouts cannot provide; probe once so submit() can
+        # reject temperature>0 up front instead of NotImplementedError
+        # escaping mid-tick and killing every in-flight request.
+        probe = getattr(session, "sampling_unsupported_reason", None)
+        self._no_sampling = probe() if probe is not None else None
         self.caches = session.init_caches(abstract=False)
         self.stats = EngineStats()
         self._by_slot: dict[int, Request] = {}
@@ -157,6 +163,12 @@ class ServeEngine:
                       max_gen=max_gen, stop=stop, temperature=temperature,
                       top_p=top_p, seed=seed)
         self.pool.validate_prompt(req.prompt_len)  # reject before queuing
+        if not req.sampling.greedy and self._no_sampling is not None:
+            raise NotImplementedError(
+                f"sampling (temperature>0) is unavailable on this "
+                f"session: {self._no_sampling} — submit greedy "
+                "(temperature=0) requests, or rebuild the session on a "
+                "layout that can return logits")
         self.scheduler.submit(req)
         if self._failure is not None or self._closed:
             # the engine died or closed while we enqueued: the final
@@ -346,6 +358,9 @@ class ServeEngine:
             for i, (s_, d_) in enumerate(al.copies):
                 src[i], dst[i] = s_, d_
             self.caches = self.session.copy_pages(self.caches, src, dst)
+            # the sources' bytes are duplicated now: drop the admission
+            # pins so the radix may evict them under page pressure again
+            self.pool.copies_done(req.slot)
 
     def _prefill_admitted(self, reqs: list[Request]) -> None:
         """Prefill the admitted requests' prompts into their slots.

@@ -35,7 +35,7 @@ import heapq
 
 import numpy as np
 
-from repro.serving.slots import SlotView
+from repro.serving.slots import WAIT_PREFIX, SlotView
 
 
 class PagePool:
@@ -135,6 +135,8 @@ class PageAllocation:
     pages: list[int]                # global ids this request holds refs on
     fresh: list[int]                # newly allocated -> device reset
     copies: list[tuple[int, int]]   # (src_gid, dst_gid) device page copies
+    src_refs: list[int]             # copy sources pinned until the engine
+    #                                 executes the copies (copies_done)
     n_shared: int                   # prefix pages satisfied from the radix
     n_prompt_pages: int             # pages fully covered by the prompt
     pending_key: tuple | None       # co-admission dedup key (held until
@@ -158,7 +160,10 @@ class PagedSlotPool:
     unreferenced prefix pages. A prompt whose worst-case page span
     (``ceil(min(prompt+max_gen, max_seq)/page_size)``) exceeds one
     partition's pool can never run and raises; a merely-busy pool defers
-    (returns None) like a full SlotPool.
+    (returns None) like a full SlotPool, and a request whose prefix is
+    being prefilled by an in-flight neighbour answers
+    :data:`~repro.serving.slots.WAIT_PREFIX` so the scheduler can admit
+    unrelated requests past it.
     """
 
     def __init__(self, n_slots: int, max_seq: int, *, page_size: int,
@@ -214,6 +219,8 @@ class PagedSlotPool:
         if s.alloc is not None:
             for gid in s.alloc.pages:
                 self.pool.unref(gid)
+            for gid in s.alloc.src_refs:  # copies never executed
+                self.pool.unref(gid)
             self._pending_keys.discard(s.alloc.pending_key)
             s.alloc = None
         s.request_id = None
@@ -268,14 +275,20 @@ class PagedSlotPool:
         horizon = min(prompt_len + max_gen, self.max_seq)
         return -(-horizon // self.page_size)
 
-    def _first_key(self, prompt: np.ndarray) -> tuple:
-        return tuple(int(t) for t in prompt[: self.page_size])
+    def _page_keys(self, prompt: np.ndarray, n: int) -> tuple:
+        """The first ``n`` full prompt pages as a tuple of token tuples."""
+        ps = self.page_size
+        return tuple(tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+                     for i in range(n))
 
-    def try_admit(self, req) -> PagedSlotView | None:
+    def try_admit(self, req):
         """Admit one request: pick the free slot whose partition caches
         the most of its prefix, reserve its worst-case page span (evicting
-        if needed), and return the view — or None to defer. Raises
-        ValueError for requests that can never fit."""
+        if needed), and return the view. Returns None to defer on
+        capacity (admission stops for the tick), or :data:`WAIT_PREFIX`
+        when a same-prefix prefill is in flight (queue neighbours may be
+        admitted past this request). Raises ValueError for requests that
+        can never fit."""
         self.validate_prompt(req.prompt_len)
         L = req.prompt_len
         need_total = self.pages_needed(L, req.max_gen)
@@ -286,12 +299,22 @@ class PagedSlotPool:
         chain = (self.radix.match(req.prompt, max_match)
                  if self.radix is not None else [])
         if self.radix is not None and max_match > len(chain) \
-                and L >= self.page_size \
-                and self._first_key(req.prompt) in self._pending_keys:
-            # a same-prefix request is mid-prefill: admitting now would
-            # re-prefill the shared pages it is about to cache — defer
-            # one tick and hit the radix instead.
-            return None
+                and self._pending_keys:
+            # defer only if some in-flight prefill covers MORE of this
+            # prompt than the radix already does: admitting now would
+            # re-prefill pages that request is about to cache. Keyed on
+            # the full matched extent (not just the first page), so a
+            # request that merely shares a page-one prefix — or whose
+            # chain already covers the overlap — admits immediately.
+            mine = self._page_keys(req.prompt, max_match)
+            for pend in self._pending_keys:
+                common = 0
+                for a, b in zip(mine, pend):
+                    if a != b:
+                        break
+                    common += 1
+                if common > len(chain):
+                    return WAIT_PREFIX
 
         def local_hits(part: int) -> int:
             return sum(part in nd.pages for nd in chain)
@@ -353,12 +376,21 @@ class PagedSlotPool:
 
         # 2) cross-partition prefix hits: a local page + a device copy
         #    instead of a recompute; register the copy so the next
-        #    request in this partition shares it for free.
+        #    request in this partition shares it for free. The SOURCE is
+        #    ref-pinned until the engine has executed the copy: a later
+        #    admission landing in the source's partition could otherwise
+        #    evict a trie-only source and re-allocate it as a fresh page
+        #    — fresh pages are zeroed before any copy runs, so the copy
+        #    (and, through the registered destination, every future
+        #    sharer) would silently read zeros.
         copies: list[tuple[int, int]] = []
+        src_refs: list[int] = []
         for i, nd in enumerate(chain):
             if local_pages[i] is None:
                 src = nd.pages[min(p2 for p2 in nd.pages
                                    if self.pool.group_of(p2) == grp)]
+                self.pool.ref(src)
+                src_refs.append(src)
                 dst = next(fresh_iter)
                 copies.append((src, dst))
                 self.radix.register(nd, part, dst)
@@ -375,7 +407,7 @@ class PagedSlotPool:
         n_prompt_pages = L // self.page_size
         pending = None
         if self.radix is not None and n_prompt_pages > len(chain):
-            pending = self._first_key(req.prompt)
+            pending = self._page_keys(req.prompt, n_prompt_pages)
             self._pending_keys.add(pending)
         if chain:
             self.prefix_hits += 1
@@ -388,9 +420,20 @@ class PagedSlotPool:
         # set as ``held``: locally-shared refs plus every fresh alloc.
         slot.alloc = PageAllocation(
             start_pos=start_pos, table=table, pages=pages, fresh=fresh,
-            copies=copies, n_shared=len(chain),
+            copies=copies, src_refs=src_refs, n_shared=len(chain),
             n_prompt_pages=n_prompt_pages, pending_key=pending)
         return slot
+
+    def copies_done(self, index: int) -> None:
+        """The engine executed slot ``index``'s page copies: drop the
+        admission-time pins on the copy sources (from here on they live
+        through the radix / their other-partition holders)."""
+        al = self.slots[index].alloc
+        if al is None:
+            return
+        for gid in al.src_refs:
+            self.pool.unref(gid)
+        al.src_refs = []
 
     def note_prefilled(self, index: int, prompt: np.ndarray) -> None:
         """The request in slot ``index`` finished its prefill: its fully-

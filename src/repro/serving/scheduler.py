@@ -19,7 +19,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.serving.slots import SlotPool
+from repro.serving.slots import WAIT_PREFIX, SlotPool
 
 _ids = itertools.count()
 
@@ -145,6 +145,12 @@ class RequestScheduler:
         that single request and admission of its queue neighbours
         continues — an exception escaping here would kill the daemon
         driver and strand every in-flight request.
+
+        A pool may also answer ``WAIT_PREFIX`` for a request that should
+        wait on an in-flight same-prefix prefill: that request keeps its
+        queue position but admission continues past it, so a deferred
+        head never blocks unrelated neighbours behind it (None still
+        means out-of-capacity and stops admission for the tick).
         """
         admitted: list[Request] = []
         rejected: list[tuple[Request, Exception]] = []
@@ -154,17 +160,21 @@ class RequestScheduler:
             limit = (self.policy.max_prefills_per_tick
                      if self.policy.mode == "continuous"
                      else pool.n_slots)
-            while self._queue and len(admitted) < limit:
-                req = self._queue[0]
+            i = 0
+            while i < len(self._queue) and len(admitted) < limit:
+                req = self._queue[i]
                 try:
                     s = pool.try_admit(req)
                 except ValueError as e:
-                    self._queue.pop(0)
+                    self._queue.pop(i)
                     rejected.append((req, e))
+                    continue
+                if s is WAIT_PREFIX:
+                    i += 1
                     continue
                 if s is None:
                     break
-                self._queue.pop(0)
+                self._queue.pop(i)
                 req.slot = s.index
                 admitted.append(req)
         return admitted, rejected

@@ -17,6 +17,20 @@ import dataclasses
 import numpy as np
 
 
+class _WaitPrefix:
+    """``try_admit`` verdict distinct from None: this request should
+    wait for an in-flight same-prefix prefill (its shared pages are
+    about to be cached), but the pool itself has capacity — the
+    scheduler may admit queue neighbours past it instead of stalling
+    admission for the tick."""
+
+    def __repr__(self) -> str:
+        return "WAIT_PREFIX"
+
+
+WAIT_PREFIX = _WaitPrefix()
+
+
 @dataclasses.dataclass
 class SlotView:
     """One cache row: independent position/length state for one request."""

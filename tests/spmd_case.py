@@ -753,6 +753,14 @@ def case_serving_paged_equiv(arch: str = "llama3.2-1b"):
     print(f"  shared prompt: {st.prefix_hits} hits, "
           f"{st.prefix_hit_tokens} cached tokens, prefilled "
           f"{st.prefill_tokens}/{total} prompt tokens")
+    # no leaked refs: with every request finished, only the radix holds
+    # pages — refcount exactly 1 on each live page (a stuck copy-source
+    # pin or an unreturned request ref would show up as 2+)
+    pp = eng.pool.pool
+    live = [g for g in range(pp.n_pages) if pp.refcount(g) > 0]
+    assert live, "shared prefix left nothing cached"
+    bad = {g: pp.refcount(g) for g in live if pp.refcount(g) != 1}
+    assert not bad, f"leaked page references: {bad}"
 
     # prefix_sharing='off' escape hatch still decodes identically
     sess_o = session(arch, mode="serve", data=2, max_slots=4, max_seq=24,

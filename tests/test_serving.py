@@ -317,18 +317,122 @@ def test_paged_admission_evicts_under_pressure_and_defers():
 
 def test_paged_pending_key_defers_co_admitted_twin():
     """A same-prefix request admitted while its twin is still mid-prefill
-    would re-prefill the shared pages; it defers one tick and then hits
-    the radix."""
+    would re-prefill the shared pages; it answers WAIT_PREFIX (not the
+    out-of-capacity None) until the twin's radix insert, then hits it."""
     from repro.serving import PagedSlotPool
+    from repro.serving.slots import WAIT_PREFIX
 
     pool = PagedSlotPool(2, max_seq=16, page_size=4, n_pages=8)
     prompt = np.arange(9, dtype=np.int32)
     a = pool.try_admit(_preq(prompt))
-    assert pool.try_admit(_preq(prompt)) is None    # twin: wait a tick
+    assert pool.try_admit(_preq(prompt)) is WAIT_PREFIX   # twin: wait
     pool.note_prefilled(a.index, prompt)
     b = pool.try_admit(_preq(prompt))
     assert b is not None and b.alloc.n_shared == 2
     assert b.alloc.start_pos == 8
+
+
+def test_paged_pending_defer_narrows_to_matched_extent():
+    """REVIEW follow-up: the co-admission defer keys on the full pending
+    prompt-page extent, not just the first page — a queued request whose
+    cached chain already covers everything the in-flight prefill shares
+    with it has nothing to gain by waiting and admits immediately."""
+    from repro.serving import PagedSlotPool
+    from repro.serving.slots import WAIT_PREFIX
+
+    pool = PagedSlotPool(4, max_seq=16, page_size=4, n_pages=16)
+    base = list(range(8))                           # 2 full shared pages
+    r1 = pool.try_admit(_preq(base + [9]))
+    pool.note_prefilled(r1.index, np.asarray(base + [9], np.int32))
+    pool.release(r1.index)                          # pages 0-1 cached
+    # in-flight prefill: shares page 0 with `base`, then diverges
+    a = pool.try_admit(_preq(base[:4] + [50, 51, 52, 53, 54]))
+    assert a is not None and a.alloc.pending_key is not None
+    # shares only page 0 with A's pending prefill, and its own cached
+    # chain already covers pages 0-1: admit now (the old first-page key
+    # would have deferred this behind A's whole chunked prefill)
+    b = pool.try_admit(_preq(base + [77, 78, 79, 80, 81]))
+    assert b is not None and b.alloc.n_shared == 2
+    # a true twin of A still waits — with the sentinel, not None
+    assert pool.try_admit(_preq(base[:4] + [50, 51, 52, 53, 99])) \
+        is WAIT_PREFIX
+
+
+def test_scheduler_admits_past_prefix_waiting_request():
+    """REVIEW follow-up: a WAIT_PREFIX verdict at the queue head no
+    longer stalls the whole FIFO — neighbours behind it are admitted,
+    the waiter keeps its queue position, and it admits with the shared
+    pages once the holder's prefill completes."""
+    from repro.serving import PagedSlotPool, RequestScheduler
+
+    sched = RequestScheduler()
+    pool = PagedSlotPool(4, max_seq=16, page_size=4, n_pages=16)
+    prompt = np.arange(9, dtype=np.int32)
+    holder = _preq(prompt)
+    sched.submit(holder)
+    admitted, _ = sched.admit(pool)
+    assert [r.id for r in admitted] == [holder.id]
+    twin, other = _preq(prompt), _preq(50 + np.arange(5))
+    sched.submit(twin)
+    sched.submit(other)
+    admitted, _ = sched.admit(pool)
+    assert [r.id for r in admitted] == [other.id]   # skipped the twin
+    assert sched.n_queued == 1
+    pool.note_prefilled(holder.slot, prompt)
+    admitted, _ = sched.admit(pool)
+    assert [r.id for r in admitted] == [twin.id]
+    assert pool.slots[twin.slot].alloc.n_shared == 2
+
+
+def test_paged_copy_sources_pinned_until_copies_executed():
+    """REVIEW fix (high): a cross-partition copy SOURCE is ref-pinned at
+    admission, so a later admission landing in the source's partition
+    cannot LRU-evict it and re-allocate it as a fresh page — fresh pages
+    are zeroed before any copy runs, so the copy (and every future
+    sharer of the registered destination) would silently read zeros.
+    The pin drops once the engine has executed the copies."""
+    from repro.serving import PagedSlotPool
+
+    prompt = np.arange(7, dtype=np.int32)           # 1 full page
+    pool = PagedSlotPool(2, max_seq=8, page_size=4, n_pages=4, shards=2)
+    a = pool.try_admit(_preq(prompt, max_gen=1))    # slot 0, partition 0
+    pool.note_prefilled(a.index, prompt)            # page 0 in the radix
+    src = a.alloc.pages[0]
+    c = pool.try_admit(_preq(prompt, max_gen=1))    # slot 1, partition 1
+    assert len(c.alloc.copies) == 1
+    assert c.alloc.copies[0][0] == src
+    assert c.alloc.src_refs == [src]
+    assert pool.pool.refcount(src) == 3             # A + trie + C's pin
+    pool.release(a.index)
+    assert pool.pool.refcount(src) == 2             # trie + C's pin
+    # page pressure in the SOURCE partition while the copy is pending:
+    # eviction must not take the pinned source — admission defers
+    big = _preq(50 + np.arange(7), max_gen=4)       # needs both pages
+    assert pool.try_admit(big) is None
+    assert pool.pool.refcount(src) == 2 and pool.radix.evictions == 0
+    # the engine ran the copy: pin drops, eviction may proceed
+    pool.copies_done(c.index)
+    assert c.alloc.src_refs == []
+    assert pool.pool.refcount(src) == 1             # trie only
+    assert pool.try_admit(big) is not None
+    assert pool.radix.evictions == 1
+
+
+def test_paged_release_before_copy_returns_source_pins():
+    """A request released with its copies never executed (e.g. the tick
+    failed between admission and the device copy) must return its
+    source pins too — otherwise the source page could never go free."""
+    from repro.serving import PagedSlotPool
+
+    prompt = np.arange(7, dtype=np.int32)
+    pool = PagedSlotPool(2, max_seq=8, page_size=4, n_pages=4, shards=2)
+    a = pool.try_admit(_preq(prompt, max_gen=1))    # pins partition 0
+    pool.note_prefilled(a.index, prompt)
+    c = pool.try_admit(_preq(prompt, max_gen=1))    # partition 1: copy
+    src = c.alloc.copies[0][0]
+    assert pool.pool.refcount(src) == 3             # A + trie + pin
+    pool.release(c.index)                           # copies never ran
+    assert pool.pool.refcount(src) == 2             # pin returned
 
 
 def test_paged_sharing_off_keeps_pages_private():
@@ -442,6 +546,10 @@ class _FakeSession:
         self.paged = False
         self._seq = max_seq
         self.calls = np.zeros(n_slots, np.int64)
+        self.no_sampling = None     # layout's sampling_unsupported reason
+
+    def sampling_unsupported_reason(self):
+        return self.no_sampling
 
     def _max_seq(self):
         return self._seq
@@ -576,6 +684,25 @@ def test_engine_poisoned_request_fails_alone():
     assert eng._failure is None                # engine still healthy
 
 
+def test_engine_rejects_sampling_on_unsupported_layout():
+    """REVIEW fix: temperature>0 on a session whose serve step cannot
+    return logits (multi-pod mesh / seq-sharded layout) is rejected at
+    submit() — before queuing — instead of NotImplementedError surfacing
+    mid-tick, failing the engine and stranding every greedy neighbour."""
+    from repro.serving import ServeEngine
+
+    fake = _FakeSession(2, 8)
+    fake.no_sampling = "logits return is not wired for multi-pod meshes"
+    eng = ServeEngine(fake, params=None)
+    greedy = eng.submit([1, 2], max_gen=2)          # greedy still fine
+    with pytest.raises(NotImplementedError, match="multi-pod"):
+        eng.submit([3, 4], max_gen=2, temperature=0.7)
+    assert eng.scheduler.n_queued == 1              # nothing was queued
+    eng.run_until_idle()
+    assert len(greedy.result(timeout=5)) == 2
+    assert eng._failure is None                     # engine healthy
+
+
 def test_engine_sampling_deterministic_across_restarts():
     """Same (prompt, temperature, top_p, seed) -> same sampled tokens on
     a fresh engine: the per-request generator advances once per emitted
@@ -645,6 +772,20 @@ def test_spec_paged_knobs_validate():
     with pytest.raises(SessionError, match="prefix_sharing"):
         session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
                 page_size=4, prefix_sharing="maybe")
+    # REVIEW fix: the page arena partitions over shards×groups, so a
+    # max_pages/max_slots that only divides the pods×data axes must be
+    # rejected at spec time, not by PagePool at engine construction
+    with pytest.raises(SessionError, match="FSDP groups"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                page_size=4, max_pages=10, data=2,
+                overrides=dict(groups=2))
+    with pytest.raises(SessionError, match="FSDP groups"):
+        session("llama3.2-1b", mode="serve", max_seq=16, max_slots=2,
+                page_size=4, overrides=dict(groups=4))
+    ok = session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
+                 page_size=4, max_pages=16, data=2,
+                 overrides=dict(groups=2))
+    assert ok.n_pages == 16
     sess = session("llama3.2-1b", mode="serve", max_seq=16, max_slots=4,
                    page_size=4)
     assert sess.paged and sess.page_size == 4
