@@ -24,7 +24,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json",
-                    default=os.path.join(_REPO_ROOT, "BENCH_pr6.json"),
+                    default=os.path.join(_REPO_ROOT, "BENCH_pr7.json"),
                     help="machine-readable rows artifact ('' to skip)")
     args = ap.parse_args()
 
@@ -47,6 +47,7 @@ def main() -> None:
     rows += kernel_bench()
     rows += serving_bench.serving_rows()
     rows += serving_bench.paged_prefix_rows()
+    rows += serving_bench.decode_attention_rows()
     rows += comm_bench.bench_rows()
 
     print("\n=== CSV (name,us_per_call,derived) ===")

@@ -163,8 +163,86 @@ def paged_prefix_rows(n_requests: int = 8, sys_prompt: int = 256,
     return rows
 
 
+def _cache_bytes(sess) -> int:
+    import numpy as np
+
+    total = 0
+    for leaf in __import__("jax").tree_util.tree_leaves(
+            sess.init_caches(abstract=True)):
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def decode_attention_rows(n_requests: int = 8, prompt: int = 4,
+                          max_gen: int = 16, page_size: int = 8,
+                          seed: int = 0):
+    """Decode-attention throughput: contiguous rows vs paged pools, fp32
+    vs int8 pages.
+
+    A decode-heavy workload (short prompts, long generations) so the
+    timed region is dominated by the cached-attention step the slot-aware
+    kernel owns. Reported per variant: decode tok/s, per-decode-step
+    latency, and the KV-cache footprint in bytes (the int8 rows carry
+    the per-page scale leaves in their total — the memory the quantized
+    pages actually cost, not just the pools).
+    """
+    ensure_host_devices()
+    import jax
+    import numpy as np
+
+    from repro.api import session
+
+    rng = np.random.RandomState(seed)
+    need = prompt + max_gen + 1
+    max_seq = -(-need // page_size) * page_size
+
+    variants = [
+        ("contiguous_fp32", dict(kv_cache_dtype="fp32")),
+        ("paged_fp32", dict(page_size=page_size, kv_cache_dtype="fp32")),
+        ("paged_int8", dict(page_size=page_size, kv_cache_dtype="int8")),
+    ]
+    rows = []
+    print("\n=== serving: decode attention — contiguous vs paged, fp32 "
+          f"vs int8 pages ({n_requests} requests x {max_gen} decode "
+          f"tokens, page_size {page_size}) ===")
+    work = None
+    tok_s_by = {}
+    for name, kw in variants:
+        sess = session("llama3.2-1b", mode="serve", data=2, max_slots=4,
+                       max_seq=max_seq, overrides=dict(microbatches=2),
+                       **kw)
+        if work is None:
+            vocab = sess.cfg.vocab
+            work = [(rng.randint(0, vocab, size=prompt).astype(np.int32),
+                     max_gen) for _ in range(n_requests)]
+        params = sess.init_params(jax.random.PRNGKey(0))
+        cache_b = _cache_bytes(sess)
+        _drive(sess, params, work, "continuous")   # warm the jit caches
+        st, dt = _drive(sess, params, work, "continuous")
+        tok_s = st.generated_tokens / max(dt, 1e-9)
+        tok_s_by[name] = tok_s
+        per_step = dt / max(st.decode_steps + st.prefill_steps, 1)
+        rows.append((f"serving/decode_{name}", per_step * 1e6,
+                     f"tok_s={tok_s:.2f};cache_bytes={cache_b};"
+                     f"decode_steps={st.decode_steps}"))
+        print(f"  {name:15s}: {st.generated_tokens} tokens in {dt:.3f}s "
+              f"({tok_s:.1f} tok/s), cache {cache_b / 1e6:.2f} MB")
+    shrink = None
+    for r in rows:
+        if r[0].endswith("paged_fp32"):
+            fp_b = int(r[2].split("cache_bytes=")[1].split(";")[0])
+        if r[0].endswith("paged_int8"):
+            q_b = int(r[2].split("cache_bytes=")[1].split(";")[0])
+    shrink = fp_b / max(q_b, 1)
+    rows.append(("serving/decode_int8_cache_shrink", 0.0,
+                 f"x={shrink:.3f}"))
+    print(f"  int8 page-pool shrink vs fp32: {shrink:.2f}x "
+          f"(scales included)")
+    return rows
+
+
 def main():
-    rows = serving_rows() + paged_prefix_rows()
+    rows = serving_rows() + paged_prefix_rows() + decode_attention_rows()
     print("\n=== CSV (name,us_per_call,derived) ===")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")

@@ -88,6 +88,11 @@ class Session:
         self._data: int | None = spec.data
         self._rt: Runtime | None = None
         self._steps: dict[Any, Any] = {}
+        # baseline for the per-session kernel-dispatch counters: counts
+        # are process-wide and trace-time, so describe() reports deltas
+        # accumulated since this session was constructed.
+        from repro.kernels import ops as _ops
+        self._kernel_counter_base = _ops.kernel_counters()
         # schedule="auto": run the §4 plan selection now (device-free —
         # pure table generation + discrete-event simulation), so the rest
         # of the session sees a concrete schedule name + plan.
@@ -717,7 +722,31 @@ class Session:
                     for sg in geo.segments],
             },
             "schedule": sched,
+            "kernels": self._kernel_report(),
             "n_params": n_params,
+        }
+
+    def _kernel_report(self) -> dict:
+        """Kernel-dispatch summary for ``describe()["kernels"]``.
+
+        ``counters`` are per-session deltas of the trace-time dispatch
+        counters (one count per traced call site, not per executed
+        step); ``fallbacks`` isolates the calls where Pallas was
+        selected but the shape/backend combination still forced the
+        reference path — after the slot-aware kernel this should stay
+        empty on the serving hot path.
+        """
+        from repro.kernels import ops as _ops
+        now = _ops.kernel_counters()
+        base = self._kernel_counter_base
+        delta = {k: v - base.get(k, 0) for k, v in now.items()
+                 if v - base.get(k, 0) > 0}
+        return {
+            "impl": self.rc.kernel_impl or "auto",
+            "kv_cache_dtype": self.rc.kv_cache_dtype or "compute",
+            "counters": delta,
+            "fallbacks": {k: v for k, v in delta.items()
+                          if k.startswith("fallback_")},
         }
 
     def __repr__(self):

@@ -79,6 +79,10 @@ class SessionSpec:
     prefix_sharing: str = "on"      # radix prefix sharing across
     #                                 requests ("off": escape hatch —
     #                                 pages stay private per request)
+    kv_cache_dtype: str | None = None  # KV-cache storage dtype: "fp32" |
+    #                                    "bf16" | "int8" (int8 = quantized
+    #                                    pages, needs page_size). Shorthand
+    #                                    for overrides["kv_cache_dtype"].
     mesh: Any = None                # pre-built jax Mesh (advanced)
 
     def __post_init__(self):
@@ -102,6 +106,14 @@ class SessionSpec:
                     f"coalesce={self.coalesce!r} vs "
                     f"overrides['coalesce']={prev!r}")
             self.overrides["coalesce"] = self.coalesce
+        if self.kv_cache_dtype is not None:
+            prev = self.overrides.get("kv_cache_dtype")
+            if prev is not None and prev != self.kv_cache_dtype:
+                raise SessionError(
+                    f"kv_cache_dtype given twice and inconsistently: "
+                    f"kv_cache_dtype={self.kv_cache_dtype!r} vs "
+                    f"overrides['kv_cache_dtype']={prev!r}")
+            self.overrides["kv_cache_dtype"] = self.kv_cache_dtype
 
     # ------------------------------------------------------------------ #
     def validate(self) -> "SessionSpec":
@@ -133,6 +145,28 @@ class SessionSpec:
                 f"unknown coalesce mode {co!r}; pick 'flat' (one "
                 "collective per stage segment per tick) or 'none' "
                 "(per-tensor collectives)")
+        ki = self.overrides.get("kernel_impl")
+        if ki not in (None, "ref", "pallas"):
+            raise SessionError(
+                f"unknown kernel_impl {ki!r}; pick 'pallas' (force the "
+                "Pallas kernels; interpret mode off-TPU), 'ref' (jnp "
+                "references), or None (backend default)")
+        kvd = self.overrides.get("kv_cache_dtype")
+        if kvd is not None:
+            if kvd not in ("fp32", "bf16", "int8"):
+                raise SessionError(
+                    f"unknown kv_cache_dtype {kvd!r}; pick 'fp32', "
+                    "'bf16', or 'int8' (quantized pages)")
+            if self.mode != "serve":
+                raise SessionError(
+                    "kv_cache_dtype is a serving knob (KV-cache storage "
+                    f"dtype); this session is mode={self.mode!r}")
+            if kvd == "int8" and self.page_size is None:
+                raise SessionError(
+                    "kv_cache_dtype='int8' quantizes *pages* (per-page "
+                    "scales live beside the page pool); pass "
+                    "page_size=<tokens per page> — contiguous slot rows "
+                    "have no scale storage")
         from repro.core.plan import PRESETS
         if self.cost_preset not in PRESETS:
             raise SessionError(

@@ -848,9 +848,16 @@ def make_cache_io(cfg, rc, seg, *, seq_shard: bool, g_rank, Btot: int,
     """
 
     def cache_get(tree, j, v, u):
+        # iterate the tree's own keys (not the layer spec's) so extra
+        # leaves riding beside the pools — e.g. int8 per-page scales —
+        # flow to the stage; the trailing dot keeps L1 from matching L10
         out = {}
-        for n in M.layer_cache_spec(cfg, rc, seg.kinds[j], 1, 1):
-            a = tree[f"L{j}.{n}"]
+        pfx = f"L{j}."
+        for key in tree:
+            if not key.startswith(pfx):
+                continue
+            n = key[len(pfx):]
+            a = tree[key]
             av = jax.lax.dynamic_index_in_dim(a, v, 0, keepdims=False)
             if paged or seq_shard:
                 out[n] = av  # whole pool / full local batch

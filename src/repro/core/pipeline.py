@@ -506,6 +506,12 @@ def serve_cache_pspecs(rt: Runtime, shape_cfg, paged: bool = False):
                 else:
                     dims = [MODEL, bspec] + [None] * (len(s.shape) - 1)
                 slots[f"L{j}.{n}"] = P(*dims)
+                if paged and rt.rc.kv_cache_dtype == "int8" and n in (
+                        "k", "v", "ckv"):
+                    # per-page(×head) scales: [M·V, n_pages, ...] — the
+                    # page axis shards exactly like its pool's.
+                    slots[f"L{j}.{n}_scale"] = P(
+                        *([MODEL, bspec] + [None] * (len(s.shape) - 3)))
         tree[seg.name] = slots
     if rt.cfg.encdec is not None:
         tree["enc_memory"] = P(bspec)
@@ -534,11 +540,18 @@ def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True,
         V = seg.vpp
         slots = {}
         for j, kind in enumerate(seg.kinds):
-            cs = M.layer_cache_spec(cfg, rc, kind, gb, max_seq)
-            for n, s in cs.items():
+            cs = dict(M.layer_cache_spec(cfg, rc, kind, gb, max_seq))
+            for n in list(cs):
+                s = cs[n]
                 if page_size and n in ("k", "v", "ckv"):
-                    s = jax.ShapeDtypeStruct(
+                    cs[n] = jax.ShapeDtypeStruct(
                         (n_pages, page_size) + s.shape[2:], s.dtype)
+                    if rc.kv_cache_dtype == "int8":
+                        # scales live beside the pool and move with its
+                        # pages through reset_pages/copy_pages (any leaf
+                        # with the page axis at dim 1 is handled there)
+                        cs[n + "_scale"] = jax.ShapeDtypeStruct(
+                            (n_pages,) + s.shape[2:-1], jnp.float32)
                 elif page_size:
                     raise ValueError(
                         f"paged serving covers attention caches only; "
@@ -546,6 +559,7 @@ def init_serve_caches(rt: Runtime, shape_cfg, max_seq=None, abstract=True,
                         f"({n!r}) that has no page layout — set "
                         "prefix_sharing='off' / page_size=0 for this "
                         "architecture")
+            for n, s in cs.items():
                 shape = (rt.G * rt.Pe * V,) + s.shape
                 sh = NamedSharding(rt.mesh, pspecs[seg.name][f"L{j}.{n}"])
                 slots[f"L{j}.{n}"] = (

@@ -3,6 +3,12 @@
 All model code calls through these functions. The choice is made per-call
 from (a) the default backend, (b) the ``REPRO_FORCE_REF`` env var, and
 (c) an explicit ``impl=`` override — so tests can compare both paths.
+
+Every dispatch decision bumps a trace-time counter (``kernel_counters``):
+one count per *traced call site*, not per executed step, since dispatch
+happens in Python while jit-tracing. ``Session.describe()["kernels"]``
+reports per-session deltas; ``fallback_*`` keys mark calls where Pallas
+was selected but the shape/backend combination still forced the ref path.
 """
 
 from __future__ import annotations
@@ -14,7 +20,19 @@ import jax
 from repro.kernels import ref
 
 _FORCE_REF = os.environ.get("REPRO_FORCE_REF", "0") == "1"
-_WARNED_VECTOR_OFFSET = False
+
+# Trace-time dispatch counters, keyed by implementation event. Monotonic
+# process-wide; consumers snapshot and diff (see Session.describe()).
+_COUNTERS: dict[str, int] = {}
+
+
+def _count(event: str) -> None:
+    _COUNTERS[event] = _COUNTERS.get(event, 0) + 1
+
+
+def kernel_counters() -> dict[str, int]:
+    """Snapshot of the trace-time dispatch counters (copy, safe to keep)."""
+    return dict(_COUNTERS)
 
 
 def _on_tpu() -> bool:
@@ -32,38 +50,83 @@ def _use_pallas(impl: str | None) -> bool:
     return _on_tpu() and not _FORCE_REF
 
 
+def _interpret() -> bool:
+    # explicit impl="pallas" off-TPU runs the kernels in interpret mode
+    # (CPU tests); on TPU they compile for real.
+    return not _on_tpu()
+
+
 # --------------------------------------------------------------------------- #
 
 
 def attention(q, k, v, *, causal=True, q_offset=0, block_k=512, impl=None):
-    # per-row q_offset vectors (slotted serving) are only implemented by
-    # the reference path; the Pallas kernel takes a scalar offset.
-    if getattr(q_offset, "ndim", 0):
-        if _use_pallas(impl):
-            global _WARNED_VECTOR_OFFSET
-            if not _WARNED_VECTOR_OFFSET:
-                _WARNED_VECTOR_OFFSET = True
-                import warnings
-
-                warnings.warn(
-                    "per-row q_offset (slotted serving) falls back to "
-                    "the reference attention kernel on this backend; "
-                    "expect a perf hit vs the Pallas path, and token "
-                    "identity with scalar-pos serving only holds within "
-                    "one kernel implementation", stacklevel=2)
-        impl = "ref"
+    vector_off = getattr(q_offset, "ndim", 0) == 1
+    traced_off = isinstance(q_offset, jax.core.Tracer) or vector_off or (
+        getattr(q_offset, "ndim", None) == 0
+    )
     if _use_pallas(impl):
-        from repro.kernels import flash_attention
+        if causal and traced_off:
+            # slot-aware kernel: per-row (or traced scalar) positions are
+            # applied in-kernel; no ref fallback on the serving hot path.
+            from repro.kernels import paged_attention as pa
 
-        return flash_attention.flash_attention(
-            q, k, v, causal=causal, q_offset=q_offset
-        )
+            _count("pallas_slotted")
+            import jax.numpy as jnp
+
+            pos = jnp.asarray(q_offset, jnp.int32).reshape(-1)
+            return pa.flash_attention_slotted(
+                q, k, v, pos=pos, block_k=min(block_k, 128),
+                interpret=_interpret())
+        if not traced_off:
+            # static scalar offset: the training-path flash kernel.
+            _count("pallas_flash")
+            from repro.kernels import flash_attention
+
+            return flash_attention.flash_attention(
+                q, k, v, causal=causal, q_offset=q_offset,
+                interpret=_interpret())
+        # non-causal with traced offset has no Pallas lowering; visible
+        # (counted) fallback rather than a once-per-process warning.
+        _count("fallback_attention_ref")
+        impl = "ref"
+    else:
+        _count("ref_attention")
     return ref.attention(
         q, k, v, causal=causal, q_offset=q_offset, block_k=block_k
     )
 
 
+def paged_attention(q, k_pool, v_pool, *, page_tables, pos, k_scale=None,
+                    v_scale=None, slot_mask=None, block_k=512, impl=None):
+    """Attention straight out of a paged KV pool (optionally int8 pages).
+
+    Pallas path runs the page-table-native kernel (dequant in-kernel);
+    ref path gathers + dequants with jnp and reuses ``ref.attention`` —
+    identical math, so CPU tests pin the numerics.
+    """
+    if _use_pallas(impl):
+        _count("pallas_paged")
+        from repro.kernels import paged_attention as pa
+
+        return pa.paged_attention(
+            q, k_pool, v_pool, page_tables=page_tables, pos=pos,
+            k_scale=k_scale, v_scale=v_scale, slot_mask=slot_mask,
+            interpret=_interpret())
+    _count("ref_paged")
+    return ref.paged_attention(
+        q, k_pool, v_pool, page_tables=page_tables, pos=pos,
+        k_scale=k_scale, v_scale=v_scale, slot_mask=slot_mask,
+        block_k=block_k)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len=None, impl=None):
+    if _use_pallas(impl):
+        _count("pallas_decode")
+        from repro.kernels import paged_attention as pa
+
+        return pa.decode_attention(
+            q, k_cache, v_cache, cache_len, interpret=_interpret())
+    _count("ref_decode")
     return ref.decode_attention(q, k_cache, v_cache, cache_len=cache_len)
 
 

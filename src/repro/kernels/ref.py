@@ -143,6 +143,44 @@ def decode_attention(q, k_cache, v_cache, cache_len=None, scale=None):
     return jnp.einsum("bhqe->bqhe", out).astype(q.dtype), (m, l, acc)
 
 
+def paged_gather(pool, page_tables, scale=None):
+    """Materialize per-row KV from a page pool.
+
+    pool: [n_pages, ps, ...]; page_tables: [b, ppr] int32 (sentinel tail
+    ids allowed — callers mask those positions causally); scale:
+    optional [n_pages, ...head-dims] per-page dequant scales for int8
+    pools. Returns [b, ppr*ps, ...] in f32 when dequantizing, else the
+    pool dtype.
+    """
+    pt = jnp.clip(page_tables.astype(jnp.int32), 0, pool.shape[0] - 1)
+    g = jnp.take(pool, pt, axis=0)  # [b, ppr, ps, ...]
+    if scale is not None:
+        sg = jnp.take(scale.astype(jnp.float32), pt, axis=0)  # [b, ppr, ...]
+        sg = sg.reshape(sg.shape[:2] + (1,) + sg.shape[2:] + (1,))
+        g = g.astype(jnp.float32) * sg
+    return g.reshape((pt.shape[0], -1) + pool.shape[2:])
+
+
+def paged_attention(q, k_pool, v_pool, *, page_tables, pos, k_scale=None,
+                    v_scale=None, slot_mask=None, block_k=512, scale=None):
+    """Oracle for the paged Pallas kernel: gather + dequant + attention.
+
+    q: [b, sq, h, e]; pools [n_pages, ps, g, e/ev] (int8 with
+    k_scale/v_scale [n_pages, g]); page_tables [b, ppr]; pos [b] int32
+    absolute position of q[:, 0]. Sentinel tail pages are masked by the
+    exact causal mask (their logical positions exceed pos). slot_mask
+    [b] bool zeroes masked-off rows.
+    """
+    sq = q.shape[1]
+    k = paged_gather(k_pool, page_tables, k_scale)
+    v = paged_gather(v_pool, page_tables, v_scale)
+    off = jnp.asarray(pos, jnp.int32).reshape(-1)
+    if slot_mask is not None:
+        off = jnp.where(slot_mask, off, -sq)
+    return attention(q, k, v, causal=True, q_offset=off, block_k=block_k,
+                     scale=scale)
+
+
 def combine_decode_shards(partials):
     """Flash-decoding combine: merge per-shard (m, l, acc) stats.
 

@@ -109,6 +109,11 @@ def main():
                     choices=("on", "off"),
                     help="radix prefix sharing across requests "
                          "(off: pages stay private per request)")
+    ap.add_argument("--kv-cache-dtype", default=None,
+                    choices=("fp32", "bf16", "int8"),
+                    help="KV-cache storage dtype (default: the compute "
+                         "dtype); int8 quantizes the page pool with "
+                         "per-page scales and needs --page-size")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy, in-graph)")
     ap.add_argument("--top-p", type=float, default=1.0,
@@ -154,6 +159,7 @@ def main():
         max_seq=max_seq, schedule=args.schedule, cost_preset=args.preset,
         prefill_chunk=args.prefill_chunk, page_size=args.page_size,
         max_pages=args.max_pages, prefix_sharing=args.prefix_sharing,
+        kv_cache_dtype=args.kv_cache_dtype,
         overrides=dict(microbatches=2),
     )
     d = sess.describe()["schedule"]

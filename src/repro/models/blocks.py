@@ -129,7 +129,8 @@ def apply_attn(
             qr = apply_rope(qv, cos, sin)
             kr = apply_rope(kv, cos, sin)
             return ops.attention(
-                qr, kr, vv, causal=ctx.causal, block_k=rc.attn_block_k
+                qr, kr, vv, causal=ctx.causal, block_k=rc.attn_block_k,
+                impl=rc.kernel_impl,
             )
 
         o = t.prim(core, q, k, v)
@@ -137,7 +138,8 @@ def apply_attn(
 
         def core(qv, kv, vv):
             return ops.attention(qv, kv, vv, causal=False,
-                                 block_k=rc.attn_block_k)
+                                 block_k=rc.attn_block_k,
+                                 impl=rc.kernel_impl)
 
         o = t.prim(core, q, k, v)
     return t.dense(o, f"{pfx}.wo", "bshe,hed->bsd")
@@ -158,7 +160,8 @@ def attn_decode(ctx: LayerCtx, params, pfx, x, cache, pos):
     v_cache = jax.lax.dynamic_update_slice(
         cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
     )
-    o, _ = ops.decode_attention(q, k_cache, v_cache, cache_len=pos + 1)
+    o, _ = ops.decode_attention(q, k_cache, v_cache, cache_len=pos + 1,
+                                impl=ctx.rc.kernel_impl)
     y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
     return y, {"k": k_cache, "v": v_cache}
 
@@ -229,6 +232,7 @@ def apply_mla(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> TVal:
         scale = 1.0 / (m.qk_nope + m.rope_dims) ** 0.5
         return ops.attention(
             qf, kf, val, causal=ctx.causal, block_k=ctx.rc.attn_block_k,
+            impl=ctx.rc.kernel_impl,
         )
 
     o = t.prim(core, q, k_nope, k_rope, vv)
@@ -264,7 +268,8 @@ def mla_decode(ctx, params, pfx, x, cache, pos):
     qf = jnp.concatenate([q_nope, q_rope], -1)
     kf = jnp.concatenate([k_nope, k_rope], -1)
     scale = 1.0 / (m.qk_nope + m.rope_dims) ** 0.5
-    o, _ = ops.decode_attention(qf, kf, v, cache_len=pos + 1)
+    o, _ = ops.decode_attention(qf, kf, v, cache_len=pos + 1,
+                                impl=ctx.rc.kernel_impl)
     y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
     return y, {"ckv": cache_new}
 
@@ -674,7 +679,7 @@ def _slot_scatter(ctx, cache_arr, new, pos):
     return jax.vmap(upd)(cache_arr, new, pos, mask)
 
 
-def _paged_gather(ctx, pool, width=None):
+def _paged_gather(ctx, pool, scale=None, width=None):
     """Assemble each row's K/V window from the shared page pool.
 
     pool: [n_pages_loc, ps, ...]; ctx.page_tables: [b, ppr] local page
@@ -684,23 +689,37 @@ def _paged_gather(ctx, pool, width=None):
     Sentinel table entries (unreserved tail) drag in arbitrary live
     pages; every such position sits beyond the row's causal offset and
     is masked to exact -inf before the softmax.
+
+    ``scale`` (int8 pools): [n_pages_loc, ...head-dims] per-page dequant
+    scales — the gather dequantizes to f32 with the exact per-element
+    product the Pallas paged kernel computes in-kernel.
     """
     pt = jnp.clip(ctx.page_tables, 0, pool.shape[0] - 1)
     g = jnp.take(pool, pt, axis=0)            # [b, ppr, ps, ...]
+    if scale is not None:
+        sg = jnp.take(scale.astype(jnp.float32), pt, axis=0)
+        sg = sg.reshape(sg.shape[:2] + (1,) + sg.shape[2:] + (1,))
+        g = g.astype(jnp.float32) * sg
     g = g.reshape((pt.shape[0], -1) + pool.shape[2:])
     if width is not None and g.shape[1] != width:
         g = g[:, :width]
     return g
 
 
-def _paged_scatter(ctx, pool, new, pos):
+def _paged_scatter(ctx, pool, new, pos, scale=None):
     """Write ``new`` [b, s, ...] into the page pool at each row's
     absolute positions ``pos + [0, s)``, routed through its page table.
     Masked-off rows (``ctx.slot_mask``) are redirected out of bounds and
     dropped — the paged analogue of :func:`_slot_scatter`'s read-back.
     Rows never share writable pages (shared prefix pages are read-only
     by construction and prefill resumes past them), so the flat indices
-    are collision-free.
+    are collision-free. Returns ``(pool, scale)``.
+
+    With ``scale`` (int8 pages, [n_loc, ...head-dims] f32): per-page
+    scales only ever grow (scatter-max of amax/127), existing page
+    content is requantized by the old/new ratio — exactly 1.0 for every
+    untouched page, so shared prefix pages stay bitwise stable — and the
+    incoming tokens are quantized with their page's updated scale.
     """
     b, s = new.shape[:2]
     ps = ctx.page_size
@@ -712,11 +731,30 @@ def _paged_scatter(ctx, pool, new, pos):
         mask = jnp.ones((b,), bool)
     page = jnp.where(mask[:, None], page, n_loc)  # OOB -> dropped
     flat = page * ps + t % ps
+    if scale is not None:
+        nf = new.astype(jnp.float32)
+        # per-token amax at the scale granularity: [b, s] + scale dims
+        amax = jnp.abs(nf).max(axis=-1)
+        scale_new = scale.at[page.reshape(-1)].max(
+            (amax / 127.0).reshape((-1,) + scale.shape[1:]), mode="drop")
+        # requantize existing bytes where this write grew a page's scale
+        # (ratio is exactly 1.0 everywhere else — identity round-trip)
+        ratio = jnp.where(scale_new > 0,
+                          scale / jnp.maximum(scale_new, 1e-30), 1.0)
+        ratio = ratio.reshape((n_loc, 1) + scale.shape[1:] + (1,))
+        pool = jnp.clip(jnp.round(pool.astype(jnp.float32) * ratio),
+                        -127, 127).astype(pool.dtype)
+        # quantize the incoming tokens with their page's final scale
+        sc_tok = scale_new[jnp.clip(page, 0, n_loc - 1).reshape(-1)]
+        sc_tok = sc_tok.reshape((b, s) + scale.shape[1:])[..., None]
+        new = jnp.clip(jnp.round(nf / jnp.maximum(sc_tok, 1e-30)),
+                       -127, 127)
+        scale = scale_new
     pool_flat = pool.reshape((n_loc * ps,) + pool.shape[2:])
     pool_flat = pool_flat.at[flat.reshape(-1)].set(
         new.reshape((b * s,) + new.shape[2:]).astype(pool.dtype),
         mode="drop")
-    return pool_flat.reshape(pool.shape)
+    return pool_flat.reshape(pool.shape), scale
 
 
 def _slot_state(ctx, old, new):
@@ -751,21 +789,27 @@ def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     if ctx.page_tables is not None:
-        # paged KV: scatter this step's K/V through the page tables,
-        # gather each row's full window back for attention. The pool
-        # (not a per-row window) is the cache state.
-        kp = _paged_scatter(ctx, cache["k"], k, pos)
-        vp = _paged_scatter(ctx, cache["v"], v, pos)
-        kc = _paged_gather(ctx, kp)
-        vc = _paged_gather(ctx, vp)
-        o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
-                          block_k=ctx.rc.attn_block_k)
+        # paged KV: scatter this step's K/V through the page tables
+        # (quantizing when the pool is int8), then attend straight out
+        # of the pool — the page-table-native kernel (or its jnp mirror)
+        # applies the per-row causal offset and sentinel masking itself.
+        # The pool (not a per-row window) is the cache state.
+        ksc, vsc = cache.get("k_scale"), cache.get("v_scale")
+        kp, ksc = _paged_scatter(ctx, cache["k"], k, pos, ksc)
+        vp, vsc = _paged_scatter(ctx, cache["v"], v, pos, vsc)
+        o = ops.paged_attention(
+            q, kp, vp, page_tables=ctx.page_tables, pos=pos,
+            k_scale=ksc, v_scale=vsc, slot_mask=ctx.slot_mask,
+            block_k=ctx.rc.attn_block_k, impl=ctx.rc.kernel_impl)
         cache = {"k": kp, "v": vp}
+        if ksc is not None:
+            cache["k_scale"], cache["v_scale"] = ksc, vsc
     elif getattr(pos, "ndim", 0):
         kc = _slot_scatter(ctx, cache["k"], k, pos)
         vc = _slot_scatter(ctx, cache["v"], v, pos)
         o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
-                          block_k=ctx.rc.attn_block_k)
+                          block_k=ctx.rc.attn_block_k,
+                          impl=ctx.rc.kernel_impl)
         cache = {"k": kc, "v": vc}
     elif getattr(ctx, "kv_seq_shard", False):
         # cache local window [b, S/D, g, e]; only the owner of `pos` writes
@@ -785,7 +829,8 @@ def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
                 cache["v"].dtype), (0, off, 0, 0))
         # local partial attention with global positions
         n_valid = jnp.clip(pos + s - lo, 0, S_loc)
-        _, (m, l, acc) = ops.decode_attention(q, kc, vc, cache_len=n_valid)
+        _, (m, l, acc) = ops.decode_attention(q, kc, vc, cache_len=n_valid,
+                                              impl=ctx.rc.kernel_impl)
         # combine across shards: psum-logsumexp (all data ranks aligned)
         m_g = jax.lax.pmax(m, "data")
         m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
@@ -801,7 +846,8 @@ def attn_cached(ctx: LayerCtx, params, pfx, x, cache, pos):
         vc = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         o = ops.attention(q, kc, vc, causal=True, q_offset=pos,
-                          block_k=ctx.rc.attn_block_k)
+                          block_k=ctx.rc.attn_block_k,
+                          impl=ctx.rc.kernel_impl)
         cache = {"k": kc, "v": vc}
     y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
     return y, cache
@@ -817,9 +863,18 @@ def mla_cached(ctx, params, pfx, x, cache, pos):
           * params[f"{pfx}.qnorm.scale"]).astype(x.dtype)
     q = jnp.einsum("bsr,rhe->bshe", cq, params[f"{pfx}.wuq"])
     ckv = jnp.einsum("bsd,dc->bsc", x, params[f"{pfx}.wdkv"])
+    ckv_sc = None
     if ctx.page_tables is not None:  # paged latent cache
-        cache_new = _paged_scatter(ctx, cache["ckv"], ckv, pos)
-        full = _paged_gather(ctx, cache_new)
+        # MLA always gathers the latent pages (the up-projection makes
+        # dense K/V before attention), so int8 dequant happens here —
+        # identically under both kernel implementations — and only the
+        # attention after routes through the slot-aware Pallas kernel.
+        ckv_sc = cache.get("ckv_scale")
+        cache_new, ckv_sc = _paged_scatter(ctx, cache["ckv"], ckv, pos,
+                                           ckv_sc)
+        full = _paged_gather(ctx, cache_new, ckv_sc)
+        if ckv_sc is not None:
+            full = full.astype(x.dtype)
     elif getattr(pos, "ndim", 0):  # per-slot positions (slotted serving)
         cache_new = _slot_scatter(ctx, cache["ckv"], ckv, pos)
         full = cache_new
@@ -843,9 +898,13 @@ def mla_cached(ctx, params, pfx, x, cache, pos):
     qf = jnp.concatenate([q_nope, q_rope], -1)
     kf = jnp.concatenate([k_nope, k_rope], -1)
     o = ops.attention(qf, kf, vv, causal=True, q_offset=pos,
-                      block_k=ctx.rc.attn_block_k)
+                      block_k=ctx.rc.attn_block_k,
+                      impl=ctx.rc.kernel_impl)
     y = jnp.einsum("bshe,hed->bsd", o, params[f"{pfx}.wo"])
-    return y, {"ckv": cache_new}
+    out_cache = {"ckv": cache_new}
+    if ckv_sc is not None:
+        out_cache["ckv_scale"] = ckv_sc
+    return y, out_cache
 
 
 def mamba_cached(ctx, params, pfx, x, cache, pos):

@@ -174,6 +174,13 @@ class RunConfig:
                                     # block's compute; 0 = gather at use)
     attn_block_k: int = 512
     vocab_chunk: int = 8192
+    kernel_impl: str | None = None  # None: backend default (Pallas on TPU,
+                                    # ref elsewhere); "pallas"/"ref" force a
+                                    # path (pallas runs interpret off-TPU)
+    kv_cache_dtype: str | None = None  # serving KV-cache storage dtype:
+                                       # None (= compute_dtype) | "fp32" |
+                                       # "bf16" | "int8" (paged only;
+                                       # per-page×head scales ride along)
 
     @property
     def unit_size(self) -> int:

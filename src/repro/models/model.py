@@ -272,18 +272,26 @@ def layer_cache_spec(cfg, rc, kind, batch, max_seq) -> dict[str, Any]:
     """ShapeDtypeStructs for one layer's decode cache."""
     mix = kind.split(":")[0] if ":" in kind else kind
     f32, cdt = jnp.float32, jnp.dtype(rc.compute_dtype)
+    # KV storage dtype is decoupled from compute: fp32/bf16 for accuracy/
+    # memory, int8 for quantized pages (per-page scales live in separate
+    # "<name>_scale" pool leaves added by init_serve_caches). Recurrent
+    # state caches (mamba/mlstm/slstm) always keep the compute dtype.
+    kv_dt = jnp.dtype({
+        None: rc.compute_dtype, "fp32": jnp.float32,
+        "bf16": jnp.bfloat16, "int8": jnp.int8,
+    }[rc.kv_cache_dtype])
     g, e = cfg.n_kv_heads, cfg.head_dim
     if mix in ("attn", "dec"):
         return {
-            "k": jax.ShapeDtypeStruct((batch, max_seq, g, e), cdt),
-            "v": jax.ShapeDtypeStruct((batch, max_seq, g, e), cdt),
+            "k": jax.ShapeDtypeStruct((batch, max_seq, g, e), kv_dt),
+            "v": jax.ShapeDtypeStruct((batch, max_seq, g, e), kv_dt),
         }
     if mix == "enc":
         return {}
     if mix == "mla":
         m = cfg.mla
         return {"ckv": jax.ShapeDtypeStruct(
-            (batch, max_seq, m.kv_lora + m.rope_dims), cdt)}
+            (batch, max_seq, m.kv_lora + m.rope_dims), kv_dt)}
     if mix == "mamba":
         mc, di, _ = blocks._mamba_dims(cfg)
         return {

@@ -8,6 +8,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_xent import softmax_xent
+from repro.kernels.paged_attention import (
+    decode_attention as pallas_decode_attention,
+    flash_attention_slotted,
+    paged_attention as pallas_paged_attention,
+)
 from repro.kernels.selective_scan import selective_scan
 from tests.proptest import propcase
 
@@ -138,6 +143,121 @@ def test_mlstm_chunkwise_matches_step():
         ys.append(y)
     seq = jnp.stack(ys, 1)
     np.testing.assert_allclose(got, seq, atol=2e-4)
+
+
+@propcase(n_cases=8)
+def test_slotted_attention_sweep(draw):
+    """Per-row pos vector (staggered slots), GQA and MLA-absorbed dims."""
+    b = draw.ints(2, 4)
+    h = draw.choice([2, 4])
+    g = draw.choice([x for x in (1, 2) if h % x == 0])
+    e = draw.choice([16, 32])
+    ev = draw.choice([e, e // 2])   # MLA-absorbed: value dim != qk dim
+    sq = draw.choice([1, 3, 5])
+    S = draw.choice([32, 48])
+    dtype = draw.choice([jnp.float32, jnp.bfloat16])
+    ks = jax.random.split(jax.random.PRNGKey(draw.ints(0, 99)), 4)
+    q = jax.random.normal(ks[0], (b, sq, h, e)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, S, g, e)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, S, g, ev)).astype(dtype)
+    pos = jax.random.randint(ks[3], (b,), 0, S - sq + 1)
+    got = flash_attention_slotted(q, k, v, pos=pos, block_k=16,
+                                  interpret=True)
+    want = ref.attention(q, k, v, causal=True, q_offset=pos, block_k=16)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_slotted_decode_stats_match_and_combine():
+    """Window mode emits ref-layout (m, l, acc) partials that merge via
+    combine_decode_shards identically to the unsharded reference."""
+    b, h, g, e, S = 3, 4, 2, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, e))
+    k = jax.random.normal(ks[1], (b, S, g, e))
+    v = jax.random.normal(ks[2], (b, S, g, e))
+    cache_len = jnp.asarray([1, 13, 32], jnp.int32)
+    got, (m, l, acc) = pallas_decode_attention(q, k, v, cache_len,
+                                               block_k=8, interpret=True)
+    want, (mr, lr, accr) = ref.decode_attention(q, k, v, cache_len)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+    np.testing.assert_allclose(l, lr, rtol=1e-5)
+    np.testing.assert_allclose(acc, accr, rtol=1e-5, atol=1e-5)
+    # split the cache in two "sequence shards" and merge the partials
+    half = S // 2
+    p1 = pallas_decode_attention(q, k[:, :half], v[:, :half],
+                                 jnp.minimum(cache_len, half),
+                                 block_k=8, interpret=True)[1]
+    p2 = pallas_decode_attention(q, k[:, half:], v[:, half:],
+                                 jnp.maximum(cache_len - half, 0),
+                                 block_k=8, interpret=True)[1]
+    comb = ref.combine_decode_shards([p1, p2])
+    np.testing.assert_allclose(comb, want, atol=2e-5)
+
+
+@propcase(n_cases=8)
+def test_paged_attention_sweep(draw):
+    """Page-table-native kernel vs gather+attend ref: staggered pos,
+    sentinel tail pages, slot masking, GQA and MLA dims."""
+    b = draw.ints(2, 3)
+    h = draw.choice([2, 4])
+    g = draw.choice([x for x in (1, 2) if h % x == 0])
+    e = draw.choice([16, 32])
+    ev = draw.choice([e, e // 2])
+    sq = draw.choice([1, 4])
+    ps = draw.choice([4, 8])
+    ppr = draw.ints(3, 6)
+    n_pages = draw.ints(8, 20)
+    dtype = draw.choice([jnp.float32, jnp.bfloat16])
+    ks = jax.random.split(jax.random.PRNGKey(draw.ints(0, 99)), 6)
+    q = jax.random.normal(ks[0], (b, sq, h, e)).astype(dtype)
+    kp = jax.random.normal(ks[1], (n_pages, ps, g, e)).astype(dtype)
+    vp = jax.random.normal(ks[2], (n_pages, ps, g, ev)).astype(dtype)
+    pt = jax.random.randint(ks[3], (b, ppr), 0, n_pages)
+    pos = jax.random.randint(ks[4], (b,), 0, ppr * ps - sq + 1)
+    # sentinel tail: zero every table entry past each row's live window
+    # — the causal mask must neutralize whatever page id 0 aliases
+    live = (pos + sq + ps - 1) // ps
+    pt = jnp.where(jnp.arange(ppr)[None] < live[:, None], pt, 0)
+    sm = jax.random.bernoulli(ks[5], 0.8, (b,))
+    got = pallas_paged_attention(q, kp, vp, page_tables=pt, pos=pos,
+                                 slot_mask=sm, interpret=True)
+    want = ref.paged_attention(q, kp, vp, page_tables=pt, pos=pos,
+                               slot_mask=sm, block_k=8)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+    # masked-off rows emit exact zeros under both implementations
+    assert not np.any(np.asarray(got)[~np.asarray(sm)])
+
+
+def test_paged_attention_int8_error_bound():
+    """int8 pages: kernel == ref bitwise-dequant; both within 0.5% of
+    the max |o| of the fp32 pool attention."""
+    b, sq, h, g, e, ps, ppr, n_pages = 3, 1, 4, 2, 32, 4, 6, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (b, sq, h, e))
+    kf = jax.random.normal(ks[1], (n_pages, ps, g, e))
+    vf = jax.random.normal(ks[2], (n_pages, ps, g, e))
+    pt = jax.random.randint(ks[3], (b, ppr), 0, n_pages)
+    pos = jax.random.randint(ks[4], (b,), 0, ppr * ps - sq + 1)
+    # quantize per page × kv-head, the storage layout the cache uses
+    k_sc = jnp.abs(kf).max(axis=(1, 3)) / 127.0     # [n_pages, g]
+    v_sc = jnp.abs(vf).max(axis=(1, 3)) / 127.0
+    ki = jnp.round(kf / k_sc[:, None, :, None]).astype(jnp.int8)
+    vi = jnp.round(vf / v_sc[:, None, :, None]).astype(jnp.int8)
+    o_fp = ref.paged_attention(q, kf, vf, page_tables=pt, pos=pos,
+                               block_k=8)
+    o_ker = pallas_paged_attention(q, ki, vi, page_tables=pt, pos=pos,
+                                   k_scale=k_sc, v_scale=v_sc,
+                                   interpret=True)
+    o_ref = ref.paged_attention(q, ki, vi, page_tables=pt, pos=pos,
+                                k_scale=k_sc, v_scale=v_sc, block_k=8)
+    # kernel and ref share the exact dequant math
+    np.testing.assert_allclose(o_ker, o_ref, atol=2e-5)
+    bound = 0.005 * np.abs(np.asarray(o_fp)).max()
+    assert np.abs(np.asarray(o_ker) - np.asarray(o_fp)).max() < bound
 
 
 def test_slstm_state_continuity():
