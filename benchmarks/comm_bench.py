@@ -31,8 +31,8 @@ from __future__ import annotations
 import argparse
 import json
 import re
-import time
 
+from benchmarks import timing
 from repro.api import ensure_host_devices
 
 ARCH = "llama3.2-1b"
@@ -89,11 +89,10 @@ def bench_rows(json_path: str | None = None):
         sites[mode] = _collective_sites(step.as_text())
         g, m = step(params, batch)
         jax.block_until_ready(g)
-        t0 = time.time()
-        for _ in range(2):
-            g, m = step(params, batch)
-            jax.block_until_ready(g)
-        step_us[mode] = (time.time() - t0) / 2 * 1e6
+        # shared timing discipline (warmup above, median-of-3): single
+        # wall-clock shots flip flat/none rankings on noisy CPU runners
+        step_us[mode] = timing.measure_us(
+            lambda: step(params, batch), warmup=0, iters=3)
         grads[mode] = jax.device_get(g)
         metrics[mode] = jax.device_get(m)
         print(f"  {mode:>4}: all-gather sites={sites[mode]['all-gather']:3d}"

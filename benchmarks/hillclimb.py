@@ -1,126 +1,305 @@
-import os
+"""Joint knob hillclimb: greedy coordinate descent over the schedule
+knobs that exist but are hand-set.
 
-from repro.api import ensure_host_devices, session
+The ZeroPP efficiency claim rests on picking the right point in
+(U, V, schedule family, ``gather_prefetch``, ``coalesce``,
+``grad_compress``, ``mem_budget``) for a given machine —
+``schedule="auto"`` only searches the schedule axis under a *derived*
+cost model. This driver climbs the whole knob vector against *measured*
+steps: one axis at a time, try every alternative value with the rest
+fixed, move to the best measured improvement, repeat until a full sweep
+makes no move (or the wall-clock budget runs out).
 
-ensure_host_devices(512, force=True)
+Every measurement goes through the shared ``benchmarks/timing.py``
+discipline (warmup + median-of-3 real train steps) and is recorded in
+the persisted plan cache (``core/plan_cache.py`` ``measurements``
+section, keyed by knob vector + code salt) — an interrupted climb
+resumes from cache, paying only for points it has not timed yet.
+``mem_budget`` participates as a feasibility gate: a point whose
+*simulated* peak memory exceeds the budget is rejected without being
+measured (exactly how the paper discards U values that don't fit HBM).
 
-"""§Perf hillclimbing driver: hypothesis → change → re-lower → re-analyse.
+``hillclimb_rows`` emits harness-contract rows (trajectory: one row per
+evaluated point with its knob vector, plus the best point and the
+profiled-vs-derived selection delta) into ``BENCH_pr8.json`` via
+``benchmarks/run.py``.
 
-Runs a named sequence of RunConfig variants for one (arch × shape) cell on
-the production mesh, recording for each: per-device memory (compiled
-memory_analysis), the three roofline terms and the dominant one. Results
-append to results/hillclimb.jsonl; EXPERIMENTS.md §Perf narrates them.
-
-  PYTHONPATH=src:. python -m benchmarks.hillclimb --cell deepseek_train
+Run standalone:
+  SPMD_DEVICES=8 PYTHONPATH=src:. python -m benchmarks.hillclimb \
+      [--arch llama3.2-1b] [--budget-s 240] [--mem-budget BYTES]
 """
 
-import argparse  # noqa: E402
-import json  # noqa: E402
-import time  # noqa: E402
+from __future__ import annotations
 
-from repro.models.common import SHAPES  # noqa: E402
+import argparse
+import json
+import time
+
+from benchmarks import timing
+
+#: Axis order for the coordinate descent. Schedule family first (the
+#: coarsest lever), then the §3.1 unit depth, then the overlap/layout
+#: knobs. unit=0 means "full depth" (U = microbatches).
+KNOB_AXES = (
+    ("schedule", ("zeropp", "autogen_gated", "autogen", "1f1b", "bfs")),
+    ("unit", (0, 2, 1)),
+    ("vpp", (1, 2)),
+    ("gather_prefetch", (0, 1, 2)),
+    ("coalesce", ("flat", "none")),
+    ("grad_compress", ("none", "int8")),
+)
+
+#: Relative improvement a move must show to be accepted — absorbs the
+#: residual noise the median-of-3 doesn't (CPU runners jitter a few %).
+MIN_GAIN = 0.03
 
 
-def measure(arch, shape, rc_overrides, label):
-    import benchmarks.roofline as RL
+def _start_vector(arch: str) -> dict:
+    """The hand-set defaults the repo ships — the climb's origin."""
+    from repro.api import get_arch
 
-    shape_cfg = SHAPES[shape]
-    sess = session(arch, mode="dry-run", shape=shape, reduced=False,
-                   overrides=rc_overrides)
-    t0 = time.time()
-    compiled = sess.lower().compile()
-    dt = time.time() - t0
-    mem = compiled.memory_analysis()
-    roof = RL.analyze_cell(sess.rt, shape_cfg)
-    rec = {
-        "cell": f"{arch}×{shape}", "label": label,
-        "overrides": {k: str(v) for k, v in rc_overrides.items()},
-        "mem_gb": round(mem.temp_size_in_bytes / 1e9, 2),
-        "compute_s": round(roof.compute_s, 4),
-        "memory_s": round(roof.memory_s, 4),
-        "collective_s": round(roof.collective_s, 4),
-        "bottleneck": roof.bottleneck,
-        "useful_ratio": round(roof.useful_ratio, 3),
-        "compile_s": round(dt, 1),
+    _, rc = get_arch(arch).reduced()
+    return {
+        "schedule": rc.schedule,
+        "unit": rc.unit,
+        "vpp": rc.vpp,
+        "gather_prefetch": rc.gather_prefetch,
+        "coalesce": rc.coalesce,
+        "grad_compress": rc.grad_compress,
     }
-    dom = max(roof.compute_s, roof.memory_s, roof.collective_s)
-    rec["dominant_s"] = round(dom, 4)
-    rec["step_s_lower_bound"] = rec["dominant_s"]
-    print(f"[{label:28s}] mem={rec['mem_gb']:7.2f}G "
-          f"C={rec['compute_s']:.3f} M={rec['memory_s']:.3f} "
-          f"X={rec['collective_s']:.3f} dom={rec['bottleneck'][:4]} "
-          f"({rec['dominant_s']:.3f}s)")
-    os.makedirs("results", exist_ok=True)
-    with open("results/hillclimb.jsonl", "a") as f:
-        f.write(json.dumps(rec) + "\n")
-    return rec
 
 
-CELLS = {
-    # Cell 1: deepseek train — worst memory, collective-heavy, most
-    # paper-representative (FSDP×PP interplay is the paper's subject).
-    "deepseek_train": [
-        ("deepseek-v3-671b", "train_4k", {}, "baseline U=16 (paper dflt)"),
-        ("deepseek-v3-671b", "train_4k", {"unit": 8}, "U=8 (unit memory)"),
-        ("deepseek-v3-671b", "train_4k", {"unit": 4}, "U=4"),
-        ("deepseek-v3-671b", "train_4k", {"unit": 2}, "U=2"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 4, "grad_rs_dtype": "bfloat16"}, "U=4 + bf16 grad-RS"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 4, "grad_rs_dtype": "bfloat16", "vpp": 2},
-         "U=4 + bf16-RS + V=2"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 2, "grad_rs_dtype": "bfloat16", "vocab_chunk": 2048},
-         "U=2 + bf16-RS + loss-chunk-2k"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 2, "grad_rs_dtype": "bfloat16", "vocab_chunk": 2048,
-          "attn_block_k": 1024}, "…+ attn block 1k"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 4, "grad_rs_dtype": "bfloat16",
-          "no_defer_extra": (".mix.wuq", ".mix.wuk", ".mix.wuv",
-                             ".mix.wo")},
-         "U=4 + partial W-deferral"),
-        ("deepseek-v3-671b", "train_4k",
-         {"unit": 2, "grad_rs_dtype": "bfloat16",
-          "no_defer_extra": (".mix.",)},
-         "U=2 + attn dW all in B"),
-    ],
-    # Cell 2: deepseek decode — most collective-bound cell in the table.
-    "deepseek_decode": [
-        ("deepseek-v3-671b", "decode_32k", {}, "baseline (FSDP gathers)"),
-        ("deepseek-v3-671b", "decode_32k", {"serve_resident": True},
-         "weight-resident serving"),
-        ("deepseek-v3-671b", "decode_32k",
-         {"serve_resident": True, "microbatches": 4},
-         "resident + 4 microbatches"),
-        ("deepseek-v3-671b", "decode_32k",
-         {"serve_resident": True, "microbatches": 16},
-         "resident + 16 microbatches"),
-    ],
-    # Cell 3: llama train — clean dense cell; drive to HBM-feasible at
-    # minimal throughput cost with the paper's own U lever.
-    "llama_train": [
-        ("llama3.2-1b", "train_4k", {}, "baseline U=16"),
-        ("llama3.2-1b", "train_4k", {"unit": 8}, "U=8"),
-        ("llama3.2-1b", "train_4k", {"unit": 4}, "U=4"),
-        ("llama3.2-1b", "train_4k",
-         {"unit": 8, "grad_rs_dtype": "bfloat16"}, "U=8 + bf16 grad-RS"),
-        ("llama3.2-1b", "train_4k",
-         {"unit": 8, "grad_rs_dtype": "bfloat16", "schedule": "bfs"},
-         "bfs schedule (ablation)"),
-    ],
-}
+def _vec_label(vec: dict) -> str:
+    return (f"{vec['schedule']}-U{vec['unit']}-V{vec['vpp']}"
+            f"-pf{vec['gather_prefetch']}-{vec['coalesce']}"
+            f"-gc{vec['grad_compress']}")
+
+
+class Climber:
+    """Measured evaluation of knob vectors for one (arch × shape) cell,
+    cache-backed so repeated/resumed climbs skip known points."""
+
+    def __init__(self, arch: str, *, data: int = 2, seq: int = 32,
+                 microbatches: int = 4, mem_budget: float | None = None,
+                 iters: int = 3):
+        self.arch, self.data, self.seq = arch, data, seq
+        self.microbatches = microbatches
+        self.mem_budget = mem_budget
+        self.iters = iters
+        self.evals = 0          # fresh measurements this run
+        self.cache_hits = 0     # points answered from the persisted cache
+
+    def _cache_key(self, vec: dict) -> str:
+        from repro.core import plan_cache
+
+        return "hillclimb|" + plan_cache.entry_key(
+            (self.arch, self.seq, self.data, self.microbatches)
+            + tuple(vec[k] for k, _ in KNOB_AXES))
+
+    def evaluate(self, vec: dict) -> tuple[float | None, str]:
+        """(median us/call, detail) — us None when infeasible/failed."""
+        from repro.core import plan_cache
+
+        key = self._cache_key(vec)
+        hit = plan_cache.load_measurement(key)
+        if isinstance(hit, dict) and "us" in hit:
+            self.cache_hits += 1
+            us = hit["us"]
+            return (us if us is not None else None,
+                    hit.get("detail", "") + ";cached")
+        us, detail = self._measure(vec)
+        self.evals += 1
+        plan_cache.store_measurement(key, {"us": us, "detail": detail})
+        return us, detail
+
+    def _measure(self, vec: dict):
+        import jax
+
+        from repro.api import SessionError, session
+
+        try:
+            sess = session(
+                self.arch, mode="train", data=self.data, seq_len=self.seq,
+                overrides=dict(microbatches=self.microbatches, **vec))
+            sched = sess.describe()["schedule"]
+            if self.mem_budget is not None \
+                    and sched["peak_mem"] > self.mem_budget:
+                return None, (f"over_budget:peak_mem={sched['peak_mem']:.3e}"
+                              f">{self.mem_budget:.3e}")
+            params = sess.init_params(jax.random.PRNGKey(0))
+            batch = sess.stream(seed=0).batch(0)
+            step = sess.train_step_fn()
+            us = timing.measure_us(lambda: step(params, batch),
+                                   warmup=1, iters=self.iters)
+            return us, f"peak_mem={sched['peak_mem']:.3e}"
+        except (SessionError, ValueError, AssertionError) as e:
+            return None, f"infeasible: {e}"
+        except Exception as e:  # noqa: BLE001 — record, keep climbing
+            return None, f"failed: {type(e).__name__}: {e}"
+
+
+def climb(arch: str = "llama3.2-1b", *, budget_s: float = 240.0,
+          data: int = 2, seq: int = 32, microbatches: int = 4,
+          mem_budget: float | None = None, max_sweeps: int = 4):
+    """Greedy coordinate descent; returns (best_vec, best_us, rows).
+
+    ``rows`` follow the harness contract (name, us_per_call, derived):
+    one per evaluated point — sweep number, knob vector and whether it
+    became the incumbent — so the full trajectory lands in the JSON
+    artifact, not just the winner.
+    """
+    cl = Climber(arch, data=data, seq=seq, microbatches=microbatches,
+                 mem_budget=mem_budget)
+    t0 = time.perf_counter()
+
+    def out_of_budget() -> bool:
+        return time.perf_counter() - t0 >= budget_s
+
+    rows = []
+    n_eval = 0
+
+    def record(sweep, vec, us, detail, tag):
+        nonlocal n_eval
+        n_eval += 1
+        rows.append((
+            f"hillclimb/{n_eval:02d}_{_vec_label(vec)}",
+            us if us is not None else -1.0,
+            f"sweep={sweep};{tag};{detail};vector="
+            + json.dumps(vec, sort_keys=True)))
+
+    vec = _start_vector(arch)
+    vec["unit"] = vec["unit"] if vec["unit"] else 2   # climb from U=2
+    best_us, detail = cl.evaluate(vec)
+    if best_us is None:
+        raise RuntimeError(
+            f"hillclimb start point infeasible for {arch}: {detail}")
+    record(0, vec, best_us, detail, "start")
+    print(f"[hillclimb] start {_vec_label(vec)}: {best_us / 1e3:.1f} "
+          f"ms/call")
+
+    sweep = 0
+    moved = True
+    while moved and sweep < max_sweeps and not out_of_budget():
+        sweep += 1
+        moved = False
+        for knob, values in KNOB_AXES:
+            if out_of_budget():
+                print(f"[hillclimb] budget ({budget_s:.0f}s) exhausted "
+                      f"mid-sweep {sweep}")
+                break
+            axis_best = None   # (us, value)
+            for val in values:
+                if val == vec[knob]:
+                    continue
+                cand = dict(vec, **{knob: val})
+                us, detail = cl.evaluate(cand)
+                tag = f"try:{knob}={val}"
+                record(sweep, cand, us, detail, tag)
+                if us is None:
+                    print(f"[hillclimb]  {_vec_label(cand)}: skipped "
+                          f"({detail.split(';')[0]})")
+                    continue
+                print(f"[hillclimb]  {_vec_label(cand)}: "
+                      f"{us / 1e3:.1f} ms/call")
+                if axis_best is None or us < axis_best[0]:
+                    axis_best = (us, val)
+                if out_of_budget():
+                    break
+            if axis_best is not None \
+                    and axis_best[0] < best_us * (1 - MIN_GAIN):
+                best_us, _ = axis_best
+                vec = dict(vec, **{knob: axis_best[1]})
+                moved = True
+                print(f"[hillclimb] move -> {_vec_label(vec)} "
+                      f"({best_us / 1e3:.1f} ms/call)")
+    rows.append((f"hillclimb/best_{_vec_label(vec)}", best_us,
+                 f"sweeps={sweep};evals={cl.evals};"
+                 f"cache_hits={cl.cache_hits};vector="
+                 + json.dumps(vec, sort_keys=True)))
+    print(f"[hillclimb] best {_vec_label(vec)}: {best_us / 1e3:.1f} "
+          f"ms/call ({cl.evals} measured, {cl.cache_hits} from cache, "
+          f"{time.perf_counter() - t0:.0f}s)")
+    return vec, best_us, rows
+
+
+def profiled_vs_derived_rows(arch: str = "llama3.2-1b", *, data: int = 2,
+                             seq: int = 32, microbatches: int = 4,
+                             unit: int = 2, top_k: int = 3,
+                             budget_s: float | None = None):
+    """The selection-delta rows: what ``auto_profiled`` picked vs what
+    the purely simulated ``auto`` ranking would have picked, both in
+    *measured* us/call (the acceptance number for the coarse→fine
+    search: selected ≤ simulated-best, ties allowed)."""
+    from repro.api import session
+
+    sess = session(arch, mode="train", data=data, seq_len=seq,
+                   schedule="auto_profiled", profile_top_k=top_k,
+                   profile_budget_s=budget_s,
+                   overrides=dict(microbatches=microbatches, unit=unit))
+    sel = sess.plan_selection
+    prof = sel.profile or {}
+    measured = sel.measured or {}
+    win = sel.selected.name
+    win_us = measured.get(win)
+    sim_best = prof.get("simulated_best")
+    sim_us = prof.get("simulated_best_us")
+    rows = [(f"auto_profiled/selected_{win}", win_us or -1.0,
+             f"provenance={sel.provenance};source={sess._plan_source}")]
+    if sim_best is not None:
+        rows.append((f"auto_profiled/simulated_best_{sim_best}",
+                     sim_us if sim_us is not None else -1.0,
+                     "the plan schedule='auto' would pick"))
+    if win_us is not None and sim_us:
+        delta = (sim_us - win_us) / sim_us
+        rows.append(("auto_profiled/selection_delta", 0.0,
+                     f"pct={delta:.1%};selected={win};"
+                     f"simulated_best={sim_best}"))
+        print(f"[auto_profiled] selected {win} ({win_us / 1e3:.1f} ms) "
+              f"vs simulated-best {sim_best} ({sim_us / 1e3:.1f} ms): "
+              f"{delta:+.1%}")
+    return rows
+
+
+def hillclimb_rows(budget_s: float = 240.0, arch: str = "llama3.2-1b"):
+    """run.py hook: trajectory + best + selection-delta rows."""
+    from repro.api import ensure_host_devices
+
+    ensure_host_devices()
+    _, _, rows = climb(arch, budget_s=budget_s)
+    rows += profiled_vs_derived_rows(arch)
+    return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--budget-s", type=float, default=240.0)
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--mem-budget", type=float, default=None,
+                    help="simulated peak-mem feasibility gate (bytes)")
+    ap.add_argument("--json", default=None,
+                    help="write the trajectory rows to this JSON file")
     args = ap.parse_args()
-    for arch, shape, ovr, label in CELLS[args.cell]:
-        try:
-            measure(arch, shape, ovr, label)
-        except Exception as e:  # noqa: BLE001
-            print(f"[{label}] FAILED: {e}")
+
+    from repro.api import ensure_host_devices
+    ensure_host_devices()
+
+    _, _, rows = climb(args.arch, budget_s=args.budget_s, data=args.data,
+                       seq=args.seq, microbatches=args.microbatches,
+                       mem_budget=args.mem_budget)
+    rows += profiled_vs_derived_rows(args.arch, data=args.data,
+                                     seq=args.seq,
+                                     microbatches=args.microbatches)
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({n: {"us_per_call": us, "derived": d}
+                       for n, us, d in rows}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -8,8 +8,6 @@ NVLink intra-node + IB inter-node) at a 50% GEMM MFU assumption.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.api import SchedParams, generate_schedule, get_arch

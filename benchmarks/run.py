@@ -13,7 +13,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
+
+from benchmarks import timing
 
 # anchor the default artifact to the repo root: a CWD-relative default
 # scattered the JSON wherever the harness happened to run from, so the
@@ -24,8 +25,11 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json",
-                    default=os.path.join(_REPO_ROOT, "BENCH_pr7.json"),
+                    default=os.path.join(_REPO_ROOT, "BENCH_pr8.json"),
                     help="machine-readable rows artifact ('' to skip)")
+    ap.add_argument("--hillclimb-budget-s", type=float, default=240.0,
+                    help="wall-clock budget for the joint knob hillclimb "
+                         "rows (0 to skip)")
     args = ap.parse_args()
 
     # the device-backed cells (serving, comm) need the fake-device flag
@@ -49,6 +53,10 @@ def main() -> None:
     rows += serving_bench.paged_prefix_rows()
     rows += serving_bench.decode_attention_rows()
     rows += comm_bench.bench_rows()
+    if args.hillclimb_budget_s > 0:
+        from benchmarks import hillclimb
+        rows += hillclimb.hillclimb_rows(
+            budget_s=args.hillclimb_budget_s)
 
     print("\n=== CSV (name,us_per_call,derived) ===")
     for name, us, derived in rows:
@@ -76,11 +84,7 @@ def kernel_bench():
     k = jax.random.normal(jax.random.PRNGKey(1), (b, s, g, e), jnp.float32)
     v = jax.random.normal(jax.random.PRNGKey(2), (b, s, g, e), jnp.float32)
     f = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
-    f(q, k, v).block_until_ready()
-    t0 = time.time()
-    for _ in range(3):
-        f(q, k, v).block_until_ready()
-    dt = (time.time() - t0) / 3
+    dt = timing.measure_us(lambda: f(q, k, v), warmup=1, iters=3) / 1e6
     flops = 4 * s * s * h * e * b / 2
     rows.append(("kernel/flash_attention_ref", dt * 1e6,
                  f"flops={flops:.3e}"))
@@ -96,11 +100,8 @@ def kernel_bench():
     C = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
     D = jax.random.normal(jax.random.PRNGKey(5), (d,))
     f2 = jax.jit(lambda *a: ref.selective_scan(*a))
-    f2(x, dt_in, A, B, C, D).block_until_ready()
-    t0 = time.time()
-    for _ in range(3):
-        f2(x, dt_in, A, B, C, D).block_until_ready()
-    dt = (time.time() - t0) / 3
+    dt = timing.measure_us(lambda: f2(x, dt_in, A, B, C, D),
+                           warmup=1, iters=3) / 1e6
     rows.append(("kernel/selective_scan_ref", dt * 1e6, f"d={d} n={n}"))
     print(f"  selective_scan s{s} d{d}: {dt * 1e3:.1f} ms/call")
 
@@ -109,11 +110,8 @@ def kernel_bench():
     ww = jax.random.normal(jax.random.PRNGKey(1), (dd, vv)) * 0.05
     lab = jax.random.randint(jax.random.PRNGKey(2), (nn,), 0, vv)
     f3 = jax.jit(lambda *a: ref.softmax_xent(*a)[0])
-    f3(hh, ww, lab).block_until_ready()
-    t0 = time.time()
-    for _ in range(3):
-        f3(hh, ww, lab).block_until_ready()
-    dt = (time.time() - t0) / 3
+    dt = timing.measure_us(lambda: f3(hh, ww, lab),
+                           warmup=1, iters=3) / 1e6
     rows.append(("kernel/fused_xent_ref", dt * 1e6, f"vocab={vv}"))
     print(f"  fused_xent n{nn} vocab{vv}: {dt * 1e3:.1f} ms/call")
     return rows

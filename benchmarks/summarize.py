@@ -1,10 +1,16 @@
-"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables, and
+merge every ``BENCH_pr*.json`` artifact into one cross-PR perf
+trajectory table (so the bench history is diffable in one place)."""
 
 from __future__ import annotations
 
+import glob
 import json
 import os
+import re
 import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 ARCH_ORDER = [
     "whisper-large-v3", "qwen2-moe-a2.7b", "deepseek-v3-671b",
@@ -93,7 +99,64 @@ def table(cells, mesh_name):
     return "\n".join(lines)
 
 
+def load_bench_artifacts(root: str = _REPO_ROOT) -> dict:
+    """{pr_label: {row_name: us_per_call}} from every BENCH_pr*.json."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_pr*.json"))):
+        m = re.search(r"BENCH_(pr\d+)\.json$", os.path.basename(path))
+        if not m:
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if isinstance(data, dict):
+            out[m.group(1)] = {
+                n: rec.get("us_per_call")
+                for n, rec in data.items() if isinstance(rec, dict)}
+    return out
+
+
+def bench_trajectory(root: str = _REPO_ROOT) -> str:
+    """One markdown table: bench rows × PR artifacts, us/call cells.
+
+    Rows keep first-appearance order (the PR that introduced a bench
+    owns its slot); a ``-`` cell means that PR's artifact predates or
+    dropped the row.
+    """
+    arts = load_bench_artifacts(root)
+    if not arts:
+        return "(no BENCH_pr*.json artifacts found)"
+    prs = sorted(arts, key=lambda p: int(p[2:]))
+    names: list[str] = []
+    for pr in prs:
+        for n in arts[pr]:
+            if n not in names:
+                names.append(n)
+    lines = ["| bench row | " + " | ".join(f"{p} us" for p in prs) + " |",
+             "|" + "---|" * (len(prs) + 1)]
+    for n in names:
+        cells = []
+        for pr in prs:
+            us = arts[pr].get(n)
+            cells.append(f"{us:.1f}" if isinstance(us, (int, float))
+                         else "-")
+        lines.append(f"| {n} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
 def main():
+    arts = load_bench_artifacts()
+    if arts:
+        n_rows = len({n for rows in arts.values() for n in rows})
+        print(f"=== cross-PR bench trajectory ({len(arts)} artifacts, "
+              f"{n_rows} rows) ===")
+        print(bench_trajectory())
+        print()
+    if not os.path.isdir("results/dryrun_sp"):
+        print("(no results/dryrun_sp — skipping roofline tables)")
+        return
     sp = load("results/dryrun_sp")
     print(f"single-pod cells: {len(sp)}")
     print(table(sp, "16x16"))

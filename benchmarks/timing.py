@@ -1,0 +1,9 @@
+"""Benchmark-side alias of :mod:`repro.timing`.
+
+The canonical implementation lives in ``src/repro/timing.py`` (core code
+— the ``auto_profiled`` plan search — must not import the ``benchmarks``
+package); this shim lets every benchmark driver share the same
+warmup-discard + median-of-N discipline via a local import.
+"""
+
+from repro.timing import Timing, measure, measure_us  # noqa: F401

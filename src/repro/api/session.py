@@ -62,6 +62,14 @@ def session(arch: str, *, mode: str = "train", shape=None, overrides=None,
     over budget lose to any that fits — the real memory/makespan
     trade-off). The winner and every candidate's simulated
     makespan/peak-mem/stash-depth show in ``describe()``.
+
+    ``schedule="auto_profiled"`` (train mode) runs the same screen, then
+    compiles and *times* the ``profile_top_k`` best survivors on the
+    live mesh (warmup + median-of-3 real steps, wall-clock capped by
+    ``profile_budget_s``) and picks the minimum measured us/call. Both
+    auto modes read/write the persisted plan cache
+    (``~/.cache/repro/plans.json``, ``REPRO_PLAN_CACHE`` overrides), so
+    an identical later session skips the search and the measurements.
     """
     spec = SessionSpec(arch=arch, mode=mode, shape=shape,
                        overrides=dict(overrides or {}), **kw)
@@ -96,9 +104,17 @@ class Session:
         # schedule="auto": run the §4 plan selection now (device-free —
         # pure table generation + discrete-event simulation), so the rest
         # of the session sees a concrete schedule name + plan.
+        # schedule="auto_profiled" additionally compiles and *times* the
+        # top-K simulated survivors on the live mesh (needs devices) and
+        # lets the measured us/call pick the winner. Both consult the
+        # persisted plan cache first — a warm hit skips everything.
         self.plan_selection = None
-        if self.rc.schedule == "auto":
-            self.plan_selection = self._auto_select()
+        self._plan_source = None   # memory-hit | persisted-hit | search |
+        #                            search+measured — THIS construction's
+        #                            lookup outcome, for describe()
+        if self.rc.schedule in ("auto", "auto_profiled"):
+            self.plan_selection = self._auto_select(
+                profiled=self.rc.schedule == "auto_profiled")
             self.rc = dataclasses.replace(
                 self.rc, schedule=self.plan_selection.selected.name)
 
@@ -232,25 +248,77 @@ class Session:
             seq=seq, mbs=mbs, dp=dp,
             n_coll_gather=n_g, n_coll_reduce=n_r)
 
-    def _auto_select(self):
+    def _auto_select(self, profiled: bool = False):
         """Simulate every registered schedule (+ the §4 autogen heuristic)
-        for this (arch × shape × mesh) and pick the minimum-makespan plan.
-        Selections are cached process-wide on that key."""
+        for this (arch × shape × mesh) and pick the minimum-makespan plan
+        — or, ``profiled``, the minimum *measured* us/call among the
+        top-K simulated survivors. Selections are cached process-wide on
+        the key below AND persisted on disk (``core/plan_cache.py``), so
+        an identical later session — this process or the next — pays
+        zero simulate and zero measure calls."""
+        from repro.core.plan import plan_cache_info
+
         rc = self.rc
         seg = self.geo.segments[-1]
         seq, mbs, dp = self._cost_shape()
         preset = self.spec.cost_preset
+        # component order mirrors plan.SELECT_KEY_SCHEMA (part of the
+        # persisted-cache fingerprint)
         cache_key = (
             self.cfg.name, rc.pp, seg.vpp, rc.groups, rc.microbatches,
             rc.unit_size, rc.gather_prefetch, seq, mbs, dp,
-            self.spec.pods or 1, preset, rc.coalesce,
-            self.spec.mem_budget,
+            self.spec.pods or 1, preset, rc.coalesce, rc.grad_compress,
+            self.spec.mem_budget, rc.schedule,
+            self.spec.profile_top_k if profiled else None,
         )
-        return select_plan(
+        self._plan_key = cache_key
+        before = plan_cache_info()
+        sel = select_plan(
             rc.pp, seg.vpp, rc.microbatches, rc.unit_size,
             self._cost_model(seg.vpp), preset=preset,
             prefetch=rc.gather_prefetch, cache_key=cache_key,
-            mem_budget=self.spec.mem_budget)
+            mem_budget=self.spec.mem_budget,
+            measure_fn=self._build_measure_fn() if profiled else None,
+            top_k=self.spec.profile_top_k,
+            profile_budget_s=self.spec.profile_budget_s,
+            persist=True)
+        after = plan_cache_info()
+        if after["hits"].get(cache_key, 0) > \
+                before["hits"].get(cache_key, 0):
+            self._plan_source = "memory-hit"
+        elif after["disk_hits"].get(cache_key, 0) > \
+                before["disk_hits"].get(cache_key, 0):
+            self._plan_source = "persisted-hit"
+        else:
+            self._plan_source = sel.provenance
+        return sel
+
+    def _build_measure_fn(self):
+        """The auto_profiled fine pass: ``measure_fn(plan) -> us/call``.
+
+        Each candidate gets its own Runtime (same mesh, same params —
+        parameter layout does not depend on the schedule) with the plan
+        injected, its train step jitted, and one warmup + median-of-3
+        timed steps through ``repro.timing``. Only *called* on a cache
+        miss, so warm sessions never compile a step during selection.
+        """
+        from repro.timing import measure_us
+
+        state: dict[str, Any] = {}
+
+        def _measure(plan: SchedulePlan) -> float:
+            rc = dataclasses.replace(self.rc, schedule=plan.name)
+            rt = Runtime(self.cfg, rc, self.mesh,
+                         multi_pod=self.multi_pod, plan=plan)
+            step = make_train_step(rt, self.shape_cfg)
+            if "params" not in state:
+                state["params"] = rt.init_params(jax.random.PRNGKey(0))
+                state["batch"] = self.stream(seed=0).batch(0)
+            return measure_us(
+                lambda: step(state["params"], state["batch"]),
+                warmup=1, iters=3)
+
+        return _measure
 
     # ------------------------------------------------------------------ #
     # Parameters / optimizer
@@ -684,19 +752,54 @@ class Session:
         }
         if self.plan_selection is not None:
             sel = self.plan_selection
+
+            def _cand(a):
+                if not isinstance(a, PlanAnalysis):
+                    return str(a)
+                d = {"makespan": a.makespan,
+                     "peak_mem": a.peak_mem,
+                     "stash_depth": a.stash_depth,
+                     "rs_overlap_saved": a.rs_overlap_saved}
+                # measured us/call rides along only for the profiled
+                # survivors — simulated-only candidates keep the
+                # established 4-key shape.
+                if a.measured_us is not None:
+                    d["measured_us"] = a.measured_us
+                return d
+
             sched["auto"] = {
                 "selected": sel.selected.name,
                 "mem_budget": sel.mem_budget,
+                # hit/miss/refine provenance: how the *selection object*
+                # came to be (search | search+measured | cache:disk) and
+                # what THIS construction's lookup did (memory-hit |
+                # persisted-hit | a fresh search).
+                "provenance": {"selection": sel.provenance,
+                               "this_session": self._plan_source},
                 # per-candidate memory/makespan trade-off: stash depth,
                 # simulated peak memory and reduce-overlap savings ride
                 # along with the makespan each candidate was ranked on.
-                "candidates": {
-                    n: ({"makespan": a.makespan,
-                         "peak_mem": a.peak_mem,
-                         "stash_depth": a.stash_depth,
-                         "rs_overlap_saved": a.rs_overlap_saved}
-                        if isinstance(a, PlanAnalysis) else str(a))
-                    for n, a in sel.candidates.items()},
+                "candidates": {n: _cand(a)
+                               for n, a in sel.candidates.items()},
+            }
+            if sel.measured:
+                sched["auto"]["measured"] = dict(sel.measured)
+            if sel.profile:
+                sched["auto"]["profile"] = dict(sel.profile)
+            # persisted + in-memory plan-cache state (per-key hit counts,
+            # simulate/measure work counters) for this session's key
+            from repro.core.plan import plan_cache_info
+            info = plan_cache_info()
+            key = getattr(self, "_plan_key", None)
+            sched["cache"] = {
+                "key": repr(key),
+                "hits": info["hits"].get(key, 0),
+                "disk_hits": info["disk_hits"].get(key, 0),
+                "misses": info["misses"],
+                "simulate_calls": info["simulate_calls"],
+                "measure_calls": info["measure_calls"],
+                "entries": info["entries"],
+                "persisted": info["persisted"],
             }
         return {
             "arch": cfg.name,

@@ -38,12 +38,20 @@ class SessionSpec:
     # None to derive one from seq_len / global_batch / the RunConfig.
     shape: str | ShapeConfig | None = None
     reduced: bool = True            # reduced() smoke config vs production
-    # pipeline schedule: a registered name, or "auto" to run the §4
+    # pipeline schedule: a registered name, "auto" to run the §4
     # selection (every registered schedule + the autogen heuristic,
-    # simulated under `cost_preset`; minimum makespan wins). Shorthand
-    # for overrides["schedule"].
+    # simulated under `cost_preset`; minimum makespan wins), or
+    # "auto_profiled" for the coarse→fine search (same simulated screen,
+    # then the top-K survivors are compiled and *timed* on the live mesh
+    # and the minimum measured us/call wins — train mode only, needs
+    # devices at construction). Shorthand for overrides["schedule"].
     schedule: str | None = None
     cost_preset: str = "a800"       # simulator preset: a800 | tpu_v5e
+    # auto_profiled knobs: how many simulated survivors get a real
+    # measurement, and a wall-clock cap on the measuring phase (the
+    # simulated-best survivor is always measured, budget or not).
+    profile_top_k: int = 3
+    profile_budget_s: float | None = None
     # schedule="auto" memory cap (simulated peak bytes under the preset
     # cost model): candidates over budget lose to any that fits — the
     # knob that makes the unit-gated autogen (O(U) activation memory)
@@ -131,14 +139,37 @@ class SessionSpec:
                 f"unknown RunConfig override(s) {bad}; valid fields: "
                 f"{', '.join(sorted(_RC_FIELDS))}")
         sched = self.overrides.get("schedule")
-        if sched is not None and sched != "auto" \
+        auto_modes = ("auto", "auto_profiled")
+        if sched is not None and sched not in auto_modes \
                 and sched not in SCHEDULE_REGISTRY:
             try:
                 SCHEDULE_REGISTRY.get(sched)  # raises with the full hint
             except RegistryError as e:
                 raise SessionError(
                     str(e) + " (or pass schedule='auto' to search the "
-                    "registered schedules)") from e
+                    "registered schedules, 'auto_profiled' to also time "
+                    "the finalists on the live mesh)") from e
+        if sched == "auto_profiled" and self.mode != "train":
+            raise SessionError(
+                "schedule='auto_profiled' measures real *train* steps "
+                f"during selection; this session is mode={self.mode!r} — "
+                "use schedule='auto' (simulated-only) here, or tune in a "
+                "train session and pass the winning schedule explicitly")
+        if self.profile_top_k < 1:
+            raise SessionError(
+                f"profile_top_k must be >= 1 (at least the simulated-best "
+                f"candidate gets measured), got {self.profile_top_k}")
+        if self.profile_budget_s is not None and self.profile_budget_s < 0:
+            raise SessionError(
+                f"profile_budget_s must be >= 0 (0 still measures the "
+                f"simulated-best candidate), got {self.profile_budget_s}")
+        if sched != "auto_profiled" and (
+                self.profile_top_k != 3 or self.profile_budget_s
+                is not None):
+            raise SessionError(
+                "profile_top_k/profile_budget_s only steer the "
+                "schedule='auto_profiled' measured refinement; pass "
+                "schedule='auto_profiled' (or drop them)")
         co = self.overrides.get("coalesce")
         if co is not None and co not in ("flat", "none"):
             raise SessionError(
@@ -178,11 +209,11 @@ class SessionSpec:
                     f"mem_budget must be a positive simulated-peak-memory "
                     f"cap (bytes under the {self.cost_preset!r} preset), "
                     f"got {self.mem_budget}")
-            if sched != "auto":
+            if sched not in auto_modes:
                 raise SessionError(
-                    "mem_budget only steers the schedule='auto' "
-                    "selection; pass schedule='auto' (or drop "
-                    "mem_budget)")
+                    "mem_budget only steers the schedule='auto'/"
+                    "'auto_profiled' selection; pass one of those (or "
+                    "drop mem_budget)")
 
         if isinstance(self.shape, str) and self.shape not in SHAPES:
             raise SessionError(

@@ -217,6 +217,9 @@ class PlanAnalysis:
     rs_exposed: float = 0.0      # reduce-scatter time on the critical path
     rs_overlap_saved: float = 0.0  # worst rank's reduce time hidden under
     #                                the next unit's B/W compute
+    measured_us: float | None = None  # profiled real-step wall time
+    #                                   (auto_profiled refinement; None =
+    #                                   simulated-only candidate)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -409,22 +412,74 @@ class PlanSelection:
     candidates: dict    # name -> PlanAnalysis | "failed: ..." str
     key: tuple | None = None
     mem_budget: float | None = None   # peak-mem cap the ranking honoured
+    # how this selection came to be: "search" (simulated screen only),
+    # "search+measured" (auto_profiled coarse→fine refinement), or
+    # "cache:disk" (rebuilt from the persisted plan cache — zero
+    # simulate, zero measure). In-memory hits return the original
+    # object, so its provenance stays whatever produced it; per-lookup
+    # hit/miss accounting lives in plan_cache_info().
+    provenance: str = "search"
+    measured: dict | None = None      # name -> measured us/call for the
+    #                                   refined survivors (profiled mode)
+    profile: dict | None = None       # measurement metadata: top_k,
+    #                                   budget_s, wall seconds spent,
+    #                                   simulated-best name + its us
 
     def ranking(self) -> list[tuple[str, float]]:
         ok = [(n, a.makespan) for n, a in self.candidates.items()
               if isinstance(a, PlanAnalysis)]
         return sorted(ok, key=lambda x: x[1])
 
+    def measured_ranking(self) -> list[tuple[str, float]]:
+        """(name, measured us/call) for the profiled survivors, best first."""
+        return sorted((self.measured or {}).items(), key=lambda x: x[1])
+
 
 _PLAN_CACHE: dict[tuple, PlanSelection] = {}
+# process-wide selection accounting: per-key hit counts + the work
+# counters the persisted-cache tests assert on ("zero simulate calls on
+# a warm hit" is checked against simulate_calls/measure_calls deltas).
+_CACHE_STATS: dict = {
+    "hits": {},        # key -> in-memory hit count
+    "disk_hits": {},   # key -> persisted-cache hit count
+    "misses": 0,       # full searches run
+    "simulate_calls": 0,   # candidate discrete-event simulations
+    "measure_calls": 0,    # real-step measurements (auto_profiled)
+}
 
 
-def clear_plan_cache() -> None:
+def clear_plan_cache(persisted: bool = False) -> None:
+    """Reset the in-memory selection cache and its counters;
+    ``persisted=True`` also deletes the on-disk cache file."""
     _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = {}
+    _CACHE_STATS["disk_hits"] = {}
+    _CACHE_STATS["misses"] = 0
+    _CACHE_STATS["simulate_calls"] = 0
+    _CACHE_STATS["measure_calls"] = 0
+    if persisted:
+        from repro.core import plan_cache
+
+        plan_cache.clear_disk()
 
 
 def plan_cache_info() -> dict:
-    return {"entries": len(_PLAN_CACHE), "keys": sorted(_PLAN_CACHE)}
+    """Selection-cache state: entries, per-key hit counts, and the
+    simulate/measure work counters (reset by ``clear_plan_cache``)."""
+    from repro.core import plan_cache
+
+    return {
+        "entries": len(_PLAN_CACHE),
+        # keys mix None/float/str at the same position (mem_budget,
+        # profile_top_k), so sort on repr — tuple order would TypeError
+        "keys": sorted(_PLAN_CACHE, key=repr),
+        "hits": dict(_CACHE_STATS["hits"]),
+        "disk_hits": dict(_CACHE_STATS["disk_hits"]),
+        "misses": _CACHE_STATS["misses"],
+        "simulate_calls": _CACHE_STATS["simulate_calls"],
+        "measure_calls": _CACHE_STATS["measure_calls"],
+        "persisted": plan_cache.info(),
+    }
 
 
 def candidate_schedules() -> list[str]:
@@ -434,11 +489,26 @@ def candidate_schedules() -> list[str]:
     return [n for n in SCHEDULE_REGISTRY.names() if n != "fwd_only"]
 
 
+#: Ordered component names of the Session-level selection cache key —
+#: folded into the persisted-cache fingerprint, so *adding a selection
+#: knob* in a later version invalidates every stored entry (the key
+#: string alone would just silently never match, which is the same
+#: outcome for lookups but not for schema-drift debugging).
+SELECT_KEY_SCHEMA = (
+    "arch", "pp", "vpp", "groups", "microbatches", "unit",
+    "gather_prefetch", "seq", "mbs", "dp", "pods", "preset", "coalesce",
+    "grad_compress", "mem_budget", "select_mode", "profile_top_k",
+)
+
+
 def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
                 preset: str = "abstract", prefetch: int = 0,
                 candidates: list[str] | None = None,
                 cache_key: tuple | None = None,
-                mem_budget: float | None = None) -> PlanSelection:
+                mem_budget: float | None = None,
+                measure_fn=None, top_k: int = 3,
+                profile_budget_s: float | None = None,
+                persist: bool = False) -> PlanSelection:
     """Build + simulate every candidate schedule; the minimum simulated
     makespan wins (ties keep the earlier candidate). Unit-gated schedules
     (UNIT_GATED_SCHEDULES: zeropp and the gated §4 heuristic
@@ -454,14 +524,54 @@ def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
     are ranked only among themselves if *nothing* fits (min peak memory
     wins then), exactly how the paper picks "the best U that still fits
     in HBM" — this is what lets the unit-gated autogen beat its
-    full-depth sibling when the whole batch does not fit."""
+    full-depth sibling when the whole batch does not fit.
+
+    ``measure_fn`` turns the search coarse→fine (``auto_profiled``): the
+    simulated screen above still runs every candidate, but then the
+    ``top_k`` budget-respecting survivors (best simulated makespan
+    first) are *measured* — ``measure_fn(plan) -> us/call`` compiles and
+    times real steps — and the minimum measured time wins. The
+    simulated-best survivor is always measured first, so the winner's
+    measured time is ≤ the measured time of the plan the purely
+    simulated ranking would have picked, by construction.
+    ``profile_budget_s`` caps the wall-clock spent measuring (at least
+    one candidate is always measured); a candidate whose measurement
+    raises is excluded from the measured ranking but keeps its simulated
+    numbers.
+
+    ``persist=True`` (with a ``cache_key``) reads/writes the on-disk
+    plan cache (``core/plan_cache.py``): a fingerprint-valid disk hit
+    rebuilds the whole selection — winner table included — with zero
+    simulate and zero measure calls."""
+    from repro.core import plan_cache
+
     if cache_key is not None and cache_key in _PLAN_CACHE:
+        _CACHE_STATS["hits"][cache_key] = \
+            _CACHE_STATS["hits"].get(cache_key, 0) + 1
         return _PLAN_CACHE[cache_key]
 
+    fp = plan_cache.fingerprint(cm, SELECT_KEY_SCHEMA)
+    if persist and cache_key is not None:
+        rec = plan_cache.load_entry(cache_key, fp)
+        if rec is not None:
+            try:
+                sel = plan_cache.selection_from_record(rec, cache_key)
+            except Exception:  # noqa: BLE001 — corrupt record: clean search
+                sel = None
+            if sel is not None:
+                _CACHE_STATS["disk_hits"][cache_key] = \
+                    _CACHE_STATS["disk_hits"].get(cache_key, 0) + 1
+                # seed the in-memory cache: repeated sessions in this
+                # process must share the identical PlanSelection object
+                _PLAN_CACHE[cache_key] = sel
+                return sel
+
+    _CACHE_STATS["misses"] += 1
     names = list(candidates) if candidates is not None \
         else candidate_schedules()
     cm_fused = fused_cost_model(cm)
     results: dict = {}
+    plans: dict[str, SchedulePlan] = {}
     fits: tuple[SchedulePlan, PlanAnalysis] | None = None   # within budget
     slim: tuple[SchedulePlan, PlanAnalysis] | None = None   # min peak_mem
     for name in names:
@@ -485,7 +595,9 @@ def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
             results[name] = f"failed: {e}"
             continue
         ana = plan.analyze(cm if plan.has_w else cm_fused, preset=preset)
+        _CACHE_STATS["simulate_calls"] += 1
         results[name] = ana
+        plans[name] = plan
         if mem_budget is None or ana.peak_mem <= mem_budget:
             if fits is None or ana.makespan < fits[1].makespan - 1e-12:
                 fits = (plan, ana)
@@ -496,9 +608,81 @@ def select_plan(P: int, V: int, n_mb: int, unit: int, cm: CostModel, *,
         raise RuntimeError(
             f"no schedule candidate could be built for P={P} V={V} "
             f"n_mb={n_mb} unit={unit}: {results}")
+
+    provenance, measured, profile = "search", None, None
+    if measure_fn is not None:
+        best, measured, profile = _measured_refine(
+            plans, results, fits, best, measure_fn,
+            mem_budget=mem_budget, top_k=top_k,
+            profile_budget_s=profile_budget_s)
+        provenance = "search+measured"
     sel = PlanSelection(selected=best[0], analysis=best[1], preset=preset,
                         candidates=results, key=cache_key,
-                        mem_budget=mem_budget)
+                        mem_budget=mem_budget, provenance=provenance,
+                        measured=measured, profile=profile)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = sel
+        if persist:
+            try:
+                plan_cache.store_entry(
+                    cache_key, fp, plan_cache.selection_record(sel))
+            except Exception:  # noqa: BLE001 — persistence is best-effort
+                pass
     return sel
+
+
+def _measured_refine(plans: dict, results: dict, fits, best, measure_fn, *,
+                     mem_budget, top_k: int,
+                     profile_budget_s: float | None):
+    """Fine pass of the coarse→fine search: measure the top-K simulated
+    survivors with ``measure_fn`` and re-rank by real us/call.
+
+    Survivor order is the coarse ranking the purely simulated selection
+    uses — budget-fitting candidates by makespan when anything fits, else
+    everything by peak memory — so the first measurement is always the
+    plan ``schedule="auto"`` would have picked. Returns
+    ``((plan, analysis), measured, profile)`` with measured numbers
+    attached to the surviving candidates' analyses.
+    """
+    import time as _time
+
+    ok = [(n, a) for n, a in results.items()
+          if isinstance(a, PlanAnalysis)]
+    if fits is not None:
+        pool = [(n, a) for n, a in ok
+                if mem_budget is None or a.peak_mem <= mem_budget]
+        pool.sort(key=lambda x: x[1].makespan)
+    else:
+        pool = sorted(ok, key=lambda x: x[1].peak_mem)
+    survivors = pool[:max(top_k, 1)]
+    sim_best_name = survivors[0][0] if survivors else None
+
+    measured: dict[str, float] = {}
+    t_start = _time.perf_counter()
+    for i, (name, _) in enumerate(survivors):
+        spent = _time.perf_counter() - t_start
+        if i > 0 and profile_budget_s is not None \
+                and spent >= profile_budget_s:
+            break   # budget exhausted; the sim-best was measured first
+        try:
+            us = float(measure_fn(plans[name]))
+        except Exception as e:  # noqa: BLE001 — a plan that won't run
+            results[name] = f"measure failed: {e}"   # can't win on merit
+            continue
+        finally:
+            _CACHE_STATS["measure_calls"] += 1
+        measured[name] = us
+        results[name] = dataclasses.replace(results[name], measured_us=us)
+    profile = {
+        "top_k": top_k,
+        "budget_s": profile_budget_s,
+        "measure_s": _time.perf_counter() - t_start,
+        "survivors": [n for n, _ in survivors],
+        "simulated_best": sim_best_name,
+        "simulated_best_us": measured.get(sim_best_name),
+    }
+    if measured:
+        win = min(measured, key=measured.get)
+        best = (plans[win], results[win])
+    # else: every measurement failed — keep the simulated winner
+    return best, measured, profile

@@ -20,20 +20,48 @@ from repro.api import ensure_host_devices, session
 
 def build_session(arch: str, *, data: int, seq: int, microbatches: int,
                   schedule: str, lr: float, unit: int = 0,
-                  preset: str = "a800"):
+                  preset: str = "a800", profile_top_k: int = 3,
+                  profile_budget_s: float | None = None):
     """One facade call replaces the old 8-step assembly ritual."""
+    kw = {}
+    if schedule == "auto_profiled":
+        kw = dict(profile_top_k=profile_top_k,
+                  profile_budget_s=profile_budget_s)
     sess = session(
         arch, mode="train", data=data, seq_len=seq, cost_preset=preset,
         overrides=dict(schedule=schedule, microbatches=microbatches,
                        unit=unit),
-        optim=dict(lr=lr, warmup=20, total=10_000),
+        optim=dict(lr=lr, warmup=20, total=10_000), **kw,
     )
     if sess.plan_selection is not None:
         sel = sess.plan_selection
-        print(f"schedule=auto selected {sel.selected.name!r} "
+        src = sess._plan_source
+        if src in ("memory-hit", "persisted-hit"):
+            # the provenance line CI's warm-cache re-run greps for
+            kind = "persisted" if src == "persisted-hit" else "memory"
+            print(f"plan-cache: hit ({kind}) -> "
+                  f"{sel.selected.name!r} [{sel.provenance}]")
+        else:
+            print(f"plan-cache: miss (ran {src})")
+        print(f"schedule={schedule} selected {sel.selected.name!r} "
               f"(makespan {sel.analysis.makespan:.3e}, preset "
               f"{sel.preset}); ranking: "
               + ", ".join(f"{n}={m:.3e}" for n, m in sel.ranking()))
+        if sel.measured:
+            sim_best = (sel.profile or {}).get("simulated_best")
+            sim_us = (sel.profile or {}).get("simulated_best_us")
+            win_us = sel.measured.get(sel.selected.name)
+            print("measured us/call: "
+                  + ", ".join(f"{n}={us:.1f}" for n, us in
+                              sel.measured_ranking()))
+            if win_us is not None and sim_us is not None \
+                    and win_us <= sim_us + 1e-9:
+                # CI asserts the coarse→fine contract on this line:
+                # measured(winner) <= measured(simulated-best)
+                print(f"AUTO_PROFILED_OK selected={sel.selected.name} "
+                      f"us={win_us:.1f} simulated_best={sim_best} "
+                      f"us={sim_us:.1f} "
+                      f"delta={(sim_us - win_us) / max(sim_us, 1e-9):.1%}")
     return sess
 
 
@@ -46,10 +74,18 @@ def main():
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--unit", type=int, default=0)
     ap.add_argument("--schedule", default="zeropp",
-                    help="a registered schedule name, or 'auto' for the "
-                         "§4 simulated plan selection")
+                    help="a registered schedule name, 'auto' for the §4 "
+                         "simulated plan selection, or 'auto_profiled' "
+                         "to also time the top-K finalists on the live "
+                         "mesh and pick the fastest measured step")
     ap.add_argument("--preset", default="a800",
                     help="cost preset for schedule=auto (a800 | tpu_v5e)")
+    ap.add_argument("--profile-top-k", type=int, default=3,
+                    help="auto_profiled: how many simulated survivors "
+                         "get a real measurement")
+    ap.add_argument("--profile-budget-s", type=float, default=None,
+                    help="auto_profiled: wall-clock cap on the measuring "
+                         "phase (the simulated-best is always measured)")
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -73,7 +109,9 @@ def main():
         sess = build_session(
             args.arch, data=args.data, seq=args.seq,
             microbatches=args.microbatches, schedule=args.schedule,
-            lr=args.lr, unit=args.unit, preset=args.preset)
+            lr=args.lr, unit=args.unit, preset=args.preset,
+            profile_top_k=args.profile_top_k,
+            profile_budget_s=args.profile_budget_s)
         stream = sess.stream()
         if restored is None:
             params = sess.init_params(jax.random.PRNGKey(0))
@@ -99,8 +137,14 @@ def main():
     state, history = ctl.run(build, args.steps,
                              inject_failure_at=args.inject_failure_at)
     losses = [m["loss"] for _, m in history]
-    print(f"DONE first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "
-          f"straggler_flags={ctl.watchdog.flags}")
+    if losses:
+        print(f"DONE first_loss={losses[0]:.4f} "
+              f"last_loss={losses[-1]:.4f} "
+              f"straggler_flags={ctl.watchdog.flags}")
+    else:
+        # a checkpoint at/past --steps resumes to a zero-step run
+        print(f"DONE resumed-at-target (checkpoint >= --steps "
+              f"{args.steps}) straggler_flags={ctl.watchdog.flags}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""Shared wall-clock measurement: warmup-discard + median-of-N.
+
+Every place the repo times real work — the comm bench A/B, the kernel
+micro-bench, the profile-guided plan search (``schedule="auto_profiled"``)
+and the joint knob hillclimb — goes through :func:`measure_us` so they
+all share the same discipline: discard ``warmup`` calls (compile +
+cache-fill), then take the median of ``iters`` timed calls with the
+device queue drained (``jax.block_until_ready``) before and after each
+one. Single-shot wall timings on CPU are noisy enough to flip schedule
+rankings; the median is what gets recorded and compared.
+
+``benchmarks/timing.py`` re-exports this module so benchmark drivers can
+import it without src/repro on the path mattering (and vice versa: core
+code never imports the ``benchmarks`` package).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+
+def _block(x):
+    """Drain the device queue for ``x`` (pytree-ok); identity off-jax."""
+    try:
+        import jax
+        return jax.block_until_ready(x)
+    except Exception:   # noqa: BLE001 — host-only callables time fine
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One measurement: median + the raw per-call samples (seconds)."""
+
+    median_s: float
+    times_s: tuple    # every timed call, in order
+    warmup: int
+    iters: int
+
+    @property
+    def median_us(self) -> float:
+        return self.median_s * 1e6
+
+    @property
+    def spread(self) -> float:
+        """(max - min) / median — a quick noise indicator."""
+        if not self.times_s or self.median_s <= 0:
+            return 0.0
+        return (max(self.times_s) - min(self.times_s)) / self.median_s
+
+    def as_dict(self) -> dict:
+        return {"median_us": self.median_us, "warmup": self.warmup,
+                "iters": self.iters,
+                "times_us": [t * 1e6 for t in self.times_s]}
+
+
+def measure(fn, *, warmup: int = 1, iters: int = 3,
+            block=_block) -> Timing:
+    """Time ``fn()``: ``warmup`` discarded calls, then median of
+    ``iters``. ``block`` drains async work (defaults to
+    ``jax.block_until_ready`` over the returned pytree)."""
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    for _ in range(max(warmup, 0)):
+        block(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block(fn())
+        times.append(time.perf_counter() - t0)
+    return Timing(median_s=statistics.median(times), times_s=tuple(times),
+                  warmup=max(warmup, 0), iters=iters)
+
+
+def measure_us(fn, *, warmup: int = 1, iters: int = 3,
+               block=_block) -> float:
+    """Median microseconds per call (the number benches record)."""
+    return measure(fn, warmup=warmup, iters=iters, block=block).median_us

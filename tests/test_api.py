@@ -216,6 +216,92 @@ def test_schedule_auto_selection_is_cached():
     assert s3.describe()["schedule"]["preset"] == "tpu_v5e"
 
 
+# --------------------------------------------------------------------------- #
+# schedule="auto_profiled" (spec validation + full cache lifecycle,
+# device-free: the measure_fn is monkeypatched so nothing compiles)
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_validates_profile_knobs():
+    with pytest.raises(SessionError, match="profile_top_k"):
+        session("llama3.2-1b", schedule="auto_profiled", profile_top_k=0)
+    with pytest.raises(SessionError, match="profile_budget_s"):
+        session("llama3.2-1b", schedule="auto_profiled",
+                profile_budget_s=-1.0)
+    with pytest.raises(SessionError, match="train"):
+        session("llama3.2-1b", mode="serve", schedule="auto_profiled")
+    # the profile knobs only steer auto_profiled; anything else rejects
+    with pytest.raises(SessionError, match="auto_profiled"):
+        session("llama3.2-1b", schedule="auto", profile_top_k=5)
+    with pytest.raises(SessionError, match="auto_profiled"):
+        session("llama3.2-1b", schedule="zeropp", profile_budget_s=10.0)
+
+
+def test_schedule_auto_profiled_full_cache_lifecycle(monkeypatch):
+    """search+measured -> memory hit -> persisted hit, with the work
+    counters proving the warm paths do zero simulate/measure calls."""
+    from repro.api.session import Session
+    from repro.core.plan import clear_plan_cache, plan_cache_info
+
+    clear_plan_cache(persisted=True)
+    calls = []
+
+    def fake_build(self):
+        # later measurements come back *faster*, so the measured winner
+        # differs from the simulated-best (the re-ranking must matter)
+        def measure(plan):
+            calls.append(plan.name)
+            return float(200 - len(calls))
+        return measure
+
+    monkeypatch.setattr(Session, "_build_measure_fn", fake_build)
+    kw = dict(schedule="auto_profiled",
+              overrides=dict(microbatches=4, unit=2))
+
+    s1 = session("llama3.2-1b", **kw)
+    sel = s1.plan_selection
+    assert s1._plan_source == "search+measured"
+    assert sel.provenance == "search+measured"
+    assert len(calls) == 3                     # profile_top_k default
+    assert calls[0] == sel.profile["simulated_best"]
+    assert s1.rc.schedule == sel.selected.name == calls[-1]
+    # acceptance inequality: winner measured <= simulated-best measured
+    assert sel.measured[sel.selected.name] <= \
+        sel.profile["simulated_best_us"]
+    d = s1.describe()["schedule"]
+    assert d["auto"]["provenance"] == {
+        "selection": "search+measured", "this_session": "search+measured"}
+    assert d["auto"]["measured"] == sel.measured
+    assert d["auto"]["candidates"][sel.selected.name]["measured_us"] == \
+        sel.measured[sel.selected.name]
+    assert d["cache"]["measure_calls"] == 3
+
+    # second identical session: in-memory hit, zero extra work
+    before = plan_cache_info()
+    s2 = session("llama3.2-1b", **kw)
+    after = plan_cache_info()
+    assert s2._plan_source == "memory-hit"
+    assert s2.plan_selection is sel
+    assert after["simulate_calls"] == before["simulate_calls"]
+    assert after["measure_calls"] == before["measure_calls"]
+    assert len(calls) == 3
+
+    # wipe memory: third session reloads from disk — still zero work
+    clear_plan_cache()
+    s3 = session("llama3.2-1b", **kw)
+    info = plan_cache_info()
+    assert s3._plan_source == "persisted-hit"
+    assert info["simulate_calls"] == 0 and info["measure_calls"] == 0
+    assert s3.plan_selection.provenance == "cache:disk"
+    assert s3.plan_selection.selected.name == sel.selected.name
+    assert s3.plan_selection.measured == sel.measured
+    d3 = s3.describe()["schedule"]
+    assert d3["auto"]["provenance"]["this_session"] == "persisted-hit"
+    assert d3["cache"]["disk_hits"] == 1
+    assert len(calls) == 3
+    clear_plan_cache(persisted=True)
+
+
 def test_schedule_kw_and_override_consistency():
     # schedule= kw is shorthand for overrides["schedule"]
     s = session("llama3.2-1b", schedule="gpipe")

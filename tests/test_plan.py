@@ -358,3 +358,251 @@ def test_pack_table_roundtrip_matches_plan():
     for f in ("kind", "mb", "v", "gather_v", "reduce_v",
               "recv_f_u", "recv_b_u"):
         assert np.array_equal(getattr(pt, f), getattr(plan.packed, f)), f
+
+
+# --------------------------------------------------------------------------- #
+# PR-8: measured re-ranking (coarse->fine) + persisted plan cache
+# --------------------------------------------------------------------------- #
+
+import dataclasses as _dc
+import json as _json
+
+from repro.core import plan_cache
+from repro.core.plan import plan_cache_info
+
+_CANDS = ["zeropp", "1f1b", "gpipe"]
+
+
+def _fake_measure(us_by_name):
+    def measure(plan):
+        return us_by_name[plan.name]
+    return measure
+
+
+def test_measured_refine_reranks_by_wallclock():
+    """A measure_fn that inverts the simulated order flips the winner,
+    and the winner's measured time is <= the simulated-best's measured
+    time (the acceptance-criterion inequality, by construction)."""
+    clear_plan_cache()
+    sim = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                      candidates=list(_CANDS))
+    order = [n for n, _ in sim.ranking() if n in _CANDS]
+    us = {n: float(100 * (i + 1)) for i, n in enumerate(reversed(order))}
+    sel = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                      candidates=list(_CANDS),
+                      measure_fn=_fake_measure(us), top_k=3)
+    assert sel.provenance == "search+measured"
+    assert plan_cache_info()["measure_calls"] == 3
+    assert sel.selected.name == order[-1]          # worst sim, best measured
+    assert sel.measured == us
+    assert sel.profile["simulated_best"] == order[0]
+    assert sel.measured[sel.selected.name] <= \
+        sel.profile["simulated_best_us"]
+    # measured numbers land on the candidates' analyses
+    for n, v in us.items():
+        assert sel.candidates[n].measured_us == v
+    # measured_ranking() is sorted by measured us
+    mr = sel.measured_ranking()
+    assert [v for _, v in mr] == sorted(us.values())
+    clear_plan_cache()
+
+
+def test_profile_budget_caps_to_one_measurement():
+    """profile_budget_s=0 still measures the sim-best survivor (exactly
+    one measurement), so the selection never regresses vs plain auto."""
+    clear_plan_cache()
+    calls = []
+
+    def measure(plan):
+        calls.append(plan.name)
+        return 123.0
+
+    sel = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                      candidates=list(_CANDS), measure_fn=measure,
+                      top_k=3, profile_budget_s=0.0)
+    assert len(calls) == 1
+    assert plan_cache_info()["measure_calls"] == 1
+    assert calls[0] == sel.profile["simulated_best"]
+    assert sel.selected.name == calls[0]
+    clear_plan_cache()
+
+
+def test_measure_failure_excludes_candidate():
+    """A plan whose measurement raises cannot win on merit; the others'
+    measured ranking decides, and the failure is recorded."""
+    clear_plan_cache()
+    sim = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                      candidates=list(_CANDS))
+    order = [n for n, _ in sim.ranking() if n in _CANDS]
+
+    def measure(plan):
+        if plan.name == order[0]:
+            raise RuntimeError("compile blew up")
+        return {order[1]: 50.0, order[2]: 60.0}[plan.name]
+
+    sel = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                      candidates=list(_CANDS), measure_fn=measure,
+                      top_k=3)
+    assert sel.selected.name == order[1]
+    assert str(sel.candidates[order[0]]).startswith("measure failed:")
+    assert order[0] not in sel.measured
+    clear_plan_cache()
+
+
+def test_persisted_cache_roundtrip_zero_simulates():
+    """select -> persist -> wipe memory -> reload from disk with ZERO
+    simulate/measure calls, identical winner, tick-identical table."""
+    clear_plan_cache()
+    key = ("rt-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto", None)
+    s1 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                     persist=True)
+    assert plan_cache_info()["persisted"]["entries"] == 1
+    clear_plan_cache()            # memory + counters only; disk survives
+    s2 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                     persist=True)
+    info = plan_cache_info()
+    assert info["simulate_calls"] == 0
+    assert info["measure_calls"] == 0
+    assert info["disk_hits"] == {key: 1}
+    assert s2.provenance == "cache:disk"
+    assert s2.selected.name == s1.selected.name
+    for f in ("kind", "mb", "v", "gather_v", "reduce_v"):
+        assert np.array_equal(getattr(s2.selected.packed, f),
+                              getattr(s1.selected.packed, f)), f
+    assert abs(s2.analysis.makespan - s1.analysis.makespan) < 1e-9
+    # the disk hit seeds the in-memory cache: third lookup is identity
+    s3 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                     persist=True)
+    assert s3 is s2
+    assert plan_cache_info()["hits"] == {key: 1}
+    clear_plan_cache(persisted=True)
+
+
+def test_persisted_cache_restores_measured_numbers():
+    """A profiled selection round-trips its measured ranking + profile
+    metadata through the disk cache."""
+    clear_plan_cache()
+    key = ("meas-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto_profiled", 3)
+    us = {"zeropp": 90.0, "1f1b": 70.0, "gpipe": 110.0}
+    s1 = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                     candidates=list(_CANDS), cache_key=key,
+                     persist=True, measure_fn=_fake_measure(us), top_k=3)
+    clear_plan_cache()
+    s2 = select_plan(4, 2, 8, 4, CM, preset="abstract",
+                     candidates=list(_CANDS), cache_key=key,
+                     persist=True, measure_fn=_fake_measure(us), top_k=3)
+    assert plan_cache_info()["measure_calls"] == 0   # disk hit: no re-run
+    assert s2.selected.name == s1.selected.name == "1f1b"
+    assert s2.measured == us
+    assert s2.profile["simulated_best"] == s1.profile["simulated_best"]
+    assert s2.candidates["1f1b"].measured_us == 70.0
+    clear_plan_cache(persisted=True)
+
+
+def test_persisted_cache_invalidated_on_cost_model_change():
+    """Changing the measured alpha-beta profile (coll_alpha) changes the
+    fingerprint: the stale disk entry is ignored and a clean search
+    runs."""
+    clear_plan_cache()
+    key = ("inv-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto", None)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                persist=True)
+    clear_plan_cache()
+    cm2 = _dc.replace(CM, coll_alpha=0.25)
+    sel = select_plan(4, 2, 8, 4, cm2, preset="abstract", cache_key=key,
+                      persist=True)
+    info = plan_cache_info()
+    assert info["disk_hits"] == {}
+    assert info["misses"] == 1 and info["simulate_calls"] > 0
+    assert sel.provenance == "search"
+    clear_plan_cache(persisted=True)
+
+
+def test_persisted_cache_invalidated_on_knob_schema_change(monkeypatch):
+    """Growing the selection-key schema (a new knob in a later version)
+    must invalidate every stored entry."""
+    from repro.core import plan as plan_mod
+
+    clear_plan_cache()
+    key = ("schema-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto", None)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                persist=True)
+    clear_plan_cache()
+    monkeypatch.setattr(plan_mod, "SELECT_KEY_SCHEMA",
+                        plan_mod.SELECT_KEY_SCHEMA + ("new_knob",))
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                persist=True)
+    info = plan_cache_info()
+    assert info["disk_hits"] == {} and info["simulate_calls"] > 0
+    clear_plan_cache(persisted=True)
+
+
+def test_persisted_cache_corrupt_file_falls_back():
+    """Corrupt or partially-valid cache files mean a clean search, never
+    an exception."""
+    clear_plan_cache()
+    path = plan_cache.cache_path()
+    key = ("corrupt-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto", None)
+    with open(path, "w") as f:
+        f.write("{not json at all")
+    sel = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                      persist=True)
+    assert sel.provenance == "search"
+    # partial: right fingerprint, garbage record -> also a clean search
+    from repro.core.plan import SELECT_KEY_SCHEMA
+    fp = plan_cache.fingerprint(CM, SELECT_KEY_SCHEMA)
+    with open(path, "w") as f:
+        _json.dump({"version": 1, "measurements": {}, "entries": {
+            plan_cache.entry_key(key): {"fp": fp,
+                                        "record": {"bogus": True}}}}, f)
+    clear_plan_cache()
+    sel2 = select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                       persist=True)
+    assert sel2.provenance == "search"
+    assert plan_cache_info()["simulate_calls"] > 0
+    clear_plan_cache(persisted=True)
+
+
+def test_clear_plan_cache_persisted_removes_file():
+    clear_plan_cache()
+    key = ("clear-arch", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+           "flat", "none", None, "auto", None)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=key,
+                persist=True)
+    path = plan_cache.cache_path()
+    import os as _os
+    assert _os.path.exists(path)
+    clear_plan_cache(persisted=True)
+    assert not _os.path.exists(path)
+    assert plan_cache_info()["persisted"]["entries"] == 0
+
+
+def test_plan_cache_info_counts_per_key_hits():
+    clear_plan_cache()
+    k1 = ("hits-a", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+          "flat", "none", None, "auto", None)
+    k2 = ("hits-b", 4, 2, 1, 8, 4, 0, 32, 1, 1, 1, "abstract",
+          "flat", "none", None, "auto", None)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=k1)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=k1)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=k1)
+    select_plan(4, 2, 8, 4, CM, preset="abstract", cache_key=k2)
+    info = plan_cache_info()
+    assert info["hits"] == {k1: 2}
+    assert info["misses"] == 2
+    assert info["entries"] == 2
+    clear_plan_cache()
+
+
+def test_measurement_store_is_code_salt_gated(monkeypatch):
+    """benchmarks/hillclimb resume entries only replay when the code
+    salt matches (a source change re-measures everything)."""
+    assert plan_cache.store_measurement("hillclimb|test", 42.5)
+    assert plan_cache.load_measurement("hillclimb|test") == 42.5
+    monkeypatch.setattr(plan_cache, "code_salt", lambda: "different")
+    assert plan_cache.load_measurement("hillclimb|test") is None
