@@ -42,6 +42,10 @@ ARCH = "llama3.2-1b"
 LAUNCH_LATENCY = {"a800": 8.0e-06, "tpu_v5e": 1.2e-06}
 #: Effective link efficiency applied to the preset peak bandwidth.
 LINK_EFFICIENCY = 0.9
+#: a2a launch-latency multiple over the base collective: expert dispatch
+#: is a pairwise exchange (send + receive setup on every peer) — the
+#: ``<preset>:a2a`` α literals in COLLECTIVE_ALPHA_BETA are 2× base.
+A2A_LATENCY_FACTOR = 2.0
 
 
 def _collective_sites(hlo_text: str) -> dict:
@@ -175,12 +179,20 @@ def derive_alpha_beta(preset: str) -> tuple[float, float]:
     (peak intra-node/link bandwidth × ``LINK_EFFICIENCY``). These are the
     source of the ``COLLECTIVE_ALPHA_BETA`` literals in core/plan.py —
     the drift gate below fires if either side is edited without the
-    other (e.g. a Hardware preset bandwidth change)."""
+    other (e.g. a Hardware preset bandwidth change).
+
+    ``<preset>:a2a`` entries derive from the same base hardware with the
+    launch latency scaled by ``A2A_LATENCY_FACTOR`` (pairwise exchange);
+    β is the base inverse bandwidth unchanged."""
     from repro.core.plan import PRESETS
 
-    hw = PRESETS[preset]
+    base, _, kind = preset.partition(":")
+    hw = PRESETS[base]
     bw_eff = (hw.intra_bw or hw.link_bw) * LINK_EFFICIENCY
-    return LAUNCH_LATENCY[preset], 1.0 / bw_eff
+    alpha = LAUNCH_LATENCY[base]
+    if kind == "a2a":
+        alpha *= A2A_LATENCY_FACTOR
+    return alpha, 1.0 / bw_eff
 
 
 def alpha_share_grid(preset: str):

@@ -47,6 +47,10 @@ KNOB_AXES = (
     ("gather_prefetch", (0, 1, 2)),
     ("coalesce", ("flat", "none")),
     ("grad_compress", ("none", "int8")),
+    # expert placement (MoE archs only; the axis is skipped for dense
+    # models): gathered = experts ride the FSDP collectives, ep =
+    # experts sharded over data + all-to-all token movement
+    ("moe_mode", ("gathered", "ep")),
 )
 
 #: Relative improvement a move must show to be accepted — absorbs the
@@ -66,13 +70,14 @@ def _start_vector(arch: str) -> dict:
         "gather_prefetch": rc.gather_prefetch,
         "coalesce": rc.coalesce,
         "grad_compress": rc.grad_compress,
+        "moe_mode": rc.moe_mode,
     }
 
 
 def _vec_label(vec: dict) -> str:
     return (f"{vec['schedule']}-U{vec['unit']}-V{vec['vpp']}"
             f"-pf{vec['gather_prefetch']}-{vec['coalesce']}"
-            f"-gc{vec['grad_compress']}")
+            f"-gc{vec['grad_compress']}-{vec['moe_mode']}")
 
 
 class Climber:
@@ -150,6 +155,8 @@ def climb(arch: str = "llama3.2-1b", *, budget_s: float = 240.0,
     """
     cl = Climber(arch, data=data, seq=seq, microbatches=microbatches,
                  mem_budget=mem_budget)
+    from repro.api import get_arch
+    has_moe = get_arch(arch).reduced()[0].moe is not None
     t0 = time.perf_counter()
 
     def out_of_budget() -> bool:
@@ -183,6 +190,8 @@ def climb(arch: str = "llama3.2-1b", *, budget_s: float = 240.0,
         sweep += 1
         moved = False
         for knob, values in KNOB_AXES:
+            if knob == "moe_mode" and not has_moe:
+                continue
             if out_of_budget():
                 print(f"[hillclimb] budget ({budget_s:.0f}s) exhausted "
                       f"mid-sweep {sweep}")

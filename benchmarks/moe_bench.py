@@ -1,0 +1,142 @@
+"""EP-vs-gathered MoE benchmark: the acceptance trajectory for treating
+expert parallelism as a schedulable tick-engine resource.
+
+Three row families, all on the qwen2-moe reduced config (8 experts
+top-2, 3 layers — small enough for fake CPU devices, structured enough
+that the a2a cost terms are nonzero):
+
+* ``moe/train_{mode}`` — measured train-step wall time per expert
+  placement, with the simulated a2a share from the plan analysis in the
+  derived column (what ``moe_mode="auto"`` ranks on);
+* ``moe/auto_resolved`` — which placement the a2a-aware cost model
+  picked and both simulated scores (the §4 search run once per mode);
+* ``moe/serve_capacity_*`` — engine-level capacity-aware admission: a
+  tight skew bound serves the same workload with deferred admissions,
+  token-identically, trading occupancy for zero projected drops.
+
+Run standalone:
+  SPMD_DEVICES=8 PYTHONPATH=src:. python -m benchmarks.moe_bench
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import timing
+
+ARCH = "qwen2-moe-a2.7b"
+
+
+def _train_row(mode: str, *, data: int = 2, seq: int = 32,
+               microbatches: int = 2):
+    import jax
+
+    from repro.api import session
+
+    sess = session(ARCH, mode="train", data=data, seq_len=seq,
+                   moe_mode=mode,
+                   overrides=dict(microbatches=microbatches))
+    sched = sess.describe()["schedule"]
+    coll = sched.get("collectives", {})
+    params = sess.init_params(jax.random.PRNGKey(0))
+    batch = sess.stream(seed=0).batch(0)
+    step = sess.train_step_fn()
+    us = timing.measure_us(lambda: step(params, batch), warmup=1, iters=3)
+    derived = (f"moe_mode={mode};makespan={sched['makespan']:.3e};"
+               f"a2a_total={coll.get('a2a_total_s', 0.0):.3e};"
+               f"t_a2a={coll.get('a2a_t_event_s', 0.0):.3e}")
+    return (f"moe/train_{mode}", us, derived), us
+
+
+def _auto_row(*, data: int = 2, seq: int = 32, microbatches: int = 2):
+    from repro.api import session
+
+    sess = session(ARCH, mode="train", data=data, seq_len=seq,
+                   schedule="auto", moe_mode="auto",
+                   overrides=dict(microbatches=microbatches))
+    d = sess.describe()["schedule"]
+    auto = d.get("moe_mode_auto", {})
+    return ("moe/auto_resolved", 0.0,
+            f"resolved={auto.get('resolved')};scores="
+            + ",".join(f"{m}:{s:.3e}"
+                       for m, s in sorted(auto.get("scores", {}).items())))
+
+
+def _serve_capacity_rows(*, data: int = 2, max_slots: int = 4):
+    import time
+
+    import jax
+
+    from repro.api import session
+    from repro.serving import MoECapacity, SchedulerPolicy
+
+    sess = session(ARCH, mode="serve", data=data, max_slots=max_slots,
+                   max_seq=24, moe_mode="ep",
+                   overrides=dict(microbatches=2, moe_stats=True))
+    params = sess.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, sess.cfg.vocab, size=n).astype(np.int32)
+               for n in (3, 8, 5, 6, 4, 7)]
+
+    def run(policy):
+        eng = sess.serve_engine(params, policy=policy)
+        hs = [eng.submit(p, max_gen=4) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run_until_idle()
+        dt = time.perf_counter() - t0
+        toks = [h.result(timeout=10) for h in hs]
+        return toks, eng.stats, dt
+
+    run(None)                                 # warmup: pay jit compiles
+    toks_open, st_open, dt_open = run(None)   # default cfg-derived bound
+    tight = SchedulerPolicy(moe_capacity=MoECapacity(
+        n_experts=8, top_k=2, capacity_factor=8.0, skew=12.0))
+    toks_tight, st_tight, dt_tight = run(tight)
+    assert toks_open == toks_tight, "capacity bound changed tokens"
+    per_tok = lambda dt, st: dt * 1e6 / max(st.generated_tokens, 1)  # noqa: E731
+    rows = [
+        ("moe/serve_capacity_open", per_tok(dt_open, st_open),
+         f"us/token;deferrals={st_open.capacity_deferrals};"
+         f"decode_steps={st_open.decode_steps};"
+         f"dropped={st_open.moe.as_dict()['dropped_tokens']}"),
+        ("moe/serve_capacity_tight", per_tok(dt_tight, st_tight),
+         f"us/token;deferrals={st_tight.capacity_deferrals};"
+         f"decode_steps={st_tight.decode_steps};skew=12"),
+    ]
+    print(f"  serve capacity: open {st_open.decode_steps} decode steps "
+          f"({st_open.capacity_deferrals} deferrals) vs tight "
+          f"{st_tight.decode_steps} ({st_tight.capacity_deferrals}); "
+          "tokens identical")
+    return rows
+
+
+def moe_rows():
+    """run.py hook: ep-vs-gathered trajectory rows."""
+    print("\n=== MoE: expert placement through the tick engine ===")
+    rows = []
+    us = {}
+    for mode in ("gathered", "ep"):
+        row, us[mode] = _train_row(mode)
+        rows.append(row)
+        print(f"  train {mode}: {us[mode] / 1e3:.1f} ms/call "
+              f"({row[2]})")
+    rows.append(("moe/train_ep_over_gathered",
+                 0.0, f"ratio={us['ep'] / us['gathered']:.3f}"))
+    rows.append(_auto_row())
+    print(f"  {rows[-1][0]}: {rows[-1][2]}")
+    rows += _serve_capacity_rows()
+    return rows
+
+
+def main():
+    from repro.api import ensure_host_devices
+
+    ensure_host_devices()
+    rows = moe_rows()
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

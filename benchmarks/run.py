@@ -25,7 +25,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json",
-                    default=os.path.join(_REPO_ROOT, "BENCH_pr8.json"),
+                    default=os.path.join(_REPO_ROOT, "BENCH_pr9.json"),
                     help="machine-readable rows artifact ('' to skip)")
     ap.add_argument("--hillclimb-budget-s", type=float, default=240.0,
                     help="wall-clock budget for the joint knob hillclimb "
@@ -38,6 +38,7 @@ def main() -> None:
     ensure_host_devices()
 
     from benchmarks import comm_bench
+    from benchmarks import moe_bench
     from benchmarks import paper_tables as T
     from benchmarks import serving_bench
 
@@ -53,6 +54,7 @@ def main() -> None:
     rows += serving_bench.paged_prefix_rows()
     rows += serving_bench.decode_attention_rows()
     rows += comm_bench.bench_rows()
+    rows += moe_bench.moe_rows()
     if args.hillclimb_budget_s > 0:
         from benchmarks import hillclimb
         rows += hillclimb.hillclimb_rows(

@@ -112,11 +112,20 @@ class Session:
         self._plan_source = None   # memory-hit | persisted-hit | search |
         #                            search+measured — THIS construction's
         #                            lookup outcome, for describe()
+        self._moe_mode_auto = None  # moe_mode="auto" resolution summary
+        self._engine_stats = None   # serving EngineStats (engine attaches)
         if self.rc.schedule in ("auto", "auto_profiled"):
-            self.plan_selection = self._auto_select(
-                profiled=self.rc.schedule == "auto_profiled")
+            profiled = self.rc.schedule == "auto_profiled"
+            if self.rc.moe_mode == "auto":
+                self.plan_selection, mode = self._auto_select_moe(profiled)
+                self.rc = dataclasses.replace(self.rc, moe_mode=mode)
+            else:
+                self.plan_selection = self._auto_select(profiled=profiled)
             self.rc = dataclasses.replace(
                 self.rc, schedule=self.plan_selection.selected.name)
+        elif self.rc.moe_mode == "auto":
+            self.rc = dataclasses.replace(
+                self.rc, moe_mode=self._resolve_moe_mode_fixed())
 
     # ------------------------------------------------------------------ #
     # Lazy distribution state
@@ -216,7 +225,8 @@ class Session:
             dp = 8
         return seq, self.spec.microbatch_size, dp
 
-    def _coll_counts(self, seg) -> tuple[int, int]:
+    def _coll_counts(self, seg, moe_mode: str | None = None
+                     ) -> tuple[int, int]:
         """(per-gather-tick, per-reduce-tick) collective counts for the
         α–β cost model — 1 each under the flat-segment layout, the
         gatherable tensor count under per-tensor collectives. Device-free:
@@ -224,7 +234,8 @@ class Session:
         if self.rc.serve_resident:
             return 0, 0  # weight-resident: no FSDP collectives at all
         _, _, dp = self._cost_shape()
-        ep = self.rc.moe_mode == "ep" and self.cfg.moe is not None
+        mode = moe_mode if moe_mode is not None else self.rc.moe_mode
+        ep = mode == "ep" and self.cfg.moe is not None
         specs = M.stage_specs(self.cfg, seg)
         n_gath = n_repl = 0
         for n, sp in specs.items():
@@ -240,15 +251,69 @@ class Session:
             return 1, 1 + n_repl
         return n_gath, n_gath + n_repl
 
-    def _cost_model(self, vpp: int):
+    def _moe_layers_per_stage(self, seg) -> float:
+        """Mean MoE layers per pipeline stage of ``seg`` (0 without MoE)."""
+        if self.cfg.moe is None:
+            return 0.0
+        n_moe = sum(1 for i in range(self.cfg.n_layers)
+                    if self.cfg.layer_kind(i).endswith(":moe"))
+        n_stages = max(self.geo.seg_stages(seg), 1)
+        return n_moe / n_stages
+
+    def _a2a_workload(self, seg, moe_mode: str | None = None
+                      ) -> tuple[int, int, float]:
+        """(n_a2a_f, n_a2a_b, a2a_bytes) of one stage tick under EP.
+
+        dispatch + combine per MoE layer in F; B re-runs the forward
+        pair under remat and pays the backward pair, so 4 (2 without
+        remat). Bytes = one event's wire traffic: the [E, capacity, d]
+        dispatch buffer's off-rank fraction (dp-1)/dp at the compute
+        dtype. All zeros unless EP MoE is active — gathered MoE moves
+        tokens locally and pays the FSDP gathers instead."""
+        mode = moe_mode if moe_mode is not None else self.rc.moe_mode
+        mo = self.cfg.moe
+        if mo is None or mode != "ep":
+            return 0, 0, 0.0
+        from repro.models.blocks import _capacity
+
         seq, mbs, dp = self._cost_shape()
-        n_g, n_r = self._coll_counts(self.geo.segments[-1])
+        m = self._moe_layers_per_stage(seg)
+        if m <= 0:
+            return 0, 0, 0.0
+        cap = _capacity(seq * mbs, mo)
+        dtype_bytes = 2 if "16" in self.rc.compute_dtype else 4
+        a2a_bytes = (mo.n_experts * cap * self.cfg.d_model * dtype_bytes
+                     * (dp - 1) / max(dp, 1))
+        n_f = max(1, round(2 * m))
+        n_b = max(1, round((4 if self.rc.remat else 2) * m))
+        return n_f, n_b, a2a_bytes
+
+    def _moe_gather_bytes(self, seg, moe_mode: str | None = None) -> float:
+        """Extra per-tick FSDP gather/reduce bytes the *gathered* MoE
+        mode pays for expert tensors (EP never gathers them)."""
+        mode = moe_mode if moe_mode is not None else self.rc.moe_mode
+        mo = self.cfg.moe
+        if mo is None or mode == "ep":
+            return 0.0
+        m = self._moe_layers_per_stage(seg)
+        dtype_bytes = 2 if "16" in self.rc.param_dtype else 4
+        return 3 * mo.n_experts * self.cfg.d_model * mo.d_ff_expert \
+            * m * dtype_bytes
+
+    def _cost_model(self, vpp: int, moe_mode: str | None = None):
+        seq, mbs, dp = self._cost_shape()
+        seg = self.geo.segments[-1]
+        n_g, n_r = self._coll_counts(seg, moe_mode)
+        n_a2a_f, n_a2a_b, a2a_bytes = self._a2a_workload(seg, moe_mode)
         return preset_cost_model(
             self.spec.cost_preset, self.cfg, P=self.rc.pp, V=vpp,
             seq=seq, mbs=mbs, dp=dp,
-            n_coll_gather=n_g, n_coll_reduce=n_r)
+            n_coll_gather=n_g, n_coll_reduce=n_r,
+            n_a2a_f=n_a2a_f, n_a2a_b=n_a2a_b, a2a_bytes=a2a_bytes,
+            extra_stage_param_bytes=self._moe_gather_bytes(seg, moe_mode))
 
-    def _auto_select(self, profiled: bool = False):
+    def _auto_select(self, profiled: bool = False,
+                     moe_mode: str | None = None):
         """Simulate every registered schedule (+ the §4 autogen heuristic)
         for this (arch × shape × mesh) and pick the minimum-makespan plan
         — or, ``profiled``, the minimum *measured* us/call among the
@@ -262,23 +327,24 @@ class Session:
         seg = self.geo.segments[-1]
         seq, mbs, dp = self._cost_shape()
         preset = self.spec.cost_preset
+        mode = moe_mode if moe_mode is not None else rc.moe_mode
         # component order mirrors plan.SELECT_KEY_SCHEMA (part of the
         # persisted-cache fingerprint)
         cache_key = (
             self.cfg.name, rc.pp, seg.vpp, rc.groups, rc.microbatches,
             rc.unit_size, rc.gather_prefetch, seq, mbs, dp,
             self.spec.pods or 1, preset, rc.coalesce, rc.grad_compress,
-            self.spec.mem_budget, rc.schedule,
+            mode, self.spec.mem_budget, rc.schedule,
             self.spec.profile_top_k if profiled else None,
         )
         self._plan_key = cache_key
         before = plan_cache_info()
         sel = select_plan(
             rc.pp, seg.vpp, rc.microbatches, rc.unit_size,
-            self._cost_model(seg.vpp), preset=preset,
+            self._cost_model(seg.vpp, mode), preset=preset,
             prefetch=rc.gather_prefetch, cache_key=cache_key,
             mem_budget=self.spec.mem_budget,
-            measure_fn=self._build_measure_fn() if profiled else None,
+            measure_fn=self._build_measure_fn(mode) if profiled else None,
             top_k=self.spec.profile_top_k,
             profile_budget_s=self.spec.profile_budget_s,
             persist=True)
@@ -293,7 +359,69 @@ class Session:
             self._plan_source = sel.provenance
         return sel
 
-    def _build_measure_fn(self):
+    def _auto_select_moe(self, profiled: bool = False):
+        """``moe_mode="auto"`` × ``schedule="auto"``: run the §4 plan
+        selection once per MoE mode (each with its own mode-bearing
+        cache key and a2a/gather cost model) and let the better selected
+        makespan — measured us/call when profiled — pick the mode.
+        Returns ``(selection, mode)`` with the loser's candidates merged
+        in under ``"<mode>:<schedule>"`` keys so describe()/launch can
+        rank EP vs gathered rows side by side."""
+        if self.cfg.moe is None:
+            return self._auto_select(profiled, "gathered"), "gathered"
+        sels: dict[str, Any] = {}
+        keys: dict[str, Any] = {}
+        for mode in ("gathered", "ep"):
+            sels[mode] = self._auto_select(profiled, mode)
+            keys[mode] = self._plan_key
+
+        def _score(sel):
+            if sel.measured:
+                return min(sel.measured.values())
+            return sel.analysis.makespan
+
+        mode = min(sels, key=lambda m: _score(sels[m]))
+        self._plan_key = keys[mode]
+        self._moe_mode_auto = {
+            "resolved": mode,
+            "scores": {m: _score(s) for m, s in sels.items()},
+            "selected": {m: s.selected.name for m, s in sels.items()},
+        }
+        merged = dataclasses.replace(
+            sels[mode],
+            candidates={f"{m}:{n}": a
+                        for m in ("gathered", "ep")
+                        for n, a in sels[m].candidates.items()})
+        return merged, mode
+
+    def _resolve_moe_mode_fixed(self) -> str:
+        """``moe_mode="auto"`` under a *fixed* schedule: analyze that one
+        schedule's table under each mode's cost model (EP pays costed
+        a2a ticks, gathered pays the expert tensors' FSDP collective
+        bytes) and keep the smaller simulated makespan."""
+        if self.cfg.moe is None:
+            return "gathered"
+        rc = self.rc
+        seg = self.geo.segments[-1]
+        unit = (rc.unit_size if rc.schedule in UNIT_GATED_SCHEDULES
+                else rc.microbatches)
+        plan = SchedulePlan.build(
+            rc.schedule,
+            SchedParams(P=rc.pp, V=seg.vpp, n_mb=rc.microbatches,
+                        unit=unit),
+            prefetch=rc.gather_prefetch)
+        scores = {}
+        for mode in ("gathered", "ep"):
+            cm = self._cost_model(seg.vpp, mode)
+            ana = plan.analyze(cm if plan.has_w else fused_cost_model(cm),
+                               preset=self.spec.cost_preset)
+            scores[mode] = ana.makespan
+        mode = min(scores, key=scores.get)
+        self._moe_mode_auto = {"resolved": mode, "scores": scores,
+                               "selected": {m: rc.schedule for m in scores}}
+        return mode
+
+    def _build_measure_fn(self, moe_mode: str | None = None):
         """The auto_profiled fine pass: ``measure_fn(plan) -> us/call``.
 
         Each candidate gets its own Runtime (same mesh, same params —
@@ -307,7 +435,9 @@ class Session:
         state: dict[str, Any] = {}
 
         def _measure(plan: SchedulePlan) -> float:
-            rc = dataclasses.replace(self.rc, schedule=plan.name)
+            rc = dataclasses.replace(
+                self.rc, schedule=plan.name,
+                **({"moe_mode": moe_mode} if moe_mode else {}))
             rt = Runtime(self.cfg, rc, self.mesh,
                          multi_pod=self.multi_pod, plan=plan)
             step = make_train_step(rt, self.shape_cfg)
@@ -484,7 +614,9 @@ class Session:
         ``(tokens[max_slots], caches)`` — or, with ``want_logits``,
         ``(tokens, logits[max_slots, vocab], caches)`` for the host-side
         sampling layer. Rows outside ``slot_mask`` carry garbage samples
-        the caller ignores.
+        the caller ignores. With ``RunConfig.moe_stats`` on an MoE
+        segment, one extra trailing ``{"load", "dropped"}`` dict is
+        appended (per-layer-row expert-load histogram + capacity drops).
         """
         pos = batch.get("pos")
         if getattr(pos, "ndim", 0) != 1:
@@ -715,7 +847,10 @@ class Session:
                 for s in M.stage_specs(cfg, sg).values())
         from repro.core.plan import COLLECTIVE_ALPHA_BETA
         alpha, beta = COLLECTIVE_ALPHA_BETA[self.spec.cost_preset]
+        a2a_alpha, a2a_beta = COLLECTIVE_ALPHA_BETA.get(
+            f"{self.spec.cost_preset}:a2a", (2 * alpha, beta))
         n_g, n_r = self._coll_counts(seg)
+        n_a2a_f, n_a2a_b, a2a_bytes = self._a2a_workload(seg)
         sched: dict[str, Any] = {
             "name": rc.schedule,
             "microbatches": rc.microbatches,
@@ -748,8 +883,21 @@ class Session:
                 "per_reduce_tick": n_r,
                 "alpha_s": alpha,
                 "beta_s_per_byte": beta,
+                # EP MoE all-to-all profile: events per F/B tick (0 in
+                # gathered mode), one event's wire bytes, the a2a α–β
+                # constants, and the plan's simulated a2a totals.
+                "moe_mode": rc.moe_mode,
+                "a2a_per_f_tick": n_a2a_f,
+                "a2a_per_b_tick": n_a2a_b,
+                "a2a_bytes": a2a_bytes,
+                "a2a_alpha_s": a2a_alpha,
+                "a2a_beta_s_per_byte": a2a_beta,
+                "a2a_t_event_s": ana.t_a2a,
+                "a2a_total_s": ana.a2a_total,
             },
         }
+        if self._moe_mode_auto is not None:
+            sched["moe_mode_auto"] = dict(self._moe_mode_auto)
         if self.plan_selection is not None:
             sel = self.plan_selection
 
@@ -765,6 +913,10 @@ class Session:
                 # established 4-key shape.
                 if a.measured_us is not None:
                     d["measured_us"] = a.measured_us
+                # EP candidates carry their simulated a2a share (0-cost
+                # candidates — gathered/dense — keep the base shape)
+                if a.a2a_total > 0:
+                    d["a2a_total"] = a.a2a_total
                 return d
 
             sched["auto"] = {
@@ -801,7 +953,7 @@ class Session:
                 "entries": info["entries"],
                 "persisted": info["persisted"],
             }
-        return {
+        out = {
             "arch": cfg.name,
             "mode": self.spec.mode,
             # jit buffer-donation audit: which step inputs alias their
@@ -828,6 +980,22 @@ class Session:
             "kernels": self._kernel_report(),
             "n_params": n_params,
         }
+        if self._engine_stats is not None:
+            out["serving"] = self._serving_report()
+        return out
+
+    def _serving_report(self) -> dict:
+        """Engine-side counters for ``describe()["serving"]`` — present
+        once a :meth:`serve_engine` has attached its stats: throughput
+        counters plus the capacity-admission (deferral / projected
+        hot-expert overflow) and dispatch-observability (per-layer
+        expert-load histogram, dropped-token) counters."""
+        st = self._engine_stats
+        out = dataclasses.asdict(st)
+        moe = getattr(st, "moe", None)
+        if moe is not None:
+            out["moe"] = moe.as_dict()
+        return out
 
     def _kernel_report(self) -> dict:
         """Kernel-dispatch summary for ``describe()["kernels"]``.

@@ -64,6 +64,13 @@ class SessionSpec:
     # escape hatch (debugging / bitwise A-B). Shorthand for
     # overrides["coalesce"].
     coalesce: str | None = None
+    # MoE expert placement: "gathered" (experts ride the FSDP
+    # gather/reduce path like any tensor), "ep" (experts stay sharded
+    # over the data axis; tokens move via all-to-all dispatch/combine),
+    # or "auto" (cost both under the a2a-aware α–β model and keep the
+    # smaller simulated makespan — with schedule="auto" the §4 search
+    # runs once per mode). Shorthand for overrides["moe_mode"].
+    moe_mode: str | None = None
     overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     optim: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     data: int | None = None         # data-axis size (None -> derived)
@@ -114,6 +121,14 @@ class SessionSpec:
                     f"coalesce={self.coalesce!r} vs "
                     f"overrides['coalesce']={prev!r}")
             self.overrides["coalesce"] = self.coalesce
+        if self.moe_mode is not None:
+            prev = self.overrides.get("moe_mode")
+            if prev is not None and prev != self.moe_mode:
+                raise SessionError(
+                    f"moe_mode given twice and inconsistently: "
+                    f"moe_mode={self.moe_mode!r} vs "
+                    f"overrides['moe_mode']={prev!r}")
+            self.overrides["moe_mode"] = self.moe_mode
         if self.kv_cache_dtype is not None:
             prev = self.overrides.get("kv_cache_dtype")
             if prev is not None and prev != self.kv_cache_dtype:
@@ -176,6 +191,13 @@ class SessionSpec:
                 f"unknown coalesce mode {co!r}; pick 'flat' (one "
                 "collective per stage segment per tick) or 'none' "
                 "(per-tensor collectives)")
+        mm = self.overrides.get("moe_mode")
+        if mm is not None and mm not in ("gathered", "ep", "auto"):
+            raise SessionError(
+                f"unknown moe_mode {mm!r}; pick 'gathered' (experts ride "
+                "the FSDP collectives), 'ep' (expert-parallel: experts "
+                "sharded over data, tokens all-to-all'd), or 'auto' "
+                "(cost both and keep the smaller simulated makespan)")
         ki = self.overrides.get("kernel_impl")
         if ki not in (None, "ref", "pallas"):
             raise SessionError(

@@ -492,6 +492,9 @@ def segment_train_scan(
         carry["dmembuf"] = jnp.zeros((Btot, mbs, enc_ctx2, d), cdt)
 
     # ---- branch bodies ----------------------------------------------------#
+    track_moe = "moe_load" in metrics0 and any(
+        k.endswith(":moe") for k in seg.kinds)  # rc.moe_stats histograms
+
     def make_ctx(tape, u):
         """Returns (ctx, mem_tval or None)."""
         mem = None
@@ -546,6 +549,10 @@ def segment_train_scan(
         params_v = stage_params(v, row["use_slot"], c["gbuf"])
         t = Tape(params_v, mode="bwd", no_defer=frozenset(no_defer))
         ctx, mem_tv = make_ctx(t, u)
+        if track_moe:
+            # accumulate only in B (once per micro-batch per stage; the
+            # F pass of the same micro-batch would double-count)
+            ctx.moe_stats = []
         stage_id = v * Pe + p_rank
         xin = t.value(x)
         out, aux = M.apply_stage(t, ctx, seg, xin, stage_id)
@@ -702,6 +709,15 @@ def segment_train_scan(
         c["metrics"] = dict(c["metrics"])
         c["metrics"]["aux_sum"] = (
             c["metrics"]["aux_sum"] + aux.val.astype(jnp.float32))
+        if track_moe and ctx.moe_stats:
+            Ls = len(seg.kinds)
+            ml, dr = c["metrics"]["moe_load"], c["metrics"]["moe_dropped"]
+            for pfx_, load, dropped in ctx.moe_stats:
+                j = int(pfx_.split(".", 1)[0][1:])  # "L{j}.ffn" -> j
+                ml = ml.at[stage_id * Ls + j].add(load)
+                dr = dr + dropped
+            c["metrics"]["moe_load"] = ml
+            c["metrics"]["moe_dropped"] = dr
         return c
 
     def w_branch(c, row):
@@ -754,6 +770,15 @@ def train_body(params, batch, *, rt, shape_cfg, mbs, vloc,
     metrics0 = {"loss_sum": jnp.zeros((), jnp.float32),
                 "aux_sum": jnp.zeros((), jnp.float32),
                 "emb_dropped": jnp.zeros((), jnp.int32)}
+    if rc.moe_stats and cfg.moe is not None:
+        # per-(stage, stage-layer) expert-load histogram: row
+        # stage_id * len(seg.kinds) + j is global (padded) layer j of
+        # stage stage_id; the final psum totals it across ranks.
+        seg_m = rt.segs["dec" if cfg.encdec is not None else "main"]
+        rows = rt.Pe * seg_m.vpp * len(seg_m.kinds)
+        metrics0["moe_load"] = jnp.zeros((rows, cfg.moe.n_experts),
+                                         jnp.int32)
+        metrics0["moe_dropped"] = jnp.zeros((), jnp.int32)
 
     if cfg.encdec is None:
         seg = rt.segs["main"]
@@ -804,14 +829,31 @@ def train_body(params, batch, *, rt, shape_cfg, mbs, vloc,
         io_g, metrics = res_eb["io_grads"], res_eb["metrics"]
 
     # ---- cross-group / cross-pod gradient reduction ----------------------- #
+    # EP expert grads are local-complete over "data"; they only need the
+    # cross-group butterfly + cross-pod psum. With flat coalescing each
+    # stage's expert bank rides ONE slab collective (bitwise identical to
+    # the per-tensor chain); int8 grad compression quantizes the slab wire.
     for sname in seg_grads:
-        seg_grads[sname] = {
-            n: fsdp.group_allreduce(g, rt.G, Pe)
-            for n, g in seg_grads[sname].items()
-        }
-        if rt.multi_pod:
-            seg_grads[sname] = {n: jax.lax.psum(g, POD)
-                                for n, g in seg_grads[sname].items()}
+        sg = seg_grads[sname]
+        efl = rt.ep_flat_layouts.get(sname)
+        out_g = {}
+        if efl is not None:
+            slab = fsdp.pack_flat_stack(sg, efl)
+            if rc.grad_compress == "int8":
+                slab = fsdp.ep_allreduce_flat_int8(slab, rt.G, Pe,
+                                                   pod=rt.multi_pod)
+            else:
+                slab = fsdp.ep_allreduce_flat(slab, rt.G, Pe,
+                                              pod=rt.multi_pod)
+            out_g.update(fsdp.unpack_flat_stack(slab, efl))
+        for n, g in sg.items():
+            if n in out_g:
+                continue
+            g = fsdp.group_allreduce(g, rt.G, Pe)
+            if rt.multi_pod:
+                g = jax.lax.psum(g, POD)
+            out_g[n] = g
+        seg_grads[sname] = out_g
     io_g = {n: jax.lax.psum(g, MODEL) for n, g in io_g.items()}
     if rt.multi_pod:
         io_g = {n: jax.lax.psum(g, POD) for n, g in io_g.items()}
@@ -954,6 +996,8 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         mbs=mbs, paged=page_tables is not None)
 
     act = (mbs, s, d)
+    track_moe = (rc.moe_stats and cfg.moe is not None
+                 and any(k.endswith(":moe") for k in seg.kinds))
     carry = dict(
         send_f=jnp.zeros(act, cdt),
         recv_f=jnp.zeros(act, cdt),
@@ -962,6 +1006,11 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         caches=dict(cache_tree),
         out_tok=jnp.zeros((G * Btot, mbs), jnp.int32),
     )
+    if track_moe:
+        rows_m = Pe * V * len(seg.kinds)
+        carry["moe_load"] = jnp.zeros((rows_m, cfg.moe.n_experts),
+                                      jnp.int32)
+        carry["moe_dropped"] = jnp.zeros((), jnp.int32)
     if want_logits:
         # per-u drain logits land here; vloc path: every data rank
         # computes its vocab slice for ALL data ranks' rows (the
@@ -997,8 +1046,18 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
                            if page_tables is not None else None)
         ch = [cache_get(c["caches"], j, v, u)
               for j in range(len(seg.kinds))]
+        if track_moe:
+            ctx.moe_stats = []
         y, ch2 = M.cached_stage(ctx, seg, params_v, x, ch, stage_id, pos_u)
         c = dict(c)
+        if track_moe and ctx.moe_stats:
+            Ls = len(seg.kinds)
+            ml, dr = c["moe_load"], c["moe_dropped"]
+            for pfx_, load, dropped in ctx.moe_stats:
+                j = int(pfx_.split(".", 1)[0][1:])
+                ml = ml.at[stage_id * Ls + j].add(load)
+                dr = dr + dropped
+            c["moe_load"], c["moe_dropped"] = ml, dr
         c["caches"] = dict(c["caches"])
         for j in range(len(seg.kinds)):
             c["caches"] = cache_put(c["caches"], j, v, u, ch2[j])
@@ -1045,6 +1104,15 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
         MODEL)
     caches_out = dict(caches)
     caches_out[seg_key] = carry["caches"]
+    moe_out = None
+    if track_moe:
+        # MODEL totals the per-stage rows; the data/pod axes hold
+        # disjoint slot shards only when the batch is sharded (seq_shard
+        # replicates the batch — summing would multiply by dsize).
+        axes = (MODEL,) + (() if seq_shard else
+                           ((POD, DATA) if rt.multi_pod else (DATA,)))
+        moe_out = {"load": jax.lax.psum(carry["moe_load"], axes),
+                   "dropped": jax.lax.psum(carry["moe_dropped"], axes)}
     if want_logits:
         ol = carry["out_logits"]  # [G·Btot, (D·)mbs, vloc|vocab]
         if vloc:
@@ -1058,5 +1126,7 @@ def serve_body(params, caches, batch, *, rt, shape_cfg, mbs,
             ol = ol.reshape(G * Btot * mbs, cfg.vocab)
         ol = jax.lax.psum(
             jnp.where((p_rank == Pe - 1), ol, jnp.zeros_like(ol)), MODEL)
-        return out_tok, ol, caches_out
-    return out_tok, caches_out
+        return ((out_tok, ol, caches_out, moe_out) if track_moe
+                else (out_tok, ol, caches_out))
+    return ((out_tok, caches_out, moe_out) if track_moe
+            else (out_tok, caches_out))

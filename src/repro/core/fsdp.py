@@ -167,16 +167,29 @@ def pipe_perm(pp: int, groups: int, direction: int):
 # --------------------------------------------------------------------------- #
 
 
-def build_flat_layout(specs: dict, gatherable, dsize: int, ep: bool
-                      ) -> FlatLayout | None:
-    """Static offsets for one stage segment's flat buffer (None if empty)."""
+def build_flat_layout(specs: dict, gatherable, dsize: int, ep: bool,
+                      *, ep_segment: bool = False) -> FlatLayout | None:
+    """Static offsets for one stage segment's flat buffer (None if empty).
+
+    ``ep_segment=True`` builds the *expert* segment instead: every named
+    tensor must be EP-sharded (expert dim 0 over "data") and its expert
+    dim must divide the data axis — the layout then packs each tensor's
+    local expert shard (``ld == 0``), so one slab collective covers the
+    stage's whole expert bank. A non-divisible expert dim returns None
+    (per-tensor fallback).
+    """
     entries = []
     off = 0
     for n in sorted(gatherable):
         sp = specs[n]
-        ld = local_dim(sp, dsize, ep)
-        assert ld is not None and not (sp.ep and ep), (
-            f"{n} is not flat-packable (replicated or EP)")
+        if ep_segment:
+            if not (sp.ep and ep) or not sp.shape or sp.shape[0] % dsize:
+                return None  # mixed / non-divisible expert set: fall back
+            ld = 0
+        else:
+            ld = local_dim(sp, dsize, ep)
+            assert ld is not None and not (sp.ep and ep), (
+                f"{n} is not flat-packable (replicated or EP)")
         size = int(np.prod(sp.shape)) // dsize
         entries.append(FlatEntry(name=n, shape=tuple(sp.shape), ld=ld,
                                  offset=off, size=size))
@@ -232,6 +245,58 @@ def unpack_flat_local(loc, fl: FlatLayout) -> dict:
             (e.shape[e.ld] // fl.dsize,) + rest)
         out[e.name] = jnp.moveaxis(t, 0, e.ld)
     return out
+
+
+def unpack_flat_stack(slab, fl: FlatLayout) -> dict:
+    """Inverse of :func:`pack_flat_stack`: [V, local_size] slab stack back
+    to the per-tensor ``{n: [V, *local_shape]}`` stacks."""
+    V = slab.shape[0]
+    out = {}
+    for e in fl.entries:
+        rest = _rest_shape(e)
+        t = slab[:, e.offset:e.offset + e.size].reshape(
+            (V, e.shape[e.ld] // fl.dsize) + rest)
+        out[e.name] = jnp.moveaxis(t, 1, e.ld + 1)
+    return out
+
+
+def ep_allreduce_flat(slab, groups: int, pp: int, pod: bool = False):
+    """Cross-group (+ cross-pod) reduction of one EP gradient slab.
+
+    EP expert grads are already local-complete over "data"; the only
+    collectives they need are the group butterfly and the pod psum.
+    Coalescing a stage's expert tensors into ONE [V, ep_local_size] slab
+    turns the per-tensor ppermute/psum chains into one collective each —
+    bitwise identical values (both are element-exact and the per-element
+    reduction order is unchanged; only the wire layout is coalesced).
+    """
+    out = group_allreduce(slab, groups, pp)
+    if pod:
+        out = jax.lax.psum(out, POD)
+    return out
+
+
+def ep_allreduce_flat_int8(slab, groups: int, pp: int, pod: bool = False):
+    """int8 EP slab reduction: shared-scale quantize → int32 sum → dequant.
+
+    The scale is pmax-shared over the summed axes so the integer
+    accumulation is exact. Like the per-tensor EP int8 path there is no
+    error-feedback buffer — the EP reduction runs once per step, so no
+    later tick exists to re-inject feedback into. Identity meshes
+    (groups == 1, no pods) skip quantization entirely: nothing is summed,
+    so there is no wire to compress.
+    """
+    if groups == 1 and not pod:
+        return slab
+    gf = slab.astype(jnp.float32)
+    local_scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    axes = (MODEL,) + ((POD,) if pod else ())
+    scale = jax.lax.pmax(local_scale, axes)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int32)
+    acc = group_allreduce(q, groups, pp)
+    if pod:
+        acc = jax.lax.psum(acc, POD)
+    return acc.astype(jnp.float32) * scale
 
 
 def _pack_full_flat(grads: dict, fl: FlatLayout, dtype):

@@ -244,6 +244,18 @@ class Runtime:
                     if rc.coalesce == "flat" else None)
             for sname in self.stage_specs
         }
+        # EP expert tensors get their own flat segment: the cross-group /
+        # cross-pod gradient reduction then runs as ONE slab collective
+        # per stage instead of one per expert tensor (per-tensor fallback
+        # when the expert dim does not divide the data axis).
+        self.ep_flat_layouts: dict[str, object] = {
+            sname: (fsdp.build_flat_layout(
+                        self.stage_specs[sname], self.ep_names[sname],
+                        self.dsize, self.ep, ep_segment=True)
+                    if rc.coalesce == "flat" and self.ep_names[sname]
+                    else None)
+            for sname in self.stage_specs
+        }
         # io params: only the vocab-dim of embed/head shards (per the
         # vocab-shard decision); everything else is replicated — io params
         # are consumed outside the gather machinery.
@@ -707,14 +719,18 @@ def make_serve_step(rt: Runtime, shape_cfg, *, prompt_len: int = 1,
             bsp,
         )
         tok_spec = P(bspec) if bspec else P()
+        seg_m = rt.segs["dec" if cfg.encdec is not None else "main"]
+        track_moe = (rc.moe_stats and cfg.moe is not None
+                     and any(k.endswith(":moe") for k in seg_m.kinds))
+        moe_spec = ({"load": P(), "dropped": P()},) if track_moe else ()
         if want_logits:
             # vocab-sharded head: every data rank computes its vocab
             # slice for ALL rows -> [gb, vloc] local, vocab axis sharded.
             # replicated head: each rank holds its own rows' full vocab.
             logit_spec = P(None, DATA) if vloc else P(bspec)
-            out_specs = (tok_spec, logit_spec, in_specs[1])
+            out_specs = (tok_spec, logit_spec, in_specs[1]) + moe_spec
         else:
-            out_specs = (tok_spec, in_specs[1])
+            out_specs = (tok_spec, in_specs[1]) + moe_spec
         fn = fsdp.shard_map(
             partial(_serve_body, rt=rt, shape_cfg=shape_cfg, mbs=mbs,
                     Btot=Btot, vloc=vloc, prompt_len=prompt_len,

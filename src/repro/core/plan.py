@@ -220,6 +220,14 @@ class PlanAnalysis:
     measured_us: float | None = None  # profiled real-step wall time
     #                                   (auto_profiled refinement; None =
     #                                   simulated-only candidate)
+    # EP MoE all-to-all terms (0 unless the cost model carried an EP
+    # dispatch/combine workload — defaults keep pre-a2a cache records
+    # loadable through plan_cache.selection_from_record's field filter)
+    t_a2a: float = 0.0           # one a2a event's α–β time (s)
+    n_a2a_f: int = 0             # a2a events inside one F tick
+    n_a2a_b: int = 0             # a2a events inside one B tick
+    a2a_bytes: float = 0.0       # wire bytes of one a2a event
+    a2a_total: float = 0.0       # simulated a2a time summed over the step
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -289,7 +297,8 @@ class SchedulePlan:
         counts differ between coalesce modes), so an A/B of the same
         plan under both must not alias.
         """
-        key = (preset, cm.n_coll_gather, cm.n_coll_reduce, cm.coll_alpha)
+        key = (preset, cm.n_coll_gather, cm.n_coll_reduce, cm.coll_alpha,
+               cm.n_a2a_f, cm.n_a2a_b, cm.t_a2a)
         if key not in self.analyses:
             cm_eff = (cm if self.prefetch > 0 else
                       dataclasses.replace(cm, overlap_comm=False))
@@ -321,6 +330,14 @@ class SchedulePlan:
                 stash_depth=self.table.unit,
                 rs_exposed=res.rs_exposed,
                 rs_overlap_saved=max(0.0, rs_total - res.rs_exposed),
+                t_a2a=cm_eff.t_a2a,
+                n_a2a_f=cm_eff.n_a2a_f,
+                n_a2a_b=cm_eff.n_a2a_b,
+                a2a_bytes=cm_eff.a2a_bytes,
+                a2a_total=cm_eff.t_a2a * sum(
+                    cm_eff.n_a2a_f if task.kind == KF
+                    else cm_eff.n_a2a_b if task.kind == KB else 0
+                    for _, _, task in self.table.tasks()),
             )
         return self.analyses[key]
 
@@ -347,6 +364,13 @@ PRESETS = {"a800": A800, "tpu_v5e": TPU_V5E}
 COLLECTIVE_ALPHA_BETA: dict[str, tuple[float, float]] = {
     "a800": (8.0e-06, 1.0 / 180e9),     # NVSwitch intra-node DP axis
     "tpu_v5e": (1.2e-06, 1.0 / 45e9),   # 50 GB/s ICI at ~90% efficiency
+    # EP MoE all-to-all (dispatch/combine) over the same DP interconnect:
+    # α doubles the point-to-point launch latency (an a2a is a full
+    # pairwise exchange, not one fan-in/fan-out collective), β is the
+    # same inverse effective bandwidth. ``comm_bench --calibrate``
+    # re-derives these via A2A_LATENCY_FACTOR and drift-gates them too.
+    "a800:a2a": (1.6e-05, 1.0 / 180e9),
+    "tpu_v5e:a2a": (2.4e-06, 1.0 / 45e9),
 }
 
 
@@ -359,7 +383,10 @@ def fused_cost_model(cm: CostModel) -> CostModel:
 def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
                       seq: int = 1024, mbs: int = 1, dp: int = 1,
                       mfu: float = 0.5, n_coll_gather: int = 1,
-                      n_coll_reduce: int | None = None) -> CostModel:
+                      n_coll_reduce: int | None = None,
+                      n_a2a_f: int = 0, n_a2a_b: int = 0,
+                      a2a_bytes: float = 0.0,
+                      extra_stage_param_bytes: float = 0.0) -> CostModel:
     """CostModel for a hardware preset and a (model × shape) workload.
 
     With a ModelConfig, per-task durations come from transformer napkin
@@ -373,6 +400,11 @@ def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
     ``n_coll_reduce`` are the collectives issued per gather/reduce tick —
     1 under the flat-segment layout (``coalesce="flat"``), the gatherable
     tensor count under per-tensor collectives (``coalesce="none"``).
+
+    ``n_a2a_f``/``n_a2a_b`` are the EP MoE all-to-all events riding
+    inside one stage's F/B tick (dispatch + combine per MoE layer; B
+    pays them twice under remat) and ``a2a_bytes`` one event's wire
+    bytes — costed with the preset's ``"<preset>:a2a"`` α–β constants.
     """
     if preset not in PRESETS:
         raise ValueError(
@@ -387,14 +419,22 @@ def preset_cost_model(preset: str, cfg=None, *, P: int, V: int,
     layers_per_stage = max(L / (P * V), 1e-9)
     layer_flops = 2 * (12 * d * d) * seq * mbs + 2 * seq * seq * d * mbs
     act_bytes = seq * mbs * d * 2
-    stage_param_bytes = 12 * d * d * layers_per_stage * 2
+    # extra_stage_param_bytes: workload the napkin 12d² misses — e.g.
+    # gathered-MoE expert tensors riding the FSDP collectives (EP keeps
+    # them sharded and pays a2a instead).
+    stage_param_bytes = (12 * d * d * layers_per_stage * 2
+                         + max(extra_stage_param_bytes, 0.0))
+    a2a_alpha, a2a_beta = COLLECTIVE_ALPHA_BETA.get(
+        f"{preset}:a2a", (2 * alpha, beta))
     return cost_model_for(
         hw, layer_flops_f=layer_flops, layers_per_stage=layers_per_stage,
         act_bytes=act_bytes, stage_param_bytes=stage_param_bytes,
         dp=max(dp, 1), mfu=mfu, alpha=alpha, beta=beta,
         n_coll_gather=max(n_coll_gather, 0),
         n_coll_reduce=max(n_coll_reduce if n_coll_reduce is not None
-                          else n_coll_gather, 0))
+                          else n_coll_gather, 0),
+        a2a_alpha=a2a_alpha, a2a_beta=a2a_beta, a2a_bytes=a2a_bytes,
+        n_a2a_f=max(n_a2a_f, 0), n_a2a_b=max(n_a2a_b, 0))
 
 
 # --------------------------------------------------------------------------- #
@@ -497,7 +537,8 @@ def candidate_schedules() -> list[str]:
 SELECT_KEY_SCHEMA = (
     "arch", "pp", "vpp", "groups", "microbatches", "unit",
     "gather_prefetch", "seq", "mbs", "dp", "pods", "preset", "coalesce",
-    "grad_compress", "mem_budget", "select_mode", "profile_top_k",
+    "grad_compress", "moe_mode", "mem_budget", "select_mode",
+    "profile_top_k",
 )
 
 

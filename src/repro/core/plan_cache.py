@@ -185,7 +185,9 @@ def selection_from_record(rec: dict, cache_key: tuple):
     # seed the plan's per-preset analysis cache so .analyze() under the
     # same collective profile returns the stored numbers without a sim
     plan.analyses[(analysis.preset, analysis.n_coll_gather,
-                   analysis.n_coll_reduce, analysis.coll_alpha)] = analysis
+                   analysis.n_coll_reduce, analysis.coll_alpha,
+                   analysis.n_a2a_f, analysis.n_a2a_b,
+                   analysis.t_a2a)] = analysis
     return PlanSelection(
         selected=plan, analysis=analysis, preset=rec["preset"],
         candidates={n: _ana(a) for n, a in rec["candidates"].items()},

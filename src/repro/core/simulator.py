@@ -39,9 +39,23 @@ class CostModel:
     coll_alpha: float = 0.0       # per-collective launch latency (s)
     n_coll_gather: int = 1        # collectives issued per gather tick
     n_coll_reduce: int = 1        # collectives issued per reduce tick
+    # EP MoE all-to-all: dispatch/combine ride *inside* the F/B compute of
+    # a stage tick (they are lax.all_to_all calls in the traced layer
+    # body), so a2a time charges into dur() rather than the gather/reduce
+    # channels. n_a2a_f/_b count a2a events per F/B tick of one stage
+    # (0 for gathered MoE / dense models); t_a2a is one event's α–β time.
+    t_a2a: float = 0.0            # one all-to-all event (s)
+    n_a2a_f: int = 0              # a2a events inside one F tick
+    n_a2a_b: int = 0              # a2a events inside one B tick
+    a2a_bytes: float = 0.0        # wire bytes of one a2a event (metadata)
+    a2a_alpha: float = 0.0        # a2a launch latency (s, metadata)
 
     def dur(self, kind: int) -> float:
-        return {F: self.t_f, B: self.t_b, W: self.t_w}[kind]
+        if kind == F:
+            return self.t_f + self.n_a2a_f * self.t_a2a
+        if kind == B:
+            return self.t_b + self.n_a2a_b * self.t_a2a
+        return self.t_w
 
 
 @dataclasses.dataclass
@@ -266,6 +280,11 @@ def cost_model_for(
     beta: float | None = None,  # s/byte on the collective path (1/bw_eff)
     n_coll_gather: int = 1,    # collectives per gather tick (1 = flat)
     n_coll_reduce: int = 1,    # collectives per reduce tick
+    a2a_alpha: float = 0.0,    # EP all-to-all launch latency (s)
+    a2a_beta: float | None = None,  # s/byte on the a2a path
+    a2a_bytes: float = 0.0,    # wire bytes of one a2a event
+    n_a2a_f: int = 0,          # a2a events inside one F tick
+    n_a2a_b: int = 0,          # a2a events inside one B tick
 ) -> CostModel:
     """Napkin-math durations from hardware peaks at an assumed MFU.
 
@@ -287,6 +306,9 @@ def cost_model_for(
                 if n_coll_gather > 0 else 0.0)
     t_reduce = (alpha * n_coll_reduce + wire_bytes * b
                 if n_coll_reduce > 0 else 0.0)
+    ab = a2a_beta if a2a_beta is not None else b
+    t_a2a = (a2a_alpha + a2a_bytes * ab
+             if (n_a2a_f or n_a2a_b) else 0.0)
     return CostModel(
         t_f=t_f, t_b=t_b, t_w=t_w,
         t_p2p=act_bytes / hw.link_bw,
@@ -295,4 +317,6 @@ def cost_model_for(
         m_weight=stage_param_bytes,
         coll_alpha=alpha, n_coll_gather=n_coll_gather,
         n_coll_reduce=n_coll_reduce,
+        t_a2a=t_a2a, n_a2a_f=n_a2a_f, n_a2a_b=n_a2a_b,
+        a2a_bytes=a2a_bytes, a2a_alpha=a2a_alpha,
     )

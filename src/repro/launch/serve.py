@@ -128,6 +128,12 @@ def main():
     ap.add_argument("--preset", default="a800",
                     help="cost preset for schedule='auto' simulation "
                          "(a800 | tpu_v5e)")
+    ap.add_argument("--moe-mode", default=None,
+                    help="expert placement for MoE archs: gathered | ep "
+                         "| auto (cost both under the a2a-aware model)")
+    ap.add_argument("--moe-stats", action="store_true",
+                    help="per-expert load histogram + capacity-drop "
+                         "counters in the serving summary")
     ap.add_argument("--ckpt", default=None,
                     help="train checkpoint dir to boot params from "
                          "(train→serve handoff)")
@@ -159,8 +165,9 @@ def main():
         max_seq=max_seq, schedule=args.schedule, cost_preset=args.preset,
         prefill_chunk=args.prefill_chunk, page_size=args.page_size,
         max_pages=args.max_pages, prefix_sharing=args.prefix_sharing,
-        kv_cache_dtype=args.kv_cache_dtype,
-        overrides=dict(microbatches=2),
+        kv_cache_dtype=args.kv_cache_dtype, moe_mode=args.moe_mode,
+        overrides=dict(microbatches=2,
+                       **({"moe_stats": True} if args.moe_stats else {})),
     )
     d = sess.describe()["schedule"]
     print(f"serving with schedule={d['name']} "
@@ -202,6 +209,17 @@ def main():
               f"prefix_hit_tokens={st.prefix_hit_tokens} "
               f"prefilled {st.prefill_tokens}/{prompt_total} prompt "
               f"tokens, evictions={st.evictions}")
+    srv = sess.describe().get("serving", {})
+    moe = srv.get("moe")
+    if moe is not None or srv.get("capacity_deferrals", 0):
+        # MoE serving summary: capacity-aware admission + dispatch load
+        line = (f"moe: capacity_deferrals="
+                f"{srv.get('capacity_deferrals', 0)}")
+        if moe is not None:
+            line += f" dropped_tokens={moe['dropped_tokens']}"
+            if "load_per_expert" in moe:
+                line += f" load_per_expert={moe['load_per_expert']}"
+        print(line)
     print("SERVE_OK")
 
 

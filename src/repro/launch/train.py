@@ -21,18 +21,37 @@ from repro.api import ensure_host_devices, session
 def build_session(arch: str, *, data: int, seq: int, microbatches: int,
                   schedule: str, lr: float, unit: int = 0,
                   preset: str = "a800", profile_top_k: int = 3,
-                  profile_budget_s: float | None = None):
+                  profile_budget_s: float | None = None,
+                  moe_mode: str | None = None, moe_stats: bool = False):
     """One facade call replaces the old 8-step assembly ritual."""
     kw = {}
     if schedule == "auto_profiled":
         kw = dict(profile_top_k=profile_top_k,
                   profile_budget_s=profile_budget_s)
+    ov = dict(schedule=schedule, microbatches=microbatches, unit=unit)
+    if moe_mode is not None:
+        ov["moe_mode"] = moe_mode
+    if moe_stats:
+        ov["moe_stats"] = True
     sess = session(
         arch, mode="train", data=data, seq_len=seq, cost_preset=preset,
-        overrides=dict(schedule=schedule, microbatches=microbatches,
-                       unit=unit),
+        overrides=ov,
         optim=dict(lr=lr, warmup=20, total=10_000), **kw,
     )
+    sched = sess.describe()["schedule"]
+    auto_moe = sched.get("moe_mode_auto")
+    if auto_moe:
+        # the provenance line CI's moe-smoke job greps for
+        print("moe_mode=auto resolved -> "
+              f"{auto_moe['resolved']!r}; scores: "
+              + ", ".join(f"{m}={s:.3e}"
+                          for m, s in sorted(auto_moe["scores"].items())))
+    coll = sched.get("collectives", {})
+    if coll.get("a2a_per_f_tick", 0) or coll.get("a2a_per_b_tick", 0):
+        print(f"a2a: {coll['a2a_per_f_tick']}xF+{coll['a2a_per_b_tick']}xB "
+              f"events/tick, {coll['a2a_bytes']:.3e} B/event, "
+              f"t_event {coll['a2a_t_event_s']:.3e}s, simulated total "
+              f"{coll['a2a_total_s']:.3e}s")
     if sess.plan_selection is not None:
         sel = sess.plan_selection
         src = sess._plan_source
@@ -86,6 +105,13 @@ def main():
     ap.add_argument("--profile-budget-s", type=float, default=None,
                     help="auto_profiled: wall-clock cap on the measuring "
                          "phase (the simulated-best is always measured)")
+    ap.add_argument("--moe-mode", default=None,
+                    help="expert placement for MoE archs: gathered | ep "
+                         "| auto (cost both under the a2a-aware model)")
+    ap.add_argument("--moe-stats", action="store_true",
+                    help="collect per-layer expert-load histograms + "
+                         "capacity-drop counters (train metrics "
+                         "moe_load/moe_dropped)")
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -111,7 +137,8 @@ def main():
             microbatches=args.microbatches, schedule=args.schedule,
             lr=args.lr, unit=args.unit, preset=args.preset,
             profile_top_k=args.profile_top_k,
-            profile_budget_s=args.profile_budget_s)
+            profile_budget_s=args.profile_budget_s,
+            moe_mode=args.moe_mode, moe_stats=args.moe_stats)
         stream = sess.stream()
         if restored is None:
             params = sess.init_params(jax.random.PRNGKey(0))
@@ -128,8 +155,15 @@ def main():
             params, opt, om = sess.opt_step(state["params"], grads,
                                             state["opt"])
             loss = float(metrics["loss_sum"])
+            extra = ""
+            if "moe_load" in metrics:
+                import numpy as np
+                load = np.asarray(metrics["moe_load"]).sum(axis=0)
+                imb = float(load.max()) / max(float(load.mean()), 1e-9)
+                extra = (f" moe_imb {imb:.2f} "
+                         f"dropped {int(metrics['moe_dropped'])}")
             print(f"step {step_no:4d} loss {loss:.4f} "
-                  f"gnorm {float(om['grad_norm']):.3f}")
+                  f"gnorm {float(om['grad_norm']):.3f}{extra}")
             return {"params": params, "opt": opt}, {"loss": loss}
 
         return state, run_one, lambda s: s

@@ -50,6 +50,9 @@ class LayerCtx:
     #                                  ids (paged KV cache); None = the
     #                                  contiguous per-row cache layout
     page_size: int = 0               # tokens per page when paged
+    moe_stats: Any = None            # None (off) | list collector: apply_moe
+    #                                  appends (pfx, load[E], dropped) per
+    #                                  layer when set (RunConfig.moe_stats)
 
 
 # --------------------------------------------------------------------------- #
@@ -381,6 +384,19 @@ def apply_moe(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> tuple[TVal, TVal]:
         aux = (frac_tok * frac_prob).sum() * E
         holder["topi"] = topi
         holder["slot"] = jnp.where(keep, slot, cap)  # cap = drop slot
+        if ctx.moe_stats is not None:
+            # dispatch observability (RunConfig.moe_stats): routed
+            # assignment count per expert and capacity-dropped count —
+            # integers exiting the tape as closure captures like topi.
+            # Slotted serving pads inactive rows; mask them out so the
+            # histogram counts only live requests' tokens.
+            if ctx.slot_mask is not None:
+                live = jnp.repeat(ctx.slot_mask.astype(jnp.int32), s * K)
+            else:
+                live = jnp.ones((n * K,), jnp.int32)
+            holder["load"] = (flat_oh * live[:, None]).sum(0)
+            holder["dropped"] = (
+                (~keep).reshape(-1).astype(jnp.int32) * live).sum()
         return topw, aux
 
     topw, aux = t.prim(route, logits, n_out=2)
@@ -435,6 +451,8 @@ def apply_moe(t: Tape, ctx: LayerCtx, pfx: str, x: TVal) -> tuple[TVal, TVal]:
         h2 = t.prim(lambda a, b2: jax.nn.silu(a) * b2, g2, u2)
         y2 = t.dense(h2, f"{pfx}.s_wd", "bsf,fd->bsd")
         y = t.add(y, y2)
+    if ctx.moe_stats is not None:
+        ctx.moe_stats.append((pfx, holder["load"], holder["dropped"]))
     return y, aux
 
 

@@ -149,7 +149,13 @@ class RunConfig:
                                  # autogen|autogen_gated (§4; _gated keeps
                                  # unit-depth stash buffers)
     fsdp: bool = True
-    moe_mode: str = "gathered"   # gathered | ep
+    moe_mode: str = "gathered"   # gathered | ep | auto (Session resolves
+                                 # "auto" to a concrete mode via the
+                                 # a2a-aware cost model before any build)
+    moe_stats: bool = False      # collect per-layer expert-load histograms
+                                 # + capacity-drop counters (train metrics
+                                 # "moe_load"/"moe_dropped"; serve steps
+                                 # return an extra trailing stats dict)
     remat: bool = True
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"

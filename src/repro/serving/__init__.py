@@ -34,11 +34,17 @@ from repro.serving.engine import EngineStats, ServeEngine
 from repro.serving.paging import PageAllocation, PagePool, PagedSlotPool
 from repro.serving.radix import RadixIndex
 from repro.serving.sampling import SamplingParams, sample_token
-from repro.serving.scheduler import Request, RequestScheduler, SchedulerPolicy
+from repro.serving.scheduler import (
+    MoECapacity,
+    Request,
+    RequestScheduler,
+    SchedulerPolicy,
+)
 from repro.serving.slots import SlotPool, SlotView
 
 __all__ = [
     "EngineStats",
+    "MoECapacity",
     "PageAllocation",
     "PagePool",
     "PagedSlotPool",

@@ -45,6 +45,7 @@ import numpy as np
 from repro.serving.paging import PagedSlotPool
 from repro.serving.sampling import sample_token
 from repro.serving.scheduler import (
+    MoECapacity,
     Request,
     RequestScheduler,
     SchedulerPolicy,
@@ -74,6 +75,34 @@ class EngineStats:
     evictions: int = 0              # prefix pages LRU-evicted
     pages_in_use: int = 0           # live pages right now
     peak_pages_in_use: int = 0      # high-water mark
+    # MoE capacity-aware admission (zero on dense models)
+    capacity_deferrals: int = 0     # admissions deferred by the MoE bound
+
+
+class _MoEServeStats:
+    """Host-side accumulation of the serve steps' expert-load returns.
+
+    Attached to ``EngineStats`` as a plain attribute (not a dataclass
+    field) so ``dataclasses.asdict`` skips it; ``describe()["serving"]``
+    renders it via :meth:`as_dict`.
+    """
+
+    def __init__(self):
+        self.load = None        # np [rows, E]: routed assignments/layer-row
+        self.dropped = 0        # assignments dropped at dispatch capacity
+
+    def update(self, moe_out) -> None:
+        load = np.asarray(moe_out["load"], np.int64)
+        self.load = load if self.load is None else self.load + load
+        self.dropped += int(moe_out["dropped"])
+
+    def as_dict(self) -> dict:
+        out = {"dropped_tokens": int(self.dropped)}
+        if self.load is not None:
+            out["load_per_expert"] = [
+                int(v) for v in self.load.sum(axis=0)]
+            out["load_rows"] = int(self.load.shape[0])
+        return out
 
 
 class ServeEngine:
@@ -111,6 +140,14 @@ class ServeEngine:
                 sharing=session.spec.prefix_sharing == "on")
         else:
             self.pool = SlotPool(session.max_slots, session._max_seq())
+        moe_cfg = getattr(session.cfg, "moe", None)
+        if policy is None and moe_cfg is not None:
+            # MoE serving defaults to capacity-aware admission: defer
+            # admissions whose projected co-resident hot-expert load
+            # would overflow the dispatch capacity (pass an explicit
+            # policy — moe_capacity=None — to admit unbounded).
+            policy = SchedulerPolicy(
+                moe_capacity=MoECapacity.from_moe_cfg(moe_cfg))
         self.scheduler = RequestScheduler(policy)
         self.prefill_chunk = (prefill_chunk
                               if prefill_chunk is not None
@@ -132,6 +169,17 @@ class ServeEngine:
         self._no_sampling = probe() if probe is not None else None
         self.caches = session.init_caches(abstract=False)
         self.stats = EngineStats()
+        # per-expert load observability: the serve step returns one extra
+        # trailing {"load", "dropped"} dict when RunConfig.moe_stats is
+        # on and the segment actually routes through MoE layers.
+        self._track_moe = bool(
+            getattr(getattr(session, "rc", None), "moe_stats", False)
+            and moe_cfg is not None
+            and any(k.endswith(":moe")
+                    for k in session.geo.segments[-1].kinds))
+        if self._track_moe:
+            self.stats.moe = _MoEServeStats()
+        session._engine_stats = self.stats   # describe()["serving"]
         self._by_slot: dict[int, Request] = {}
         self._lock = threading.RLock()      # one tick at a time
         self._wake = threading.Event()      # submit() -> driver loop
@@ -236,6 +284,8 @@ class ServeEngine:
                 active = self.pool.active()
                 if active:
                     self._decode_tick()
+                self.stats.capacity_deferrals = \
+                    self.scheduler.capacity_deferrals
                 if self._paged:
                     self.stats.prefix_hits = self.pool.prefix_hits
                     self.stats.prefix_hit_tokens = \
@@ -318,11 +368,18 @@ class ServeEngine:
             batch = dict(batch,
                          page_tables=self.pool.page_table_matrix())
         if want_logits:
-            out, logits, caches = self.session.serve_step_batched(
+            res = self.session.serve_step_batched(
                 self.params, self.caches, batch, want_logits=True)
         else:
-            out, caches = self.session.serve_step_batched(
+            res = self.session.serve_step_batched(
                 self.params, self.caches, batch)
+        if self._track_moe:
+            self.stats.moe.update(res[-1])
+            res = res[:-1]
+        if want_logits:
+            out, logits, caches = res
+        else:
+            out, caches = res
             logits = None
         if out.shape[0] != self.pool.n_slots:
             raise RuntimeError(

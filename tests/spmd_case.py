@@ -1344,6 +1344,118 @@ def case_donation(arch: str = "llama3.2-1b"):
 CASES["donation"] = case_donation
 
 
+def case_moe_ep_equiv(arch: str = "qwen2-moe-a2.7b"):
+    """EP as a first-class tick-engine citizen: expert-parallel training
+    matches the reference model, the lowered EP step moves tokens via
+    all-to-all while keeping expert weights out of the FSDP gathers, and
+    ep-vs-gathered serve engines emit identical greedy tokens with live
+    expert-load stats."""
+    import re
+    from repro.api import session
+
+    # 1) EP pipeline grads vs the reference model
+    case_train_equiv(arch, moe_mode="ep")
+
+    # 2) structural: EP lowers all-to-all dispatch/combine and shrinks
+    # the FSDP gather footprint (expert slabs stay sharded over data)
+    def sites(txt, op):
+        return len(re.findall(rf"\b{op}(?:-start)?\(", txt))
+
+    txts = {}
+    ep_names = {}
+    for mode in ("ep", "gathered"):
+        sess = session(arch, data=2, seq_len=16, moe_mode=mode,
+                       overrides=dict(microbatches=2))
+        txts[mode] = sess.lower().compile().as_text()
+        ep_names[mode] = (set(sess.rt.ep_names["main"]),
+                          set(sess.rt.gatherable["main"]))
+    a2a_ep = sites(txts["ep"], "all-to-all")
+    a2a_g = sites(txts["gathered"], "all-to-all")
+    # gathered may still carry a couple of XLA-synthesized all-to-alls
+    # (layout shuffles); EP's explicit dispatch/combine dominates them
+    assert a2a_ep > a2a_g, (a2a_ep, a2a_g)
+    # EP keeps the expert slabs out of the FSDP gather set entirely
+    eps, gat = ep_names["ep"]
+    assert eps and not (eps & gat), (eps, gat)
+    eps_g, gat_g = ep_names["gathered"]
+    assert not eps_g and eps <= gat_g, (eps_g, gat_g)
+    print(f"  HLO: ep all-to-all={a2a_ep} (gathered {a2a_g}); "
+          f"{len(eps)} expert tensors out of the gather set")
+
+    # 3) serve engines: ep tokens == gathered tokens, load histogram live
+    def serve(mode):
+        s = session(arch, mode="serve", data=2, max_slots=4, max_seq=24,
+                    moe_mode=mode,
+                    overrides=dict(microbatches=2, moe_stats=True))
+        ps = s.init_params(jax.random.PRNGKey(0))
+        eng = s.serve_engine(ps)
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, s.cfg.vocab, size=n).astype(np.int32)
+                   for n in (3, 8, 5, 6)]
+        hs = [eng.submit(p, max_gen=4) for p in prompts]
+        eng.run_until_idle()
+        return [h.result(timeout=10) for h in hs], s.describe()["serving"]
+
+    toks_ep, srv_ep = serve("ep")
+    toks_g, _ = serve("gathered")
+    assert toks_ep == toks_g, (toks_ep, toks_g)
+    load = srv_ep["moe"]["load_per_expert"]
+    assert len(load) == 8 and sum(load) > 0, load
+    assert srv_ep["capacity_deferrals"] == 0  # cf=8 never defers 4 slots
+    print(f"  serve ep == gathered tokens; load/expert {load}")
+    print(f"CASE_OK moe_ep_equiv {arch}")
+
+
+CASES["moe_ep_equiv"] = case_moe_ep_equiv
+
+
+def case_moe_ep_flat(arch: str = "qwen2-moe-a2.7b"):
+    """Per-expert-shard flat segments: in EP mode the expert tensors'
+    cross-group reductions pack into ONE slab collective per segment
+    (coalesce="flat") with grads bit-identical to the per-tensor path,
+    and strictly fewer collective sites in the compiled HLO."""
+    import re
+    from repro.api import session
+
+    assert int(N_DEV) >= 12, "run with SPMD_DEVICES=12 (data 2 x model 6)"
+    outs = {}
+    sites = {}
+    for mode in ("flat", "none"):
+        sess = session(arch, data=2, seq_len=16, moe_mode="ep",
+                       coalesce=mode,
+                       overrides=dict(microbatches=2, groups=2))
+        efl = sess.rt.ep_flat_layouts["main"]
+        assert (efl is not None) == (mode == "flat"), (mode, efl)
+        params = sess.init_params(jax.random.PRNGKey(0))
+        batch = sess.stream().batch(0)
+        lo = sess.train_step_fn().lower(params, batch).compile()
+        txt = lo.as_text()
+        sites[mode] = {
+            op: len(re.findall(rf"\b{op}(?:-start)?\(", txt))
+            for op in ("all-gather", "reduce-scatter", "all-reduce",
+                       "collective-permute", "all-to-all")}
+        g, m = sess.train_step(params, batch)
+        outs[mode] = (jax.device_get(g), float(m["loss_sum"]))
+
+    assert outs["flat"][1] == outs["none"][1], (outs["flat"][1],
+                                                outs["none"][1])
+    flat_g = jax.tree_util.tree_flatten_with_path(outs["flat"][0])[0]
+    base_g = dict(jax.tree_util.tree_flatten_with_path(outs["none"][0])[0])
+    for kp, vg in flat_g:
+        assert np.array_equal(np.asarray(vg), np.asarray(base_g[kp])), \
+            jax.tree_util.keystr(kp)
+    tot = {m: sum(s.values()) for m, s in sites.items()}
+    assert tot["flat"] < tot["none"], (sites["flat"], sites["none"])
+    print(f"  {len(flat_g)} grad tensors bit-identical; collective "
+          f"sites {tot['flat']} < {tot['none']} "
+          f"(permute {sites['flat']['collective-permute']} < "
+          f"{sites['none']['collective-permute']})")
+    print(f"CASE_OK moe_ep_flat {arch}")
+
+
+CASES["moe_ep_flat"] = case_moe_ep_flat
+
+
 CASES["prefetch_equiv"] = case_prefetch_equiv
 CASES["int8_grads"] = case_int8_grads
 CASES["elastic_reshard"] = case_elastic_reshard

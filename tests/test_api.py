@@ -246,7 +246,7 @@ def test_schedule_auto_profiled_full_cache_lifecycle(monkeypatch):
     clear_plan_cache(persisted=True)
     calls = []
 
-    def fake_build(self):
+    def fake_build(self, moe_mode=None):
         # later measurements come back *faster*, so the measured winner
         # differs from the simulated-best (the re-ranking must matter)
         def measure(plan):

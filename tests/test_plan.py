@@ -541,6 +541,44 @@ def test_persisted_cache_invalidated_on_knob_schema_change(monkeypatch):
     clear_plan_cache(persisted=True)
 
 
+def test_select_key_schema_covers_moe_mode():
+    """Regression: SELECT_KEY_SCHEMA once omitted moe_mode, so an "ep"
+    session could replay a "gathered" session's cached plan. The knob
+    must be a named key column AND flip the persisted fingerprint."""
+    from repro.core.plan import SELECT_KEY_SCHEMA
+
+    assert "moe_mode" in SELECT_KEY_SCHEMA
+    # one column per key element: Session._select_key builds keys
+    # positionally against this schema
+    fp_a = plan_cache.fingerprint(CM, SELECT_KEY_SCHEMA)
+    without = tuple(k for k in SELECT_KEY_SCHEMA if k != "moe_mode")
+    fp_b = plan_cache.fingerprint(CM, without)
+    assert fp_a != fp_b
+
+
+def test_preset_cost_model_a2a_terms():
+    """EP all-to-all ticks are costed: a per-preset :a2a alpha-beta pair
+    feeds t_a2a, and F/B durations stretch by their a2a counts."""
+    from repro.core.plan import COLLECTIVE_ALPHA_BETA, preset_cost_model
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(name="t", n_layers=8, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab=256)
+    for preset in ("a800", "tpu_v5e"):
+        assert f"{preset}:a2a" in COLLECTIVE_ALPHA_BETA
+        cm0 = preset_cost_model(preset, cfg, P=4, V=2)
+        cm2 = preset_cost_model(preset, cfg, P=4, V=2,
+                                n_a2a_f=2, n_a2a_b=4, a2a_bytes=1e6)
+        from repro.core.simulator import B, F
+
+        assert cm0.t_a2a == 0.0 and cm2.t_a2a > 0.0
+        assert cm2.dur(F) == cm0.dur(F) + 2 * cm2.t_a2a
+        assert cm2.dur(B) == cm0.dur(B) + 4 * cm2.t_a2a
+        # a2a cost participates in the fingerprint (stale plans die)
+        assert plan_cache.fingerprint(cm0, ("x",)) \
+            != plan_cache.fingerprint(cm2, ("x",))
+
+
 def test_persisted_cache_corrupt_file_falls_back():
     """Corrupt or partially-valid cache files mean a clean search, never
     an exception."""

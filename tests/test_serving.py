@@ -131,6 +131,73 @@ def test_scheduler_policy_validation():
         SchedulerPolicy(max_prefills_per_tick=0)
 
 
+def test_moe_capacity_bound_semantics():
+    from repro.serving import MoECapacity
+
+    # capacity(n) = ceil8(int(n*top_k/E*cf)+1) floored at 8; the bound
+    # admits while skew x the uniform share still fits.
+    cap = MoECapacity(n_experts=8, top_k=2, capacity_factor=8.0, skew=12.0)
+    assert cap.fits(0) and cap.fits(1) and cap.fits(2)
+    assert not cap.fits(3)          # hot = 3*2/8*12 = 9 > cap(3) = 8
+    assert cap.max_admissible(16) == 2
+    # skew=0 disables the bound entirely
+    assert MoECapacity(8, 2, skew=0.0).fits(10**6)
+    # uniform routing (skew=1) always fits: the capacity factor covers it
+    uni = MoECapacity(n_experts=8, top_k=2, capacity_factor=1.25, skew=1.0)
+    assert all(uni.fits(n) for n in range(1, 2048))
+
+    # from_moe_cfg mirrors the model's MoE config
+    from repro.models.common import MoECfg
+
+    mo = MoECfg(n_experts=4, top_k=1, d_ff_expert=8, capacity_factor=2.0)
+    c2 = MoECapacity.from_moe_cfg(mo)
+    assert (c2.n_experts, c2.top_k, c2.capacity_factor) == (4, 1, 2.0)
+
+
+def test_scheduler_capacity_aware_admission():
+    from repro.serving import (MoECapacity, RequestScheduler,
+                               SchedulerPolicy, SlotPool)
+
+    # max_admissible = 2: the third co-resident request must wait
+    cap = MoECapacity(n_experts=8, top_k=2, capacity_factor=8.0, skew=12.0)
+    sched = RequestScheduler(SchedulerPolicy(max_prefills_per_tick=4,
+                                             moe_capacity=cap))
+    pool = SlotPool(4, max_seq=16)
+    reqs = [_req() for _ in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    first, _ = sched.admit(pool)
+    assert [r.id for r in first] == [reqs[0].id, reqs[1].id]
+    assert sched.capacity_deferrals == 1
+    # slots are free but the projected co-batch overflows: no admission
+    assert sched.admit(pool) == ([], []) and sched.n_queued == 2
+    assert sched.capacity_deferrals == 2
+    # releasing one active slot re-opens exactly one seat, FIFO order
+    pool.release(first[0].slot)
+    refill, _ = sched.admit(pool)
+    assert [r.id for r in refill] == [reqs[2].id]
+
+
+def test_scheduler_capacity_never_livelocks_idle_pool():
+    from repro.serving import (MoECapacity, RequestScheduler,
+                               SchedulerPolicy, SlotPool)
+
+    # an over-tight bound (max_admissible == 0) degrades to serial
+    # serving: the first request into an idle pool always admits
+    cap = MoECapacity(n_experts=8, top_k=2, capacity_factor=8.0, skew=40.0)
+    assert cap.max_admissible(4) == 0
+    sched = RequestScheduler(SchedulerPolicy(moe_capacity=cap))
+    pool = SlotPool(4, max_seq=16)
+    for _ in range(2):
+        sched.submit(_req())
+    one, _ = sched.admit(pool)
+    assert len(one) == 1 and sched.capacity_deferrals == 1
+    assert sched.admit(pool) == ([], [])   # co-residency still blocked
+    pool.release(one[0].slot)
+    two, _ = sched.admit(pool)
+    assert len(two) == 1                    # next request proceeds alone
+
+
 def test_scheduler_remove_with_multiple_queued():
     """ISSUE-5 regression: Request carries a numpy prompt, so the
     dataclass-generated __eq__ made ``req in queue`` raise "truth value
@@ -821,5 +888,12 @@ def test_paged_equals_contiguous_serving():
     to the contiguous path on the staggered 8-request workload (with
     peak pages strictly below the contiguous footprint), shared prompts
     prefill once via the radix, and prefix_sharing='off' still matches
-    with zero hits."""
-    _run("serving_paged_equiv", "llama3.2-1b")
+    with zero hits.
+
+    PYTHONHASHSEED is pinned like the golden-parity test: the case's
+    int8 leg quantizes the KV cache, and hash-randomized trace-time set
+    iteration can reorder accumulation enough to flip a near-tie argmax
+    between the paged and contiguous programs (int8 perturbs logits by
+    O(0.5%) — the API.md caveat; seed 2 reproduces the flip)."""
+    _run("serving_paged_equiv", "llama3.2-1b",
+         env_extra={"PYTHONHASHSEED": "0"})
