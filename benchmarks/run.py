@@ -25,7 +25,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json",
-                    default=os.path.join(_REPO_ROOT, "BENCH_pr9.json"),
+                    default=os.path.join(_REPO_ROOT, "BENCH_pr10.json"),
                     help="machine-readable rows artifact ('' to skip)")
     ap.add_argument("--hillclimb-budget-s", type=float, default=240.0,
                     help="wall-clock budget for the joint knob hillclimb "
@@ -53,6 +53,7 @@ def main() -> None:
     rows += serving_bench.serving_rows()
     rows += serving_bench.paged_prefix_rows()
     rows += serving_bench.decode_attention_rows()
+    rows += serving_bench.router_rows()
     rows += comm_bench.bench_rows()
     rows += moe_bench.moe_rows()
     if args.hillclimb_budget_s > 0:

@@ -37,9 +37,12 @@ _EXPORTS = {
     "select_plan": ("repro.core.plan", "select_plan"),
     "clear_plan_cache": ("repro.core.plan", "clear_plan_cache"),
     "ServeEngine": ("repro.serving", "ServeEngine"),
+    "EngineRouter": ("repro.serving", "EngineRouter"),
     "Request": ("repro.serving", "Request"),
     "SchedulerPolicy": ("repro.serving", "SchedulerPolicy"),
     "SlotPool": ("repro.serving", "SlotPool"),
+    "Topology": ("repro.runtime.topology", "Topology"),
+    "TOPOLOGY_PRESETS": ("repro.runtime.topology", "TOPOLOGY_PRESETS"),
 }
 
 __all__ = sorted(_EXPORTS)

@@ -94,6 +94,15 @@ class Session:
             else M.SHAPES[spec.shape] if isinstance(spec.shape, str)
             else None)
         self._data: int | None = spec.data
+        # hardware topology (spec.topology): owns the axis layout + the
+        # device bootstrap when set; the derived layout is cached because
+        # multi_pod/pods_size consult it before any mesh exists.
+        from repro.runtime.topology import resolve_topology
+        self._topology = resolve_topology(spec.topology)
+        self._topo_layout: dict | None = None
+        if self._topology is not None and self._topology.data is not None:
+            self._data = self._topology.data
+        self._fault_tolerance = None    # TrainController (attach()es)
         self._rt: Runtime | None = None
         self._steps: dict[Any, Any] = {}
         # baseline for the per-session kernel-dispatch counters: counts
@@ -131,13 +140,55 @@ class Session:
     # Lazy distribution state
     # ------------------------------------------------------------------ #
 
+    def _topology_layout(self) -> dict:
+        """The topology's derived pods×data×model layout (device-free —
+        hardware description + cost-preset rules only). Cached: the
+        layout is consulted by multi_pod/pods_size before any mesh
+        exists and must agree with the mesh eventually built."""
+        if self._topo_layout is None:
+            from repro.runtime.topology import TopologyError
+            try:
+                self._topo_layout = self._topology.axis_layout(
+                    self.geo.model_ranks, self.spec.cost_preset)
+            except TopologyError as e:
+                raise SessionError(str(e)) from e
+        return self._topo_layout
+
     @property
     def multi_pod(self) -> bool:
+        if self._topology is not None:
+            # the layout may *derive* a pod axis (e.g. the a800 rule
+            # confining FSDP to the NVLink island), so judge the derived
+            # layout, not the topology's nominal pods field
+            return self._topology_layout()["pods"] > 1
         return self.spec.multi_pod or self.spec.pods is not None
+
+    @property
+    def pods_size(self) -> int:
+        """Width of the hybrid-sharded DP ("pod") axis (1 = no pod
+        axis). The topology's derived layout wins over spec.pods."""
+        if self._topology is not None:
+            return self._topology_layout()["pods"]
+        return self.spec.pods or 1
 
     @property
     def mesh(self):
         if self._mesh is None:
+            if self._topology is not None:
+                self._topology.ensure_devices()
+                lay = self._topology_layout()
+                n_dev = jax.device_count()
+                if lay["devices_used"] > n_dev:
+                    raise SessionError(
+                        f"topology {self._topology.label()} lays out "
+                        f"pods×data×model = {lay['pods']}×{lay['data']}×"
+                        f"{lay['model']} = {lay['devices_used']} devices "
+                        f"but the backend provides {n_dev}; shrink the "
+                        "topology (data=) or fix the device bootstrap")
+                self._mesh = self._topology.build_mesh(
+                    self.geo.model_ranks, self.spec.cost_preset)
+                self._data = lay["data"]
+                return self._mesh
             if self.spec.devices is not None:
                 from repro.api.devices import ensure_host_devices
                 ensure_host_devices(self.spec.devices)
@@ -182,7 +233,7 @@ class Session:
                                               "decode")
             else:
                 gb = sp.global_batch or (
-                    (sp.pods or 1) * self.data_size * self.rc.groups
+                    self.pods_size * self.data_size * self.rc.groups
                     * self.rc.microbatches * sp.microbatch_size)
                 self._shape_cfg = ShapeConfig(sp.mode, sp.seq_len or 32,
                                               gb, "train")
@@ -645,7 +696,7 @@ class Session:
             return
         from repro.core.pipeline import serve_tiling
 
-        shards = (self.spec.pods or 1) * self.data_size
+        shards = self.pods_size * self.data_size
         if self.max_slots % shards != 0:
             raise SessionError(
                 f"max_slots ({self.max_slots}) must divide evenly over "
@@ -703,7 +754,12 @@ class Session:
         submissions up front, so the ``make_serve_step`` layout guards
         never fire mid-tick against an already-admitted request."""
         if self.rt.multi_pod:
-            return "logits return is not wired for multi-pod meshes"
+            reason = "logits return is not wired for multi-pod meshes"
+            if self._topology is not None:
+                reason += f" (topology: {self._topology.label()})"
+            elif self.spec.pods:
+                reason += f" (pods={self.spec.pods})"
+            return reason
         _, seq_shard, _ = serve_cache_pspecs(self.rt, self.shape_cfg)
         if seq_shard:
             return ("the sequence-sharded serve layout cannot return "
@@ -761,13 +817,22 @@ class Session:
             raise SessionError(
                 f"no checkpoint found under {ckpt_dir!r} "
                 f"(steps: {mgr.list_steps()})")
+        return self.adopt_params(tree)
+
+    def adopt_params(self, tree):
+        """Re-lay-out a host-side (or foreign-mesh) params tree onto THIS
+        session's mesh and shardings — the relayout half of
+        :meth:`restore_params`, also the elastic path: a reshard/restart
+        pulls the old session's params to host and adopts them here.
+        Accepts the params tree directly or nested under ``"params"``;
+        leaf shapes must match (geometry mismatch raises with the leaf).
+        """
         if "params" in tree and "io" not in tree:
             tree = tree["params"]
         if not ("io" in tree and "segments" in tree):
             raise SessionError(
-                f"checkpoint at {ckpt_dir!r} has keys {sorted(tree)}; "
-                "expected a params tree with 'io' and 'segments' (or one "
-                "nested under 'params')")
+                f"params tree has keys {sorted(tree)}; expected 'io' and "
+                "'segments' (or a tree nested under 'params')")
         shapes = self.param_shapes()
         flat_want = dict(jax.tree_util.tree_flatten_with_path(shapes)[0])
         flat_got = dict(jax.tree_util.tree_flatten_with_path(
@@ -796,6 +861,17 @@ class Session:
             jax.tree_util.tree_structure(shapes), [
                 out_flat[kp] for kp, _ in
                 jax.tree_util.tree_flatten_with_path(shapes)[0]])
+
+    def with_topology(self, topology) -> "Session":
+        """A fresh Session of this spec bound to ``topology`` — the
+        elastic rebuild (train restart on a shrunk mesh, serve reshard).
+        The explicit axis knobs reset: the new topology owns the layout.
+        Heavy state (mesh, Runtime, jitted steps) is rebuilt lazily; use
+        :meth:`adopt_params` to carry params across."""
+        spec = dataclasses.replace(
+            self.spec, topology=topology, data=None, pods=None,
+            multi_pod=False, devices=None, mesh=None)
+        return Session(spec)
 
     def lower(self):
         """Lower the step for this shape (dry-run: inspect, then compile)."""
@@ -979,10 +1055,29 @@ class Session:
             "schedule": sched,
             "kernels": self._kernel_report(),
             "n_params": n_params,
+            "topology": self._topology_report(),
         }
         if self._engine_stats is not None:
             out["serving"] = self._serving_report()
+        if self._fault_tolerance is not None:
+            out["fault_tolerance"] = self._fault_tolerance.summary()
         return out
+
+    def _topology_report(self) -> dict:
+        """``describe()["topology"]`` — the resolved hardware + axis
+        layout. Device-free: the topology path derives the layout from
+        the hardware description; the legacy-knob path reports what the
+        spec pinned (data may be None until a mesh materializes)."""
+        if self._topology is not None:
+            return self._topology.describe(self.geo.model_ranks,
+                                           self.spec.cost_preset)
+        return {
+            "kind": None,
+            "name": None,
+            "layout": {"pods": self.spec.pods or 1,
+                       "data": self._data,
+                       "model": self.geo.model_ranks},
+        }
 
     def _serving_report(self) -> dict:
         """Engine-side counters for ``describe()["serving"]`` — present

@@ -99,6 +99,12 @@ class SessionSpec:
     #                                    pages, needs page_size). Shorthand
     #                                    for overrides["kv_cache_dtype"].
     mesh: Any = None                # pre-built jax Mesh (advanced)
+    # hardware topology: a preset name ("fake_cpu", "gpu_cluster",
+    # "tpu_pod", "tpu_pod_x2"), a repro.runtime.topology.Topology, or a
+    # kwargs dict. Subsumes the data=/pods=/multi_pod=/devices=/mesh=
+    # knobs: the DP×FSDP×PP axis layout is derived from the hardware
+    # under cost_preset and Session.mesh is built from it.
+    topology: Any = None
 
     def __post_init__(self):
         object.__setattr__(self, "mode",
@@ -220,6 +226,26 @@ class SessionSpec:
                     "scales live beside the page pool); pass "
                     "page_size=<tokens per page> — contiguous slot rows "
                     "have no scale storage")
+        if self.topology is not None:
+            clash = [k for k, v in (("data", self.data),
+                                    ("pods", self.pods),
+                                    ("multi_pod", self.multi_pod or None),
+                                    ("devices", self.devices),
+                                    ("mesh", self.mesh)) if v is not None]
+            if clash:
+                raise SessionError(
+                    f"topology= subsumes {', '.join(clash)}: the axis "
+                    "layout (and device bootstrap) is derived from the "
+                    "topology under cost_preset — drop the explicit "
+                    "knob(s) or pin the axis via "
+                    "Topology(..., data=<width>)")
+            from repro.runtime.topology import (TopologyError,
+                                                resolve_topology)
+            try:
+                resolve_topology(self.topology)
+            except TopologyError as e:
+                raise SessionError(str(e)) from e
+
         from repro.core.plan import PRESETS
         if self.cost_preset not in PRESETS:
             raise SessionError(

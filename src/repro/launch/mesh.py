@@ -1,13 +1,22 @@
-"""Production meshes.
+"""Production meshes — thin wrapper over the topology presets.
 
-Kept as FUNCTIONS so importing this module never touches jax device state
-(entry points call repro.api.ensure_host_devices() before any other JAX
-use; tests use their own small meshes in subprocesses).
+The 16×16 pod shape and TPU v5e constants that used to be hard-coded
+here live in :mod:`repro.runtime.topology` now; this module stays
+importable (benchmarks/roofline.py pulls the constants) and keeps the
+historical ``make_production_mesh`` entry point. Kept as FUNCTIONS so
+importing this module never touches jax device state (entry points call
+repro.api.ensure_host_devices() before any other JAX use; tests use
+their own small meshes in subprocesses).
 """
 
 from __future__ import annotations
 
-import jax
+from repro.runtime.topology import (  # noqa: F401  (re-exports)
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    TOPOLOGY_PRESETS,
+)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,12 +26,5 @@ def make_production_mesh(*, multi_pod: bool = False):
     pipeline-stage axis (TP-free per the paper), "pod" = hybrid-sharded DP
     (params replicated, grads all-reduced once per step).
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-# TPU v5e hardware constants (per chip) used by the roofline analysis.
-PEAK_FLOPS_BF16 = 197e12          # FLOP/s
-HBM_BW = 819e9                    # bytes/s
-ICI_BW = 50e9                     # bytes/s per link (~4 links usable)
+    preset = TOPOLOGY_PRESETS["tpu_pod_x2" if multi_pod else "tpu_pod"]
+    return preset.build_mesh(16, cost_preset="tpu_v5e")

@@ -137,6 +137,15 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="train checkpoint dir to boot params from "
                          "(train→serve handoff)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel serving tier: N engine replicas "
+                         "behind an EngineRouter (least-outstanding-"
+                         "tokens dispatch, radix-affinity hinting, "
+                         "replica-failure failover)")
+    ap.add_argument("--kill-replica-after", type=int, default=None,
+                    help="failover drill (needs --replicas >= 2): kill "
+                         "replica 0 after this many requests finish; "
+                         "its in-flight work moves to the survivors")
     args = ap.parse_args()
 
     ensure_host_devices()
@@ -160,8 +169,8 @@ def main():
     if args.page_size:
         max_seq = -(-max_seq // args.page_size) * args.page_size
 
-    sess = session(
-        args.arch, mode="serve", data=args.data, max_slots=args.slots,
+    sess_kw = dict(
+        mode="serve", data=args.data, max_slots=args.slots,
         max_seq=max_seq, schedule=args.schedule, cost_preset=args.preset,
         prefill_chunk=args.prefill_chunk, page_size=args.page_size,
         max_pages=args.max_pages, prefix_sharing=args.prefix_sharing,
@@ -169,6 +178,13 @@ def main():
         overrides=dict(microbatches=2,
                        **({"moe_stats": True} if args.moe_stats else {})),
     )
+    if args.replicas > 1:
+        return _serve_routed(args, work, sess_kw)
+    if args.kill_replica_after is not None:
+        raise SystemExit("--kill-replica-after needs --replicas >= 2 "
+                         "(there is no survivor to fail over to)")
+
+    sess = session(args.arch, **sess_kw)
     d = sess.describe()["schedule"]
     print(f"serving with schedule={d['name']} "
           f"(simulated bubble {d['bubble_ratio']:.3f}, "
@@ -221,6 +237,72 @@ def main():
                 line += f" load_per_expert={moe['load_per_expert']}"
         print(line)
     print("SERVE_OK")
+
+
+def _serve_routed(args, work, sess_kw):
+    """The --replicas N path: N sessions/engines behind an EngineRouter,
+    optional mid-workload replica kill (--kill-replica-after)."""
+    import jax
+
+    from repro.api import session
+    from repro.serving import EngineRouter
+
+    engines = []
+    for r in range(args.replicas):
+        sess = session(args.arch, **sess_kw)
+        if args.ckpt:
+            params = sess.restore_params(args.ckpt)
+        else:
+            params = sess.init_params(jax.random.PRNGKey(0))
+        engines.append(sess.serve_engine(params))
+    d = engines[0].session.describe()["schedule"]
+    print(f"serving with schedule={d['name']} x{args.replicas} replicas "
+          f"({args.slots} slots each, max_seq "
+          f"{engines[0].session._max_seq()})")
+    router = EngineRouter(engines)
+    t0 = time.time()
+    failed = 0
+    with router:
+        handles = [
+            router.submit(toks, max_gen=g, stop=stop,
+                          temperature=args.temperature, top_p=args.top_p,
+                          seed=(None if args.seed is None
+                                else args.seed + i))
+            for i, (toks, g, stop) in enumerate(work)]
+        if args.kill_replica_after is not None:
+            k = min(args.kill_replica_after, len(handles))
+            for h in handles[:k]:
+                h.result(timeout=600)
+            moved = router.kill_replica(0)
+            print(f"replica 0 killed after {k} results; "
+                  f"{moved} in-flight/queued requests moved to survivors")
+        results = []
+        for h in handles:
+            try:
+                results.append(h.result(timeout=600))
+            except BaseException as e:  # noqa: BLE001 — report, not die
+                failed += 1
+                results.append(e)
+    dt = time.time() - t0
+    for i, ((toks, g, _), res) in enumerate(zip(work, results)):
+        if isinstance(res, BaseException):
+            print(f"  req{i}: prompt {len(toks):3d} -> FAILED ({res})")
+        else:
+            print(f"  req{i}: prompt {len(toks):3d} -> {len(res)} tokens "
+                  f"{res[:8]}{'...' if len(res) > 8 else ''}")
+    st = router.stats()
+    total = st["generated_tokens"]
+    print(f"router: replicas={st['replicas']} alive={st['alive']} "
+          f"failovers={st['failovers']} "
+          f"dispatched={router.dispatched} "
+          f"resubmitted={[p['resubmitted_requests'] for p in st['per_replica']]}")
+    print(f"{len(work)} requests, {total} tokens in {dt:.3f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s aggregate, "
+          f"failed={failed})")
+    if failed == 0:
+        print("SERVE_OK")
+    else:
+        raise SystemExit(f"{failed} requests failed")
 
 
 if __name__ == "__main__":

@@ -18,23 +18,37 @@ import argparse
 from repro.api import ensure_host_devices, session
 
 
-def build_session(arch: str, *, data: int, seq: int, microbatches: int,
-                  schedule: str, lr: float, unit: int = 0,
-                  preset: str = "a800", profile_top_k: int = 3,
+def build_session(arch: str, *, data: int | None = None, seq: int,
+                  microbatches: int, schedule: str, lr: float,
+                  unit: int = 0, preset: str = "a800",
+                  profile_top_k: int = 3,
                   profile_budget_s: float | None = None,
-                  moe_mode: str | None = None, moe_stats: bool = False):
-    """One facade call replaces the old 8-step assembly ritual."""
+                  moe_mode: str | None = None, moe_stats: bool = False,
+                  topology=None, global_batch: int | None = None):
+    """One facade call replaces the old 8-step assembly ritual.
+
+    ``topology=`` (a preset name or a ``repro.runtime.topology.Topology``)
+    subsumes ``data=`` — the axis layout is derived from the hardware.
+    ``global_batch=`` pins the batch across elastic restarts so the data
+    stream (and the loss trajectory) continues on a shrunk mesh.
+    """
     kw = {}
     if schedule == "auto_profiled":
         kw = dict(profile_top_k=profile_top_k,
                   profile_budget_s=profile_budget_s)
+    if topology is not None:
+        kw["topology"] = topology
+    else:
+        kw["data"] = data
+    if global_batch is not None:
+        kw["global_batch"] = global_batch
     ov = dict(schedule=schedule, microbatches=microbatches, unit=unit)
     if moe_mode is not None:
         ov["moe_mode"] = moe_mode
     if moe_stats:
         ov["moe_stats"] = True
     sess = session(
-        arch, mode="train", data=data, seq_len=seq, cost_preset=preset,
+        arch, mode="train", seq_len=seq, cost_preset=preset,
         overrides=ov,
         optim=dict(lr=lr, warmup=20, total=10_000), **kw,
     )
@@ -116,9 +130,16 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--topology", default=None,
+                    help="hardware topology preset (fake_cpu | "
+                         "gpu_cluster | tpu_pod | tpu_pod_x2); default "
+                         "builds a fake_cpu topology pinned to --data")
+    ap.add_argument("--max-failures", type=int, default=3)
     args = ap.parse_args()
 
     ensure_host_devices()
+    import dataclasses as _dc
+
     import jax
     import jax.numpy as jnp
 
@@ -126,25 +147,52 @@ def main():
         FaultToleranceConfig,
         TrainController,
     )
+    from repro.runtime.topology import resolve_topology
 
     ctl = TrainController(args.ckpt_dir,
-                          FaultToleranceConfig(ckpt_every=args.ckpt_every))
+                          FaultToleranceConfig(
+                              ckpt_every=args.ckpt_every,
+                              max_failures=args.max_failures))
+    box: dict = {}   # first-build facts pinned across elastic restarts
 
     def build(restored, manifest):
-        # fresh session per (re)start: elastic restarts may re-mesh
+        # fresh session per (re)start: an elastic restart rebuilds on a
+        # topology whose data axis halves per failure (node-loss model:
+        # the survivors re-mesh; params relayout from the checkpoint)
+        topo = resolve_topology(args.topology or "fake_cpu")
+        if ctl.failures:
+            d0 = box["data"]
+            topo = _dc.replace(topo, name=None,
+                               data=max(1, d0 // (2 ** ctl.failures)))
+        elif args.topology is None:
+            topo = _dc.replace(topo, data=args.data)
         sess = build_session(
-            args.arch, data=args.data, seq=args.seq,
+            args.arch, seq=args.seq,
             microbatches=args.microbatches, schedule=args.schedule,
             lr=args.lr, unit=args.unit, preset=args.preset,
             profile_top_k=args.profile_top_k,
             profile_budget_s=args.profile_budget_s,
-            moe_mode=args.moe_mode, moe_stats=args.moe_stats)
+            moe_mode=args.moe_mode, moe_stats=args.moe_stats,
+            topology=topo, global_batch=box.get("gb"))
+        ctl.attach(sess)
+        box.setdefault("data", sess.data_size)
+        # pin the global batch so the stream (and the loss trajectory)
+        # continues unchanged when the data axis shrinks
+        box.setdefault("gb", sess.shape_cfg.global_batch)
+        if ctl.failures:
+            start = (manifest or {}).get("extra", {}).get("step", 0)
+            print(f"elastic: restart {ctl.failures}/"
+                  f"{ctl.cfg.max_failures} resumed at step {start} on "
+                  f"{topo.label()} (data {box['data']}->"
+                  f"{sess.data_size}, global_batch {box['gb']})")
         stream = sess.stream()
         if restored is None:
             params = sess.init_params(jax.random.PRNGKey(0))
             opt_state = sess.init_opt_state(params)
         else:
-            params = jax.tree.map(jnp.asarray, restored["params"])
+            # relayout the verified checkpoint onto THIS session's mesh
+            # and shardings (the restart topology may be smaller)
+            params = sess.adopt_params(restored["params"])
             opt_state = jax.tree.map(jnp.asarray, restored["opt"])
             opt_state["step"] = jnp.asarray(opt_state["step"])
         state = {"params": params, "opt": opt_state}
@@ -164,21 +212,28 @@ def main():
                          f"dropped {int(metrics['moe_dropped'])}")
             print(f"step {step_no:4d} loss {loss:.4f} "
                   f"gnorm {float(om['grad_norm']):.3f}{extra}")
-            return {"params": params, "opt": opt}, {"loss": loss}
+            return {"params": params, "opt": opt}, {
+                "loss": loss,
+                "straggler_flags": ctl.watchdog.flags,
+                "failures": ctl.failures,
+            }
 
         return state, run_one, lambda s: s
 
     state, history = ctl.run(build, args.steps,
                              inject_failure_at=args.inject_failure_at)
     losses = [m["loss"] for _, m in history]
+    ft = ctl.summary()
+    tail = (f"straggler_flags={ft['straggler_flags']} "
+            f"failures={ft['failures']} "
+            f"resume_steps={ft['resume_steps']}")
     if losses:
         print(f"DONE first_loss={losses[0]:.4f} "
-              f"last_loss={losses[-1]:.4f} "
-              f"straggler_flags={ctl.watchdog.flags}")
+              f"last_loss={losses[-1]:.4f} steps={len(history)} {tail}")
     else:
         # a checkpoint at/past --steps resumes to a zero-step run
         print(f"DONE resumed-at-target (checkpoint >= --steps "
-              f"{args.steps}) straggler_flags={ctl.watchdog.flags}")
+              f"{args.steps}) {tail}")
 
 
 if __name__ == "__main__":

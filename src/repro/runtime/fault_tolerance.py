@@ -70,6 +70,26 @@ class TrainController:
         self.mgr = CheckpointManager(ckpt_dir, keep=cfg.keep)
         self.watchdog = StragglerWatchdog(cfg)
         self.failures = 0
+        self.resume_steps: list[int] = []   # step each restart resumed at
+
+    def attach(self, session) -> "TrainController":
+        """Surface this controller in ``session.describe()
+        ["fault_tolerance"]`` (failures/flags/resumes become part of the
+        run's introspection record, not just the log)."""
+        session._fault_tolerance = self
+        return self
+
+    def summary(self) -> dict:
+        """Counters for metrics / ``describe()["fault_tolerance"]``."""
+        return {
+            "failures": self.failures,
+            "max_failures": self.cfg.max_failures,
+            "straggler_flags": self.watchdog.flags,
+            "straggler_ema_s": self.watchdog.ema,
+            "resume_steps": list(self.resume_steps),
+            "ckpt_every": self.cfg.ckpt_every,
+            "ckpt_steps": self.mgr.list_steps(),
+        }
 
     def restore_latest(self, shardings=None):
         step = self.mgr.latest_step()
@@ -92,6 +112,8 @@ class TrainController:
         while True:
             tree, manifest = self.restore_latest()
             start = (manifest or {}).get("extra", {}).get("step", 0)
+            if self.failures:
+                self.resume_steps.append(start)
             state, run_one, tree_of = build(tree, manifest)
             step = start
             try:

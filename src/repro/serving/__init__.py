@@ -22,7 +22,12 @@ schedule search does for training. This package supplies that batching:
   eviction of unreferenced prefixes);
 * :mod:`repro.serving.sampling` — temperature / top-p decoding with
   per-request seeded generators, fed by the serve step's optional
-  full-logits return.
+  full-logits return;
+* :class:`EngineRouter` — the data-parallel tier: N engine replicas
+  behind least-outstanding-tokens dispatch with radix-affinity hinting,
+  replica failure handled by parking + resubmitting to survivors
+  (``ServeEngine.reshard(new_topology)`` is the single-engine elastic
+  analogue: park, rebuild on the new mesh, re-admit).
 
 Correctness bar: engine output for N staggered requests is
 token-identical to N independent single-request ``serve_prefill``/
@@ -33,6 +38,7 @@ the contiguous path (see tests/test_serving.py, tests/spmd_case.py).
 from repro.serving.engine import EngineStats, ServeEngine
 from repro.serving.paging import PageAllocation, PagePool, PagedSlotPool
 from repro.serving.radix import RadixIndex
+from repro.serving.router import EngineRouter, RouterError
 from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import (
     MoECapacity,
@@ -43,8 +49,10 @@ from repro.serving.scheduler import (
 from repro.serving.slots import SlotPool, SlotView
 
 __all__ = [
+    "EngineRouter",
     "EngineStats",
     "MoECapacity",
+    "RouterError",
     "PageAllocation",
     "PagePool",
     "PagedSlotPool",

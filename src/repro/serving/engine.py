@@ -77,6 +77,10 @@ class EngineStats:
     peak_pages_in_use: int = 0      # high-water mark
     # MoE capacity-aware admission (zero on dense models)
     capacity_deferrals: int = 0     # admissions deferred by the MoE bound
+    # elastic serving
+    reshards: int = 0               # reshard(new_topology) calls
+    reshard_pause_s: float = 0.0    # total wall-clock parked in reshards
+    resubmitted_requests: int = 0   # parked requests re-admitted here
 
 
 class _MoEServeStats:
@@ -123,23 +127,7 @@ class ServeEngine:
         self.session = session
         self.params = params
         self._paged = bool(session.paged)
-        if self._paged:
-            seg_ = session.geo.segments[-1]
-            if any(k.split(":")[0] not in _CHUNKABLE_MIXES
-                   for k in seg_.kinds):
-                raise NotImplementedError(
-                    "paged KV covers position-indexed (attention-family) "
-                    f"caches; segment kinds {seg_.kinds} keep per-slot "
-                    "recurrent state — drop page_size for this "
-                    "architecture")
-            shards = (session.spec.pods or 1) * session.data_size
-            self.pool: SlotPool | PagedSlotPool = PagedSlotPool(
-                session.max_slots, session._max_seq(),
-                page_size=session.page_size, n_pages=session.n_pages,
-                shards=shards, groups=session.rt.G,
-                sharing=session.spec.prefix_sharing == "on")
-        else:
-            self.pool = SlotPool(session.max_slots, session._max_seq())
+        self.pool: SlotPool | PagedSlotPool = self._build_pool()
         moe_cfg = getattr(session.cfg, "moe", None)
         if policy is None and moe_cfg is not None:
             # MoE serving defaults to capacity-aware admission: defer
@@ -187,6 +175,29 @@ class ServeEngine:
         self._thread: threading.Thread | None = None
         self._failure: BaseException | None = None
         self._closed = False
+
+    def _build_pool(self) -> "SlotPool | PagedSlotPool":
+        """The slot (or paged-slot) pool for the CURRENT session — called
+        at construction and again by :meth:`reshard` when the session is
+        rebuilt on a new topology (pool partitioning follows the mesh)."""
+        session = self.session
+        if self._paged:
+            seg_ = session.geo.segments[-1]
+            if any(k.split(":")[0] not in _CHUNKABLE_MIXES
+                   for k in seg_.kinds):
+                raise NotImplementedError(
+                    "paged KV covers position-indexed (attention-family) "
+                    f"caches; segment kinds {seg_.kinds} keep per-slot "
+                    "recurrent state — drop page_size for this "
+                    "architecture")
+            pods = getattr(session, "pods_size", None) \
+                or (session.spec.pods or 1)
+            return PagedSlotPool(
+                session.max_slots, session._max_seq(),
+                page_size=session.page_size, n_pages=session.n_pages,
+                shards=pods * session.data_size, groups=session.rt.G,
+                sharing=session.spec.prefix_sharing == "on")
+        return SlotPool(session.max_slots, session._max_seq())
 
     # ------------------------------------------------------------------ #
     # Submission / consumption (any thread)
@@ -356,6 +367,133 @@ class ServeEngine:
             if not did and self.scheduler.n_queued == 0:
                 self._wake.wait(timeout=0.05)
                 self._wake.clear()
+
+    # ------------------------------------------------------------------ #
+    # Elastic serving: park / resubmit / reshard
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _fold(req: Request) -> None:
+        """Fold ``req``'s emitted-but-unfolded tokens into its prompt so
+        a re-prefill of the folded prompt emits exactly the next
+        continuation token (prefill of length S emits the token at
+        index S). Idempotent per token via ``req._folded``."""
+        new = req.tokens[req._folded:]
+        if new:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(new, np.int32)])
+            req._folded = len(req.tokens)
+
+    def park_all(self) -> list[Request]:
+        """Pull every request — in flight and queued — back to the host
+        in arrival order: in-flight requests get their emitted tokens
+        folded into their prompts (re-admission re-prefills them; radix
+        sharing makes the repeat cheap) and their slots released. The
+        engine is empty afterwards; the requests' waiters stay blocked
+        until somewhere re-admits them (:meth:`reshard`, or a router's
+        failover :meth:`resubmit` on a survivor replica)."""
+        with self._lock:
+            parked: list[Request] = []
+            for slot, req in sorted(self._by_slot.items()):
+                self._fold(req)
+                self.pool.release(slot)
+                req.slot = None
+                if req.prompt_len >= self.pool.max_seq:
+                    # one-token-from-cache-full edge: the folded prompt
+                    # no longer fits re-prefill + 1 generated token.
+                    # Surface it rather than silently truncating the
+                    # stream (uninterrupted serving would have emitted
+                    # one final token before the cache-full finish).
+                    _fail_request(req, RuntimeError(
+                        f"request {req.id} was parked {req.prompt_len} "
+                        f"tokens into a max_seq={self.pool.max_seq} "
+                        "cache — its stream cannot continue after a "
+                        "reshard; resubmit with a longer max_seq"))
+                    continue
+                parked.append(req)
+            self._by_slot.clear()
+            parked.extend(self.scheduler.drain())
+            parked.sort(key=lambda r: r.id)
+            return parked
+
+    def resubmit(self, req: Request) -> Request:
+        """Re-admit a parked request (see :meth:`park_all`) — the
+        failover path. The request OBJECT carries its emitted tokens,
+        waiters and sampling RNG across, so the token stream (greedy or
+        seeded-sampled) continues exactly where it stopped."""
+        if self._closed:
+            raise RuntimeError("engine closed; no further submissions")
+        if self._failure is not None:
+            raise RuntimeError("engine failed; no further submissions") \
+                from self._failure
+        self._fold(req)   # no-op unless the caller skipped park_all
+        self.pool.validate_prompt(req.prompt_len)
+        if not req.sampling.greedy and self._no_sampling is not None:
+            raise NotImplementedError(
+                f"sampling (temperature>0) is unavailable on this "
+                f"session: {self._no_sampling} — this replica cannot "
+                "adopt the request")
+        self.scheduler.submit(req)
+        self.stats.resubmitted_requests += 1
+        self._wake.set()
+        return req
+
+    def reshard(self, new_topology) -> dict:
+        """Rebuild this engine on ``new_topology`` without dropping
+        work: park every request host-side, rebuild the session (mesh,
+        jitted steps), relayout the params, rebuild the slot/page pools
+        and caches, then re-admit the parked requests in arrival order.
+        Token streams continue — consumers only observe a pause.
+        Returns ``{"parked": n, "pause_s": wall_clock}``."""
+        import time
+
+        t0 = time.perf_counter()
+        with self._lock:
+            parked = self.park_all()
+            new_sess = self.session.with_topology(new_topology)
+            adopt = getattr(new_sess, "adopt_params", None)
+            if self.params is not None and adopt is not None:
+                host = jax_tree_to_host(self.params)
+                self.params = adopt(host)
+            self.session = new_sess
+            self._paged = bool(new_sess.paged)
+            self.pool = self._build_pool()
+            self.caches = new_sess.init_caches(abstract=False)
+            probe = getattr(new_sess, "sampling_unsupported_reason", None)
+            self._no_sampling = probe() if probe is not None else None
+            new_sess._engine_stats = self.stats
+            for req in parked:
+                self.scheduler.submit(req)
+            self.stats.reshards += 1
+            pause = time.perf_counter() - t0
+            self.stats.reshard_pause_s += pause
+            self._wake.set()
+            return {"parked": len(parked), "pause_s": pause}
+
+    def outstanding_tokens(self) -> int:
+        """Token-denominated load: generation budget still owed to the
+        in-flight requests plus prompt+budget of the queued ones — the
+        router's least-loaded dispatch metric."""
+        with self._lock:
+            tot = 0
+            for req in self._by_slot.values():
+                tot += max(0, req.max_gen - len(req.tokens))
+            for req in self.scheduler.pending():
+                tot += req.prompt_len + req.max_gen
+            return tot
+
+    def prefix_affinity(self, prompt) -> int:
+        """Tokens of ``prompt`` this engine's radix already caches (0 on
+        contiguous pools / sharing off) — the router's affinity hint."""
+        if not self._paged or getattr(self.pool, "radix", None) is None:
+            return 0
+        with self._lock:
+            p = np.asarray(prompt, np.int32).reshape(-1)
+            max_match = max(0, (int(p.size) - 1) // self.pool.page_size)
+            if max_match == 0:
+                return 0
+            chain = self.pool.radix.match(p, max_match)
+            return len(chain) * self.pool.page_size
 
     # ------------------------------------------------------------------ #
     # Tick internals
@@ -556,6 +694,14 @@ class ServeEngine:
         self._by_slot.clear()
         for req in self.scheduler.drain():
             _fail_request(req, e)
+
+
+def jax_tree_to_host(tree):
+    """Pull a (possibly sharded) array tree to host numpy — the transfer
+    half of a reshard (the new session's ``adopt_params`` re-lays the
+    host tree out on the new mesh)."""
+    import jax
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
 def _fail_request(req: Request, e: BaseException) -> None:

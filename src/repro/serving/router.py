@@ -1,0 +1,189 @@
+"""EngineRouter: the data-parallel serving tier.
+
+One :class:`~repro.serving.engine.ServeEngine` saturates one mesh; the
+millions-of-users shape from the ROADMAP is N engine *replicas* — each
+with its own session, slot/page pools and radix index — behind a router:
+
+* **dispatch** — least-outstanding-tokens (each engine's queued +
+  in-flight generation budget), with a radix-affinity override: when a
+  replica already caches a prefix of the incoming prompt, it wins the
+  request as long as its load is within ``affinity_slack`` tokens of the
+  least-loaded replica. Affinity concentrates same-prefix traffic so the
+  radix keeps paying; the slack bound keeps a hot prefix from starving
+  the other replicas.
+* **failover** — a replica failure (its driver died, or
+  :meth:`kill_replica` simulated a node loss) parks that replica's
+  requests host-side (prompt + emitted tokens) and resubmits them to the
+  survivors in arrival order. Request OBJECTS move, so waiters, emitted
+  tokens and per-request sampling RNGs survive — a seeded sampled stream
+  is bit-identical across a replica move.
+
+Every replica serves the same model, so the router is output-transparent:
+greedy streams are token-identical to single-engine serving no matter
+which replica (or how many replicas) served them.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.serving.engine import ServeEngine, _fail_request
+from repro.serving.scheduler import Request
+
+
+class RouterError(RuntimeError):
+    """No live replica can take the work."""
+
+
+class EngineRouter:
+    """Least-loaded dispatch + failover over N engine replicas."""
+
+    def __init__(self, engines: Sequence[ServeEngine], *,
+                 affinity_slack: int = 256):
+        if not engines:
+            raise ValueError("EngineRouter needs at least one engine")
+        self.engines = list(engines)
+        self.affinity_slack = affinity_slack
+        self._lock = threading.Lock()
+        self._dead: set[int] = set()
+        self.dispatched = [0] * len(self.engines)   # per-replica counts
+        self.failovers = 0                          # replicas failed over
+
+    # ------------------------------------------------------------------ #
+    # Dispatch
+    # ------------------------------------------------------------------ #
+
+    def alive(self) -> list[int]:
+        """Replica indices currently accepting work (failed drivers are
+        detected here and failed over before the list is returned)."""
+        for i, eng in enumerate(self.engines):
+            if i not in self._dead and eng._failure is not None:
+                self._failover(i)
+        return [i for i in range(len(self.engines)) if i not in self._dead]
+
+    def pick(self, prompt) -> int:
+        """The replica for ``prompt``: least outstanding tokens, unless
+        a replica with cached-prefix affinity is within the slack."""
+        alive = self.alive()
+        if not alive:
+            raise RouterError("no live replicas")
+        load = {i: self.engines[i].outstanding_tokens() for i in alive}
+        best = min(alive, key=lambda i: (load[i], i))
+        aff = [(self.engines[i].prefix_affinity(prompt), i) for i in alive]
+        hit, i_aff = max(aff)
+        if hit > 0 and load[i_aff] <= load[best] + self.affinity_slack:
+            return i_aff
+        return best
+
+    def submit(self, prompt, **kw) -> Request:
+        """Enqueue on the chosen replica; returns the request handle
+        (its tokens stream from whichever replica serves it)."""
+        with self._lock:
+            i = self.pick(prompt)
+            req = self.engines[i].submit(prompt, **kw)
+            self.dispatched[i] += 1
+            return req
+
+    # ------------------------------------------------------------------ #
+    # Failover
+    # ------------------------------------------------------------------ #
+
+    def kill_replica(self, i: int) -> int:
+        """Simulated node loss: park replica ``i``'s work, move it to
+        the survivors, shut the replica down. Returns the number of
+        requests moved. (Real failures — a driver thread dying on an
+        exception — take the same path via :meth:`alive`.)"""
+        with self._lock:
+            return self._failover(i)
+
+    def _failover(self, i: int) -> int:
+        if i in self._dead:
+            return 0
+        self._dead.add(i)
+        self.failovers += 1
+        eng = self.engines[i]
+        parked = eng.park_all()
+        # the replica is drained; stop its driver. close() sees no
+        # outstanding requests, so nothing gets failed here.
+        try:
+            eng.close()
+        except RuntimeError:
+            pass    # a failed driver may refuse to close cleanly
+        survivors = [j for j in range(len(self.engines))
+                     if j not in self._dead
+                     and self.engines[j]._failure is None]
+        if not survivors:
+            for req in parked:
+                _fail_request(req, RouterError(
+                    "replica failed with no survivors to adopt its "
+                    "requests"))
+            return 0
+        for req in parked:    # arrival order (park_all sorts by id)
+            j = min(survivors,
+                    key=lambda k: (self.engines[k].outstanding_tokens(),
+                                   k))
+            self.engines[j].resubmit(req)
+            self.dispatched[j] += 1
+        return len(parked)
+
+    # ------------------------------------------------------------------ #
+    # Lifecycle / introspection
+    # ------------------------------------------------------------------ #
+
+    def start(self) -> "EngineRouter":
+        for i in self.alive():
+            self.engines[i].start()
+        return self
+
+    def close(self) -> None:
+        for i in list(self.alive()):
+            self.engines[i].close()
+
+    def __enter__(self) -> "EngineRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> dict:
+        """Tick every live replica until all are idle (sync driver)."""
+        for _ in range(max_ticks):
+            busy = False
+            for i in self.alive():
+                eng = self.engines[i]
+                busy |= eng.step() or eng.scheduler.n_queued > 0
+            if not busy and not self._pending_anywhere():
+                return self.stats()
+        raise RuntimeError(f"router not idle after {max_ticks} ticks")
+
+    def _pending_anywhere(self) -> bool:
+        return any(self.engines[i].scheduler.n_queued > 0
+                   for i in self.alive())
+
+    def stats(self) -> dict:
+        """Aggregate + per-replica counters."""
+        per = []
+        for i, eng in enumerate(self.engines):
+            st = eng.stats
+            per.append({
+                "alive": i not in self._dead,
+                "dispatched": self.dispatched[i],
+                "generated_tokens": st.generated_tokens,
+                "finished_requests": st.finished_requests,
+                "resubmitted_requests": st.resubmitted_requests,
+                "prefix_hits": st.prefix_hits,
+                "occupancy": st.occupancy,
+            })
+        return {
+            "replicas": len(self.engines),
+            "alive": len(self.alive()),
+            "failovers": self.failovers,
+            "generated_tokens": int(np.sum(
+                [p["generated_tokens"] for p in per])),
+            "finished_requests": int(np.sum(
+                [p["finished_requests"] for p in per])),
+            "per_replica": per,
+        }

@@ -54,6 +54,11 @@ class Request:
     error: BaseException | None = None
     _stream: "queue.SimpleQueue[Any]" = dataclasses.field(
         default_factory=queue.SimpleQueue)
+    # tokens already folded into ``prompt`` by an engine park (elastic
+    # reshard / replica failover): re-admission re-prefills the folded
+    # prompt and the next emission continues the stream exactly where it
+    # stopped. Counts into ``tokens`` — never fold the same token twice.
+    _folded: int = 0
 
     def __post_init__(self):
         from repro.serving.sampling import SamplingParams, make_rng
@@ -183,6 +188,11 @@ class RequestScheduler:
         with self._lock:
             out, self._queue = self._queue, []
             return out
+
+    def pending(self) -> list[Request]:
+        """Snapshot of the queued requests (router load accounting)."""
+        with self._lock:
+            return list(self._queue)
 
     def admit(self, pool: SlotPool,
               ) -> tuple[list[Request], list[tuple[Request, Exception]]]:

@@ -345,3 +345,91 @@ def test_session_matches_hand_assembled_path():
         f"api_parity failed\n--- stdout ---\n{p.stdout[-3000:]}"
         f"\n--- stderr ---\n{p.stderr[-3000:]}"
     )
+
+
+# --------------------------------------------------------------------------- #
+# Topology (device-free: layout derivation never touches jax)
+# --------------------------------------------------------------------------- #
+
+
+def test_topology_preset_layouts():
+    from repro.api import TOPOLOGY_PRESETS
+
+    # a800 NVLink confinement: 256 devices / model=16 would give data=16
+    # spanning two 8-GPU hosts; the rule folds the excess into pods
+    lay = TOPOLOGY_PRESETS["gpu_cluster"].axis_layout(
+        16, cost_preset="a800")
+    assert (lay["pods"], lay["data"], lay["model"]) == (2, 8, 16)
+    assert lay["devices_used"] == 256
+    # tpu_v5e keeps the full-pod data axis
+    lay = TOPOLOGY_PRESETS["tpu_pod"].axis_layout(
+        16, cost_preset="tpu_v5e")
+    assert (lay["pods"], lay["data"], lay["model"]) == (1, 16, 16)
+    lay = TOPOLOGY_PRESETS["tpu_pod_x2"].axis_layout(
+        16, cost_preset="tpu_v5e")
+    assert (lay["pods"], lay["data"], lay["model"]) == (2, 16, 16)
+
+
+def test_topology_explicit_data_and_shrink():
+    from repro.api import Topology
+    from repro.runtime.topology import TopologyError
+
+    t = Topology(kind="fake_cpu", data=4)
+    lay = t.axis_layout(2)
+    assert (lay["data"], lay["model"]) == (4, 2)
+    s = t.shrink(model_ranks=2)
+    assert s.data == 2
+    assert s.shrink(model_ranks=2).data == 1
+    with pytest.raises(TopologyError, match="nothing left to shrink"):
+        s.shrink(model_ranks=2).shrink(model_ranks=2)
+
+
+def test_topology_validation_errors():
+    from repro.api import Topology
+    from repro.runtime.topology import TopologyError, resolve_topology
+
+    with pytest.raises(TopologyError, match="unknown topology kind"):
+        Topology(kind="warp_drive").validate()
+    with pytest.raises(TopologyError, match="devices_per_host"):
+        Topology(kind="gpu_cluster", hosts=4).validate()
+    with pytest.raises(TopologyError, match="partition"):
+        Topology(kind="gpu_cluster", hosts=5, devices_per_host=8,
+                 pods=2).validate()
+    with pytest.raises(TopologyError, match="unknown topology preset"):
+        resolve_topology("no-such-preset")
+
+
+def test_spec_topology_knob():
+    from repro.api import Topology
+
+    # topology= subsumes the legacy placement knobs — clash is an error
+    with pytest.raises(SessionError, match="subsumes"):
+        session("llama3.2-1b", topology="fake_cpu", data=2)
+    with pytest.raises(SessionError, match="unknown topology preset"):
+        session("llama3.2-1b", topology="no-such-preset")
+    # describe()["topology"] resolves the layout without devices
+    sess = session("llama3.2-1b",
+                   topology=Topology(kind="fake_cpu", data=2),
+                   overrides=dict(microbatches=4, unit=2))
+    topo = sess.describe()["topology"]
+    assert topo["kind"] == "fake_cpu"
+    assert topo["layout"] == {"pods": 1, "data": 2, "model": 2,
+                              "devices_used": 4, "devices_total": 8}
+    # without topology= the report still carries the resolved layout
+    sess = session("llama3.2-1b", data=2,
+                   overrides=dict(microbatches=4, unit=2))
+    topo = sess.describe()["topology"]
+    assert topo["kind"] is None and topo["layout"]["data"] == 2
+
+
+def test_topology_production_mesh_presets_agree():
+    """launch.mesh's production builders are now topology presets; the
+    derived layouts must match the former hard-coded 16x16 pod."""
+    from repro.api import TOPOLOGY_PRESETS
+
+    lay = TOPOLOGY_PRESETS["tpu_pod"].axis_layout(
+        16, cost_preset="tpu_v5e")
+    assert lay["devices_total"] == 256 == 16 * 16
+    lay2 = TOPOLOGY_PRESETS["tpu_pod_x2"].axis_layout(
+        16, cost_preset="tpu_v5e")
+    assert lay2["devices_total"] == 512 and lay2["pods"] == 2

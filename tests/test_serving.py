@@ -897,3 +897,128 @@ def test_paged_equals_contiguous_serving():
     O(0.5%) — the API.md caveat; seed 2 reproduces the flip)."""
     _run("serving_paged_equiv", "llama3.2-1b",
          env_extra={"PYTHONHASHSEED": "0"})
+
+
+# --------------------------------------------------------------------------- #
+# Park / resubmit / EngineRouter (no devices)
+# --------------------------------------------------------------------------- #
+
+
+def test_engine_park_resubmit_roundtrip():
+    """park_all folds emitted tokens into the prompt and frees the slot;
+    resubmit re-queues the SAME request object, which finishes with the
+    full max_gen token count on re-admission."""
+    eng = _engine(n_slots=2, max_seq=16)
+    r = eng.submit([1, 2, 3], max_gen=6)
+    eng.step()                      # prefill + 1 decode -> 2 tokens
+    assert len(r.tokens) == 2 and r.slot is not None
+    parked = eng.park_all()
+    assert parked == [r]
+    assert r.slot is None and eng.pool.n_active == 0
+    assert r.prompt_len == 3 + 2    # emitted tokens folded into prompt
+    assert not r.done.is_set()
+    eng.resubmit(r)
+    eng.run_until_idle()
+    assert r.done.is_set() and r.error is None
+    assert len(r.tokens) == 6
+    assert eng.stats.resubmitted_requests == 1
+
+
+def test_park_all_drains_queue_in_arrival_order():
+    eng = _engine(n_slots=1, max_seq=16)
+    rs = [eng.submit([1, 2], max_gen=2) for _ in range(3)]
+    eng.step()                      # r0 in a slot, r1/r2 queued
+    parked = eng.park_all()
+    assert [p.id for p in parked] == [r.id for r in rs if not
+                                      r.done.is_set()]
+    assert eng.scheduler.n_queued == 0
+
+
+def test_park_all_fails_cache_full_edge():
+    """A request parked one decode short of cache-full folds to
+    prompt_len == max_seq — it cannot re-prefill, so park_all fails it
+    loudly instead of truncating its stream."""
+    eng = _engine(n_slots=2, max_seq=8)
+    r = eng.submit([1, 2, 3, 4, 5], max_gen=6)
+    eng.step()                      # prefill + decode -> 2 tokens, pos=7
+    eng.step()                      # decode -> 3 tokens, pos advances on
+    # the emit *after* this one, so the request is still in flight
+    assert len(r.tokens) == 3 and not r.done.is_set()
+    parked = eng.park_all()
+    assert parked == []             # nothing reusable survived
+    with pytest.raises(RuntimeError, match="cannot continue after a "
+                       "reshard"):
+        r.result(timeout=5)
+
+
+def test_router_least_loaded_dispatch():
+    from repro.serving import EngineRouter
+
+    router = EngineRouter([_engine(n_slots=2), _engine(n_slots=2)])
+    router.submit([1, 2, 3], max_gen=4)     # load 0 -> replica 0
+    router.submit([1, 2, 3], max_gen=4)     # replica 0 loaded -> 1
+    router.submit([1, 2], max_gen=2)        # tie on count, 0 lighter? no:
+    assert router.dispatched == [2, 1]      # equal load ties break low
+    assert router.engines[0].outstanding_tokens() > 0
+
+
+def test_router_affinity_override_within_slack():
+    from repro.serving import EngineRouter
+
+    e0, e1 = _engine(n_slots=2), _engine(n_slots=2)
+    router = EngineRouter([e0, e1], affinity_slack=256)
+    e1.prefix_affinity = lambda p: 8        # replica 1 caches a prefix
+    router.submit([1, 2, 3], max_gen=4)
+    assert router.dispatched == [0, 1]      # affinity beat the tie
+    # outside the slack the least-loaded replica wins again
+    tight = EngineRouter([_engine(n_slots=2), _engine(n_slots=2)],
+                         affinity_slack=0)
+    tight.engines[1].prefix_affinity = lambda p: 8
+    tight.engines[1].submit([1] * 4, max_gen=8)   # out-of-band load
+    tight.submit([1, 2, 3], max_gen=4)
+    assert tight.dispatched == [1, 0]
+
+
+def test_router_kill_replica_moves_queued_work():
+    from repro.serving import EngineRouter
+
+    router = EngineRouter([_engine(n_slots=2), _engine(n_slots=2)])
+    rs = [router.submit([1, 2, 3], max_gen=3) for _ in range(4)]
+    moved = router.kill_replica(0)
+    assert moved == 2                       # replica 0's share moved over
+    router.run_until_idle()
+    for r in rs:
+        assert r.done.is_set() and r.error is None
+        assert len(r.tokens) == 3
+    st = router.stats()
+    assert st["alive"] == 1 and st["failovers"] == 1
+    assert st["finished_requests"] == 4
+    assert st["per_replica"][1]["resubmitted_requests"] == 2
+    assert router.kill_replica(0) == 0      # idempotent
+
+
+def test_router_detects_dead_driver_and_fails_over():
+    """A replica whose driver died (engine._failure set) is failed over
+    automatically on the next dispatch — its queued work moves."""
+    from repro.serving import EngineRouter
+
+    router = EngineRouter([_engine(n_slots=2), _engine(n_slots=2)])
+    r0 = router.submit([1, 2, 3], max_gen=2)
+    router.engines[0]._failure = RuntimeError("driver died")
+    r1 = router.submit([4, 5], max_gen=2)   # triggers alive() detection
+    assert router.stats()["alive"] == 1 and router.failovers == 1
+    router.run_until_idle()
+    assert r0.error is None and len(r0.tokens) == 2
+    assert r1.error is None and len(r1.tokens) == 2
+
+
+def test_router_no_survivors_fails_requests():
+    from repro.serving import EngineRouter, RouterError
+
+    router = EngineRouter([_engine(n_slots=2)])
+    r = router.submit([1, 2, 3], max_gen=4)
+    router.kill_replica(0)
+    with pytest.raises(RouterError, match="no survivors"):
+        r.result(timeout=5)
+    with pytest.raises(RouterError, match="no live replicas"):
+        router.submit([1], max_gen=1)
